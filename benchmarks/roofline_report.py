@@ -1,0 +1,50 @@
+"""Roofline report: aggregates the dry-run JSONs into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun") -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        if path.endswith("summary.json"):
+            continue
+        cells.append(json.load(open(path)))
+    return cells
+
+
+def report(dryrun_dir: str = "experiments/dryrun", mesh: str = "16x16") -> List[tuple]:
+    cells = [c for c in load_cells(dryrun_dir) if c.get("mesh") == mesh]
+    rows = []
+    print(f"\n--- Roofline table ({mesh}, TPU v5e: 197TF bf16 / 819GB/s HBM / 50GB/s ICI) ---")
+    print(f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>9s} "
+          f"{'dominant':>10s} {'useful':>7s} {'frac':>6s} {'fits16G':>8s}")
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        if c["status"] == "skipped":
+            print(f"{c['arch']:22s} {c['shape']:12s} {'—— skipped (documented): sub-quadratic rule ——':>40s}")
+            continue
+        if c["status"] != "ok":
+            print(f"{c['arch']:22s} {c['shape']:12s} FAILED")
+            continue
+        r = c["roofline"]
+        rows.append((f"{c['arch']}|{c['shape']}|{mesh}", 0.0, r["roofline_fraction"]))
+        print(f"{c['arch']:22s} {c['shape']:12s} {r['compute_s']:10.3g} {r['memory_s']:10.3g} "
+              f"{r['collective_s']:9.3g} {r['dominant']:>10s} {r['useful_flops_ratio']:7.2f} "
+              f"{r['roofline_fraction']:6.2f} {str(c.get('fits_hbm_16g')):>8s}")
+    return rows
+
+
+def pick_hillclimb_cells(dryrun_dir: str = "experiments/dryrun") -> dict:
+    """Worst roofline fraction, most collective-bound, most paper-representative."""
+    cells = [c for c in load_cells(dryrun_dir)
+             if c.get("mesh") == "16x16" and c.get("status") == "ok"]
+    worst = min(cells, key=lambda c: c["roofline"]["roofline_fraction"] or 1e9)
+    coll = max(cells, key=lambda c: c["roofline"]["collective_s"]
+               / max(c["roofline"]["step_time_lower_bound_s"], 1e-12))
+    return {
+        "worst_fraction": f"{worst['arch']}×{worst['shape']}",
+        "most_collective_bound": f"{coll['arch']}×{coll['shape']}",
+    }

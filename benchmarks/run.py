@@ -1,0 +1,45 @@
+"""Benchmark harness — one function per paper table + fleet-scale and
+roofline benches.  Prints ``name,us_per_call,derived`` CSV at the end.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --fast     # skip RL training
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip policy training benches")
+    args = ap.parse_args()
+
+    rows = []
+
+    from benchmarks import roofline_report, sched_scale
+
+    if not args.fast:
+        from benchmarks import paper_tables
+
+        for fn in (paper_tables.table8, paper_tables.table9, paper_tables.table10,
+                   paper_tables.table11, paper_tables.table12):
+            name, us, derived = fn()
+            rows.append((f"paper_{fn.__name__}_{name}", us, derived))
+        (fname, us, derived), claims, _ = paper_tables.figure6()
+        rows.append((fname, us, derived))
+        rows.append(("claims_validated", 0.0,
+                     float(sum(claims.values())) / len(claims)))
+        name, us, derived = paper_tables.literal_ablation()
+        rows.append((name, us, derived))
+
+    rows += sched_scale.run_all()
+    rows += roofline_report.report(mesh="16x16")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Fleet-scale scheduler benchmarks (beyond-paper: 1000+ nodes).
+
+1. SDQN scoring throughput vs fleet size (the scheduler's hot loop) —
+   XLA path vs the fused Pallas kernel in interpret mode (CPU container;
+   on TPU the compiled kernel path is selected automatically).
+2. End-to-end placement throughput (pods/s) on a 1024-node cluster.
+3. On-device RL training throughput (Anakin-style, transitions/s).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dqn, env as kenv, schedulers, train_rl
+from repro.core.types import fleet_cluster, training_cluster
+
+
+def _time(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def scoring_throughput() -> List[Tuple[str, float, float]]:
+    rows = []
+    params = dqn.init_qnet(jax.random.PRNGKey(0))
+    score = jax.jit(lambda f: dqn.qvalues(params, f))
+    for n in (1024, 16384, 131072):
+        feats = jax.random.normal(jax.random.PRNGKey(1), (n, 6))
+        dt = _time(score, feats)
+        rows.append((f"sdqn_score_xla_n{n}", dt * 1e6, n / dt))
+    return rows
+
+
+def placement_throughput() -> List[Tuple[str, float, float]]:
+    cfg = fleet_cluster(1024)
+    qp = dqn.init_qnet(jax.random.PRNGKey(0))
+    sel = schedulers.make_sdqn_selector(qp, cfg)
+    n_pods = 200
+    ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, n_pods)[2])
+    dt = _time(ep, jax.random.PRNGKey(0), iters=3, warmup=1)
+    return [("sdqn_place_1024node_ep", dt * 1e6, n_pods / dt)]
+
+
+def training_throughput() -> List[Tuple[str, float, float]]:
+    tcfg = training_cluster()
+    rl = train_rl.RLConfig(variant="sdqn", episodes=50, n_envs=16, batch_size=256)
+    fn = jax.jit(lambda k: train_rl.train(k, tcfg, rl)[1]["loss"][-1])
+    dt = _time(fn, jax.random.PRNGKey(0), iters=2, warmup=1)
+    transitions = rl.episodes * rl.pods_per_episode * rl.n_envs
+    return [("sdqn_train_ondevice", dt * 1e6, transitions / dt)]
+
+
+def run_all() -> List[Tuple[str, float, float]]:
+    out = []
+    out += scoring_throughput()
+    out += placement_throughput()
+    out += training_throughput()
+    return out

@@ -1,0 +1,35 @@
+"""Quickstart: train SDQN on the paper cluster, schedule a pod burst, compare
+with the default kube-scheduler — the paper's core result in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import env as kenv, presets, schedulers, train_rl
+from repro.core.types import paper_cluster, training_cluster
+
+cfg = paper_cluster()          # 4 slave nodes, the paper's experimental cluster
+
+# 1. train the SDQN scheduler (DQN over Table-2 node features, Table-3 rewards)
+print("training SDQN (seed-selected on validation bursts)...")
+qparams, val = train_rl.train_and_select(
+    jax.random.PRNGKey(0), training_cluster(), cfg, presets.SDQN_PRESET, n_seeds=3
+)
+print(f"  best validation avg-CPU: {val:.2f}%")
+
+# 2. schedule a 50-pod compute-intensive burst with both schedulers
+for name, select in [
+    ("default kube-scheduler", schedulers.make_kube_selector(cfg)),
+    ("SDQN", schedulers.make_sdqn_selector(qparams, cfg)),
+]:
+    mets, dists = [], []
+    episode = jax.jit(lambda k: kenv.run_episode(k, cfg, select, 50))
+    for trial in range(3):
+        state, _, metric = episode(jax.random.PRNGKey(100 + trial))
+        mets.append(float(metric))
+        dists.append(np.asarray(state.exp_pods).tolist())
+    print(f"{name:24s} avg CPU = {np.mean(mets):5.2f}%   pod distributions: {dists}")
+
+print("\nSDQN places pods by learned Q-values over real-time node state —")
+print("the default scheduler only sees resource *requests* (paper §3.2).")

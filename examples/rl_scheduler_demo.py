@@ -1,0 +1,14 @@
+"""Full paper-reproduction demo: all five schedulers on the paper cluster,
+printed side-by-side against the paper's published numbers (Tables 8-12).
+
+    PYTHONPATH=src python examples/rl_scheduler_demo.py
+"""
+from benchmarks import paper_tables
+
+if __name__ == "__main__":
+    paper_tables.table8()
+    paper_tables.table9()
+    paper_tables.table10()
+    paper_tables.table11()
+    paper_tables.table12()
+    paper_tables.figure6()

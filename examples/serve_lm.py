@@ -1,0 +1,16 @@
+"""Serve a small LM with batched requests routed across replicas by SDQN —
+the paper's scheduler reused at the serving tier.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    serve_mod.main([
+        "--arch", "olmo-1b", "--smoke",
+        "--replicas", "4",
+        "--requests", "32",
+        "--wave-size", "8",
+        "--prompt-len", "32",
+        "--gen-tokens", "16",
+    ])

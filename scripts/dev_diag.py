@@ -1,0 +1,49 @@
+"""Diagnose one episode step-by-step: node profiles, Q spreads, placements, metric."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, dqn, env as kenv, rewards, schedulers, train_rl
+from repro.core.types import paper_cluster
+
+cfg = paper_cluster()
+key = jax.random.PRNGKey(0)
+
+rl = train_rl.RLConfig(variant="sdqn", episodes=80, n_envs=8)
+qp, m1 = jax.jit(lambda k: train_rl.train(k, cfg, rl))(key)
+rl_n = train_rl.RLConfig(variant="sdqn_n", episodes=80, n_envs=8)
+qpn, _ = jax.jit(lambda k: train_rl.train(k, cfg, rl_n))(key)
+
+for trial_key, name in [(jax.random.PRNGKey(100), "trial100"), (jax.random.PRNGKey(101), "trial101")]:
+    print(f"\n=== {name} ===")
+    st = kenv.reset(trial_key, cfg)
+    pod = kenv.default_pod(cfg)
+    print("base_cpu   :", np.round(np.asarray(st.base_cpu), 0))
+    print("requested  :", np.round(np.asarray(st.cpu_requested), 0))
+    print("uptime_h   :", np.round(np.asarray(st.uptime_hours), 1))
+
+    for sched_name, select in [
+        ("default", schedulers.make_kube_selector(cfg)),
+        ("sdqn", schedulers.make_sdqn_selector(qp, cfg)),
+        ("sdqn_n", schedulers.make_sdqn_selector(qpn, cfg)),
+    ]:
+        s = kenv.reset(trial_key, cfg)
+        traj = []
+        mets = []
+        for t in range(50):
+            k = jax.random.fold_in(trial_key, t)
+            if sched_name != "default":
+                ok = kenv.feasible(s, pod, cfg)
+                q = schedulers.score_afterstates(qp if sched_name == "sdqn" else qpn, s, pod, cfg)
+                if t in (0, 1, 5, 20, 49):
+                    print(f"  [{sched_name} t={t}] q={np.round(np.asarray(q),2)} ok={np.asarray(ok).astype(int)} cpu%={np.round(np.asarray(kenv.cpu_pct(s,cfg)),1)}")
+            a = int(select(k, s, pod))
+            s = kenv.place(s, a, pod, cfg)
+            s = kenv.tick(s, cfg, cfg.schedule_dt_s)
+            traj.append(a)
+            mets.append(float(kenv.average_cpu_utilization(s, cfg)))
+        for t in range(cfg.settle_steps):
+            s = kenv.tick(s, cfg, cfg.schedule_dt_s)
+            mets.append(float(kenv.average_cpu_utilization(s, cfg)))
+        dist = np.asarray(s.num_pods)
+        print(f"  {sched_name:8s} dist={dist} metric={np.mean(mets):.2f}% final_cpu%={np.round(np.asarray(kenv.cpu_pct(s,cfg)),1)}")

@@ -1,0 +1,35 @@
+"""Bisect dry-run temp memory: remat policy x microbatches x metrics."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch import shapes as shp, sharding, steps
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adam_init
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "olmo-1b"
+shape = SHAPES["train_4k"]
+
+for remat, micro in [("full", 256), ("full", 64), ("full", 16), ("dots", 64), ("none", 64)]:
+    cfg = dataclasses.replace(get_config(arch), remat=remat)
+    mesh = make_production_mesh()
+    with mesh:
+        params_shape = shp.params_specs(cfg)
+        p_named = sharding.to_named(sharding.param_specs(params_shape, cfg, mesh), mesh)
+        batch = shp.train_batch_specs(cfg, shape)
+        b_named = sharding.to_named(sharding.input_sharding(mesh, batch), mesh)
+        adam_cfg = steps.default_adam(cfg)
+        opt_shape = jax.eval_shape(lambda p: adam_init(p, adam_cfg), params_shape)
+        o_named = sharding.to_named(sharding.opt_state_specs(opt_shape, sharding.param_specs(params_shape, cfg, mesh), mesh), mesh)
+        nm = max(1, shape.global_batch // micro)
+        fn, _ = steps.make_train_step(cfg, adam_cfg, num_microbatches=nm, q_chunk=512)
+        jitted = jax.jit(fn, in_shardings=(p_named, o_named, b_named), donate_argnums=(0, 1))
+        compiled = jitted.lower(params_shape, opt_shape, batch).compile()
+        ma = compiled.memory_analysis()
+        print(f"remat={remat:5s} micro={micro:4d} temp={ma.temp_size_in_bytes/2**30:8.2f} GiB "
+              f"args={ma.argument_size_in_bytes/2**20:7.1f} MiB flops={compiled.cost_analysis()['flops']:.3g}")

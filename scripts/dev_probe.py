@@ -1,0 +1,55 @@
+"""Probe the trained Q-net response to each feature, and audit training targets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dqn, env as kenv, rewards, train_rl
+from repro.core.types import paper_cluster, training_cluster
+
+cfg = paper_cluster()
+train_cfg = training_cluster()
+key = jax.random.PRNGKey(0)
+
+rl = train_rl.RLConfig(variant="sdqn", episodes=500, n_envs=16, eps_end=0.05, batch_size=256)
+qp, m = jax.jit(lambda k: train_rl.train(k, train_cfg, rl))(key)
+print("loss tail:", np.asarray(m["loss"][-5:]).round(1))
+
+# Q vs cpu% sweep (other features fixed: mem 1%, podutil 10/110, healthy, uptime 50h, pods 10)
+cpus = np.arange(0, 101, 10)
+feats = np.stack([
+    cpus,
+    np.full_like(cpus, 1.0),
+    np.full_like(cpus, 9.0),
+    np.ones_like(cpus),
+    np.full_like(cpus, 50.0),
+    np.full_like(cpus, 10.0),
+], -1).astype(np.float32)
+q = dqn.qvalues(qp, kenv.normalize_features(jnp.asarray(feats)))
+print("\ncpu%  -> Q:")
+for c, qq in zip(cpus, np.asarray(q)):
+    # true immediate reward for this afterstate (ignoring distribution term)
+    r = float(rewards.node_points(jnp.asarray(feats[list(cpus).index(c)])))
+    print(f"  cpu={c:3d}  Q={qq:8.2f}  node_points={r:7.1f}")
+
+# Q vs num_pods sweep at fixed cpu 30%
+pods = np.arange(0, 41, 5)
+feats2 = np.stack([
+    np.full_like(pods, 30.0), np.full_like(pods, 1.0),
+    100.0 * pods / 110, np.ones_like(pods),
+    np.full_like(pods, 50.0), pods,
+], -1).astype(np.float32)
+q2 = dqn.qvalues(qp, kenv.normalize_features(jnp.asarray(feats2)))
+print("\nnum_pods -> Q (cpu fixed 30%):")
+for p, qq in zip(pods, np.asarray(q2)):
+    print(f"  pods={p:3d}  Q={qq:8.2f}")
+
+# audit a batch of actual training transitions
+st = kenv.reset(jax.random.PRNGKey(3), train_cfg)
+pod = kenv.default_pod(train_cfg)
+print("\nsample transition targets across actions:")
+after_all = kenv.hypothetical_place(st, pod, train_cfg)
+for a in range(4):
+    st2 = kenv.place(st, a, pod, train_cfg)
+    r = rewards.sdqn_reward(kenv.features(st2, train_cfg), a)
+    qq = dqn.qvalues(qp, kenv.normalize_features(after_all[a]))
+    print(f"  a={a} after_cpu={float(kenv.cpu_pct(st2,train_cfg)[a]):6.1f}% r={float(r):7.1f} Q={float(qq):7.2f}")

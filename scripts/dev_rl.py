@@ -1,0 +1,54 @@
+"""Dev scratch: train SDQN/SDQN-n quickly, compare all schedulers on the paper cluster."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, dqn, env as kenv, schedulers, train_rl
+from repro.core.types import paper_cluster, training_cluster
+
+cfg = paper_cluster()
+train_cfg = training_cluster()
+key = jax.random.PRNGKey(0)
+
+
+def evaluate(name, select, trials=5, n_pods=50):
+    dists, mets = [], []
+    for t in range(trials):
+        k = jax.random.PRNGKey(100 + t)
+        _, dist, met = jax.jit(
+            lambda kk: kenv.run_episode(kk, cfg, select, n_pods)
+        )(k)
+        dists.append([int(x) for x in dist])
+        mets.append(float(met))
+    avg = sum(mets) / len(mets)
+    print(f"{name:18s} avg_cpu={avg:6.2f}%  trials={[f'{m:.2f}' for m in mets]}")
+    for d, m in zip(dists, mets):
+        print(f"    dist={d} -> {m:.2f}%")
+    return avg
+
+
+t0 = time.time()
+rl = train_rl.RLConfig(variant="sdqn", episodes=1200, n_envs=16, eps_end=0.1, batch_size=256)
+qp_sdqn, m1 = jax.jit(lambda k: train_rl.train(k, train_cfg, rl))(key)
+print(f"SDQN trained in {time.time()-t0:.1f}s; last-ep avg_cpu={float(m1['avg_cpu'][-1]):.2f} loss={float(m1['loss'][-1]):.1f}")
+
+t0 = time.time()
+rl_n = train_rl.RLConfig(variant="sdqn_n", episodes=1200, n_envs=16, eps_end=0.1, batch_size=256)
+qp_sdqnn, m2 = jax.jit(lambda k: train_rl.train(k, train_cfg, rl_n))(key)
+print(f"SDQN-n trained in {time.time()-t0:.1f}s; last-ep avg_cpu={float(m2['avg_cpu'][-1]):.2f} loss={float(m2['loss'][-1]):.1f}")
+
+t0 = time.time()
+lstm_p = train_rl.train_supervised_scorer(key, train_cfg, baselines.init_lstm, baselines.lstm_score, episodes=30)
+tr_p = train_rl.train_supervised_scorer(key, train_cfg, baselines.init_transformer, baselines.transformer_score, episodes=30)
+print(f"baselines trained in {time.time()-t0:.1f}s")
+
+default_avg = evaluate("default", schedulers.make_kube_selector(cfg))
+sdqn_avg = evaluate("SDQN", schedulers.make_sdqn_selector(qp_sdqn, cfg))
+sdqnn_avg = evaluate("SDQN-n", schedulers.make_sdqn_selector(qp_sdqnn, cfg))
+lstm_avg = evaluate("LSTM", schedulers.make_neural_selector(lstm_p, baselines.lstm_score, cfg))
+tr_avg = evaluate("Transformer", schedulers.make_neural_selector(tr_p, baselines.transformer_score, cfg))
+
+print(f"\npaper:  default 30.87 | SDQN 27.21 (-11.9% rel) | SDQN-n 22.35 (-27.6% rel) | LSTM 30.53 | TR 30.15")
+print(f"ours:   default {default_avg:.2f} | SDQN {sdqn_avg:.2f} ({100*(sdqn_avg/default_avg-1):+.1f}% rel) | "
+      f"SDQN-n {sdqnn_avg:.2f} ({100*(sdqnn_avg/default_avg-1):+.1f}% rel) | LSTM {lstm_avg:.2f} | TR {tr_avg:.2f}")

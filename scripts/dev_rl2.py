@@ -1,0 +1,50 @@
+"""Seed-selected training comparison."""
+import time
+import jax
+from repro.core import baselines, env as kenv, schedulers, train_rl
+from repro.core.types import paper_cluster, training_cluster
+
+cfg = paper_cluster()
+tcfg = training_cluster()
+key = jax.random.PRNGKey(0)
+
+def evaluate(name, select, trials=5, n_pods=50):
+    mets, dists = [], []
+    ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, select, n_pods))
+    for t in range(trials):
+        st, dist, met = ep(jax.random.PRNGKey(100 + t))
+        mets.append(float(met))
+        dists.append([int(x) for x in st.exp_pods])
+    avg = sum(mets) / len(mets)
+    print(f"{name:12s} avg={avg:6.2f}%  trials={[f'{m:.1f}' for m in mets]} dists={dists}")
+    return avg
+
+t0=time.time()
+rl = train_rl.RLConfig(variant="sdqn", episodes=500, n_envs=16, eps_end=0.05, batch_size=256, efficiency_weight=5.0)
+qp, vm = train_rl.train_and_select(key, tcfg, cfg, rl, n_seeds=6)
+print(f"SDQN selected val={vm:.2f} ({time.time()-t0:.0f}s)")
+t0=time.time()
+rln = train_rl.RLConfig(variant="sdqn_n", episodes=500, n_envs=16, eps_end=0.05, batch_size=256)
+qpn, vmn = train_rl.train_and_select(key, tcfg, cfg, rln, n_seeds=6)
+print(f"SDQN-n selected val={vmn:.2f} ({time.time()-t0:.0f}s)")
+
+def select_scorer(init_fn, score_fn, n_seeds=4):
+    best, bestm = None, 1e9
+    for sd in range(n_seeds):
+        p = train_rl.train_supervised_scorer(jax.random.fold_in(key, 70+sd), tcfg, init_fn, score_fn, episodes=30)
+        sel = schedulers.make_neural_selector(p, score_fn, cfg)
+        ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, 50)[2])
+        m = float(sum(ep(jax.random.PRNGKey(5000+t)) for t in range(6)) / 6)
+        if m < bestm: best, bestm = p, m
+    return best
+
+lstm_p = select_scorer(baselines.init_lstm, baselines.lstm_score)
+tr_p = select_scorer(baselines.init_transformer, baselines.transformer_score)
+
+d = evaluate("default", schedulers.make_kube_selector(cfg))
+s1 = evaluate("SDQN", schedulers.make_sdqn_selector(qp, cfg))
+s2 = evaluate("SDQN-n", schedulers.make_sdqn_selector(qpn, cfg))
+l = evaluate("LSTM", schedulers.make_neural_selector(lstm_p, baselines.lstm_score, cfg))
+tr = evaluate("Transformer", schedulers.make_neural_selector(tr_p, baselines.transformer_score, cfg))
+print(f"\npaper: default 30.87 | SDQN -11.9% | SDQN-n -27.6% | LSTM -1.1% | TR -2.3%")
+print(f"ours:  default {d:.2f} | SDQN {100*(s1/d-1):+.1f}% | SDQN-n {100*(s2/d-1):+.1f}% | LSTM {100*(l/d-1):+.1f}% | TR {100*(tr/d-1):+.1f}%")

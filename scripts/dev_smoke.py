@@ -1,0 +1,40 @@
+"""Dev scratch: fast check that every smoke arch runs fwd/train/prefill/decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.models import model
+
+def run(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    b, s = 2, 16
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "targets": tokens}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.ones((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.num_vision_tokens:
+        batch["patch_embeds"] = jnp.ones((b, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16)
+
+    loss, metrics = jax.jit(lambda p, bt: model.loss_and_metrics(p, cfg, bt, q_chunk=8, mamba_chunk=8))(params, batch)
+    grads = jax.jit(jax.grad(lambda p, bt: model.loss_and_metrics(p, cfg, bt, q_chunk=8, mamba_chunk=8)[0]))(params, batch)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)))
+
+    # prefill + decode
+    logits, cache = jax.jit(lambda p, bt: model.prefill(p, cfg, bt["tokens"], bt, q_chunk=8, mamba_chunk=8))(params, batch)
+    cache2 = model.init_cache(cfg, b, s + 4)
+    lg2, cache2 = jax.jit(lambda p, t, c: model.decode_step(p, cfg, t, c, jnp.int32(s)))(params, tokens[:, :1], cache2)
+    ok = bool(jnp.isfinite(loss)) and bool(jnp.isfinite(gnorm)) and bool(jnp.all(jnp.isfinite(logits))) and bool(jnp.all(jnp.isfinite(lg2)))
+    print(f"{arch:24s} params={n:9d} loss={float(loss):7.3f} gnorm={float(gnorm):9.3f} "
+          f"prefill={logits.shape} decode={lg2.shape} finite={ok}")
+    assert ok, arch
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or list_archs()
+    for a in archs:
+        run(a)
+    print("ALL OK")

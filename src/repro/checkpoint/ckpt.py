@@ -1,0 +1,180 @@
+"""Sharded, mesh-agnostic checkpointing (no orbax offline — built from
+scratch).
+
+Format: one directory per step containing
+  * ``manifest.json`` — tree structure, per-leaf shapes/dtypes, step metadata,
+    and a content checksum per shard file;
+  * ``shard_<host>.npz`` — each host saves the leaves it owns (addressable
+    shards), keyed by flattened tree path.
+
+Restore is *elastic*: the manifest stores only the logical layout, so arrays
+are rebuilt and re-sharded onto whatever mesh is alive (fault-tolerant
+restart onto fewer/more hosts).  Saving is double-buffered on a background
+thread (``CheckpointManager``) with a keep-N retention policy.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    """Write one checkpoint synchronously. Returns the step directory."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    flat = _flatten(tree)
+    host = jax.process_index()
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    # npz cannot round-trip ml_dtypes (bf16 etc.) — store them as uint8 views;
+    # the manifest records the true dtype/shape for restore
+    savable = {
+        k: (v.view(np.uint8) if v.dtype.type.__module__.startswith("ml_dtypes") else v)
+        for k, v in arrays.items()
+    }
+    shard_path = os.path.join(tmp_dir, f"shard_{host:05d}.npz")
+    np.savez(shard_path, **savable)
+    digest = hashlib.sha256(open(shard_path, "rb").read()).hexdigest()
+
+    manifest = {
+        "step": step,
+        "format": 1,
+        "extra": extra or {},
+        "hosts": jax.process_count(),
+        "leaves": {
+            k: {"shape": list(np.shape(v)), "dtype": str(np.asarray(v).dtype)}
+            for k, v in arrays.items()
+        },
+        "checksums": {f"shard_{host:05d}.npz": digest},
+    }
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.replace(tmp_dir, step_dir)  # atomic publish
+    return step_dir
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
+            shardings: Any = None, validate: bool = True) -> Any:
+    """Rebuild a pytree from a checkpoint, re-sharding onto `shardings`.
+
+    tree_like: a pytree (arrays or ShapeDtypeStructs) giving the structure.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(step_dir, "manifest.json")))
+
+    data: Dict[str, np.ndarray] = {}
+    for fname in sorted(os.listdir(step_dir)):
+        if not fname.startswith("shard_"):
+            continue
+        path = os.path.join(step_dir, fname)
+        if validate and fname in manifest.get("checksums", {}):
+            digest = hashlib.sha256(open(path, "rb").read()).hexdigest()
+            if digest != manifest["checksums"][fname]:
+                raise IOError(f"checksum mismatch in {path}")
+        with np.load(path) as npz:
+            for k in npz.files:
+                data[k] = npz[k]
+
+    flat_like = _flatten(tree_like)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    out_flat = {}
+    for key, like in flat_like.items():
+        if key not in data:
+            raise KeyError(f"leaf {key!r} missing from checkpoint step {step}")
+        raw = data[key]
+        want = np.dtype(like.dtype)
+        if raw.dtype == np.uint8 and want.type.__module__.startswith("ml_dtypes"):
+            raw = raw.view(want).reshape(manifest["leaves"][key]["shape"])
+        arr = jnp.asarray(raw, dtype=like.dtype)
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {like.shape}")
+        if key in flat_shard and flat_shard[key] is not None:
+            arr = jax.device_put(arr, flat_shard[key])
+        out_flat[key] = arr
+
+    treedef = jax.tree_util.tree_structure(tree_like)
+    leaves_in_order = [out_flat[k] for k in _flatten(tree_like)]
+    return jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+
+
+class CheckpointManager:
+    """Async double-buffered writer with keep-N retention."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        # snapshot to host memory on the caller thread (consistent view)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.ckpt_dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    shape_applicable,
+)

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: SDQN / SDQN-n reinforcement-learning
+schedulers for compute-intensive pods, plus the paper's baselines
+(default kube-scheduler, LSTM, Transformer) and their training loops."""
+from repro.core import baselines, dqn, env, replay, rewards, schedulers, train_rl  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    ClusterState,
+    EnvConfig,
+    PodSpec,
+    fleet_cluster,
+    paper_cluster,
+    training_cluster,
+)

@@ -1,0 +1,156 @@
+"""Comparison schedulers from the paper.
+
+1. The default kube-scheduler (filter + score).  Scoring follows the two
+   classic kube-scheduler priorities the paper's §3.2 describes:
+   LeastRequestedPriority + BalancedResourceAllocation, with random
+   tie-breaking among top scorers (paper §3.2 "selected at random").
+2. The LSTM-based scorer (Table 6): (1, 1, 6) input, single LSTM layer with
+   32 hidden units, FC to one score, MSE vs target rewards, Adam(1e-3).
+3. The Transformer-based scorer (Table 7): 6→32 projection (d_model=32),
+   one encoder layer with 4 heads, final-position FC to one score.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import env as kenv
+from repro.core.types import ClusterState, EnvConfig, PodSpec
+from repro.optim import AdamConfig, adam_init, adam_update
+
+# ---------------------------------------------------------------------------
+# 1. default kube-scheduler
+# ---------------------------------------------------------------------------
+
+
+def kube_scores(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
+    """Scoring phase on *requested* resources (what kube-scheduler sees)."""
+    cpu_free = (state.cpu_capacity - state.cpu_requested - pod.cpu_request) / state.cpu_capacity
+    mem_free = (state.mem_capacity - state.mem_requested - pod.mem_request) / state.mem_capacity
+    least_requested = 10.0 * (cpu_free + mem_free) / 2.0
+    balanced = 10.0 * (1.0 - jnp.abs(cpu_free - mem_free))
+    return least_requested + balanced
+
+
+def kube_select(key: jax.Array, state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
+    ok = kenv.feasible(state, pod, cfg)
+    scores = jnp.where(ok, kube_scores(state, pod, cfg), -jnp.inf)
+    top = scores >= jnp.max(scores) - 1e-6
+    # random tie-break among top scorers
+    noise = jax.random.uniform(key, scores.shape)
+    return jnp.argmax(jnp.where(top, noise, -jnp.inf)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 2. LSTM scorer (Table 6)
+# ---------------------------------------------------------------------------
+
+LSTM_HIDDEN = 32
+
+
+def init_lstm(key: jax.Array, hidden: int = LSTM_HIDDEN) -> dict:
+    k = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(hidden)
+    return {
+        "wx": jax.random.uniform(k[0], (6, 4 * hidden), minval=-scale, maxval=scale),
+        "wh": jax.random.uniform(k[1], (hidden, 4 * hidden), minval=-scale, maxval=scale),
+        "b": jnp.zeros((4 * hidden,)),
+        "w_out": jax.random.normal(k[2], (hidden, 1)) * scale,
+        "b_out": jnp.zeros((1,)),
+    }
+
+
+def lstm_score(params: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """feats: (..., 6) — one time step, shaped (1, 1, 6) in the paper."""
+    hidden = params["wh"].shape[0]
+    h0 = jnp.zeros(feats.shape[:-1] + (hidden,), feats.dtype)
+    c0 = h0
+    gates = feats @ params["wx"] + h0 @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c0 + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h @ params["w_out"] + params["b_out"])[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# 3. Transformer scorer (Table 7)
+# ---------------------------------------------------------------------------
+
+TR_DMODEL = 32
+TR_HEADS = 4
+
+
+def init_transformer(key: jax.Array) -> dict:
+    k = jax.random.split(key, 8)
+    d = TR_DMODEL
+
+    def lin(kk, shape):
+        return jax.random.normal(kk, shape) / math.sqrt(shape[0])
+
+    return {
+        "w_in": lin(k[0], (6, d)),
+        "b_in": jnp.zeros((d,)),
+        "wq": lin(k[1], (d, d)),
+        "wk": lin(k[2], (d, d)),
+        "wv": lin(k[3], (d, d)),
+        "wo": lin(k[4], (d, d)),
+        "ln1_s": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "ln2_s": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        "ff1": lin(k[5], (d, 4 * d)),
+        "ff1_b": jnp.zeros((4 * d,)),
+        "ff2": lin(k[6], (4 * d, d)),
+        "ff2_b": jnp.zeros((d,)),
+        "w_out": lin(k[7], (d, 1)),
+        "b_out": jnp.zeros((1,)),
+    }
+
+
+def _ln(x, s, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * s + b
+
+
+def transformer_score(params: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """Single-time-step encoder (seq len 1, 4 heads, 1 layer)."""
+    d, h = TR_DMODEL, TR_HEADS
+    x = feats @ params["w_in"] + params["b_in"]  # (..., d)
+    # self-attention over a length-1 sequence: softmax over one key = identity
+    q = x @ params["wq"]
+    k_ = x @ params["wk"]
+    v = x @ params["wv"]
+    hd = d // h
+    # scores (.., h, 1, 1) -> softmax == 1 -> attends to itself
+    attn_out = v  # exact for seq_len == 1
+    x = _ln(x + attn_out @ params["wo"], params["ln1_s"], params["ln1_b"])
+    ff = jax.nn.relu(x @ params["ff1"] + params["ff1_b"]) @ params["ff2"] + params["ff2_b"]
+    x = _ln(x + ff, params["ln2_s"], params["ln2_b"])
+    del q, k_, hd
+    return (x @ params["w_out"] + params["b_out"])[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# shared supervised training (Tables 6/7: MSE vs target rewards, Adam 1e-3)
+# ---------------------------------------------------------------------------
+
+ADAM = AdamConfig(lr=1e-3, master_dtype="")
+
+
+def make_regression_trainer(score_fn):
+    def loss_fn(params, feats, targets):
+        return jnp.mean(jnp.square(score_fn(params, feats) - targets))
+
+    def step(params, opt_state, feats, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(params, feats, targets)
+        params, opt_state, _ = adam_update(params, grads, opt_state, ADAM)
+        return params, opt_state, loss
+
+    return step
+
+
+def init_regression_state(init_fn, key) -> Tuple[dict, dict]:
+    params = init_fn(key)
+    return params, adam_init(params, ADAM)

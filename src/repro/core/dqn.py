@@ -1,0 +1,63 @@
+"""The SDQN value network — paper Table 4, exactly.
+
+Input: 6 state features.  Hidden: one fully-connected 6→32 layer, ReLU.
+Output: 32→1 estimated Q-value.  Loss: MSE against target rewards.
+Optimizer: Adam, lr = 0.001.
+
+The network is evaluated on *afterstates* (the node's Table-2 features as if
+the pod were placed there), so Q(s, a) = net(afterstate_features(s, a)).
+At fleet scale the batched scoring pass is the scheduler's hot loop — the
+Pallas kernel ``repro.kernels.sdqn_score`` fuses it (see kernels/).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamConfig, adam_init, adam_update
+
+HIDDEN = 32
+N_FEATURES = 6
+
+
+def init_qnet(key: jax.Array, hidden: int = HIDDEN) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (N_FEATURES, hidden), jnp.float32) * (2.0 / N_FEATURES) ** 0.5,
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, 1), jnp.float32) * (1.0 / hidden) ** 0.5,
+        "b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def qvalues(params: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """feats: (..., 6) normalized features -> Q: (...)."""
+    h = jax.nn.relu(feats @ params["w1"] + params["b1"])
+    return (h @ params["w2"] + params["b2"])[..., 0]
+
+
+def mse_loss(params: dict, feats: jnp.ndarray, targets: jnp.ndarray,
+             weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    q = qvalues(params, feats)
+    err = jnp.square(q - targets)
+    if weights is not None:
+        return jnp.sum(err * weights) / jnp.maximum(jnp.sum(weights), 1e-9)
+    return jnp.mean(err)
+
+
+ADAM = AdamConfig(lr=1e-3, master_dtype="")  # paper Table 4
+
+
+def init_train_state(key: jax.Array) -> Tuple[dict, dict]:
+    params = init_qnet(key)
+    return params, adam_init(params, ADAM)
+
+
+def train_step(params: dict, opt_state: dict, feats: jnp.ndarray,
+               targets: jnp.ndarray, weights: Optional[jnp.ndarray] = None):
+    """One forward + MSE backprop + Adam update (paper Table 4 training loop)."""
+    loss, grads = jax.value_and_grad(mse_loss)(params, feats, targets, weights)
+    params, opt_state, stats = adam_update(params, grads, opt_state, ADAM)
+    return params, opt_state, loss, stats

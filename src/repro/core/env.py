@@ -1,0 +1,276 @@
+"""Vectorized, jittable Kubernetes-cluster environment.
+
+Reproduces the paper's experimental substrate (§4.3, §5): a cluster of slave
+nodes receiving batches of compute-intensive no-op pods.  Everything is pure
+JAX on static shapes so episodes can be ``lax.scan``-ed and whole populations
+of clusters ``vmap``-ed / ``shard_map``-ed for fleet-scale policy training.
+
+CPU accounting per node (millicores):
+
+    used = base_cpu                               (pre-existing load)
+         + active * node_active_overhead          (kubelet/runtime/monitoring)
+         + pods_cpu                               (pod compute demand)
+         + startup_cpu                            (decaying pull/start transients)
+         + contention(used/capacity)              (super-linear above the knee)
+
+Image pulls are cold only for the first experiment pod on a node
+(`image_cached`), matching the paper's §4.3.2 image-caching/shared-I/O
+explanation for why consolidation saves CPU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ClusterState, EnvConfig, PodSpec
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+
+def _profile(key, profile: tuple, jitter: float, n: int) -> jnp.ndarray:
+    """Tile `profile` to n entries, permute, jitter — stable totals, varied layout."""
+    kp, kj = jax.random.split(key)
+    reps = -(-n // len(profile))  # ceil
+    vals = jnp.tile(jnp.asarray(profile, jnp.float32), reps)[:n]
+    vals = jax.random.permutation(kp, vals)
+    return vals + jax.random.uniform(kj, (n,), minval=-jitter, maxval=jitter)
+
+
+def reset(key: jax.Array, cfg: EnvConfig) -> ClusterState:
+    n = cfg.n_nodes
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    base = jnp.maximum(_profile(k1, cfg.base_cpu_profile, cfg.base_cpu_jitter, n), 0.0)
+    uptime = jax.random.uniform(
+        k2, (n,), minval=cfg.init_uptime_range_h[0], maxval=cfg.init_uptime_range_h[1]
+    )
+    healthy = jax.random.uniform(k3, (n,)) >= cfg.unhealthy_prob
+    # pre-existing *requests* (control-plane bookings by other tenants) are
+    # permuted independently of pre-existing *usage* — see EnvConfig docstring.
+    requested0 = cfg.cpu_capacity * jnp.clip(
+        _profile(k4, cfg.requested_frac_profile, cfg.requested_frac_jitter, n), 0.0, 0.95
+    )
+    z = jnp.zeros((n,), jnp.float32)
+
+    # bookings come from tenant pods: a node with X millicores requested is
+    # hosting ~X/pod_request pods of other tenants (visible to the Table-2
+    # num_pods / pod-utilization features; their CPU usage is part of base).
+    tenant_pods = (requested0 / cfg.pod_cpu_request).astype(jnp.int32)
+
+    exp_pods0 = jnp.zeros((n,), jnp.int32)
+    cached0 = jnp.zeros((n,), bool)
+    startup0 = z
+    if cfg.randomize_workload:
+        # training-only domain randomization: nodes start mid-flight so the
+        # Q-net sees (features -> reward) decorrelated from episode time.
+        kr1, kr2, kr3, kr4 = jax.random.split(jax.random.fold_in(key, 7), 4)
+        pods = jax.random.randint(kr1, (n,), 0, cfg.randomize_max_pods + 1)
+        empty = jax.random.uniform(kr2, (n,)) < cfg.randomize_empty_prob
+        exp_pods0 = jnp.where(empty, 0, pods).astype(jnp.int32)
+        cached0 = (exp_pods0 > 0) | (jax.random.uniform(kr3, (n,)) < cfg.randomize_cached_prob)
+        startup0 = jax.random.uniform(kr4, (n,), maxval=0.3 * cfg.image_pull_cost)
+
+    fexp = exp_pods0.astype(jnp.float32)
+    return ClusterState(
+        cpu_capacity=jnp.full((n,), cfg.cpu_capacity),
+        mem_capacity=jnp.full((n,), cfg.mem_capacity),
+        max_pods=jnp.full((n,), cfg.max_pods, jnp.int32),
+        healthy=healthy,
+        uptime_hours=uptime,
+        num_pods=tenant_pods + exp_pods0,
+        exp_pods=exp_pods0,
+        cpu_requested=jnp.minimum(requested0 + fexp * cfg.pod_cpu_request,
+                                  0.98 * cfg.cpu_capacity),
+        mem_requested=fexp * cfg.pod_mem_request,
+        pods_cpu=fexp * cfg.pod_cpu_demand,
+        mem_used=fexp * cfg.pod_mem_demand,
+        base_cpu=base,
+        startup_cpu=startup0,
+        image_cached=cached0,
+        time_s=jnp.float32(0.0),
+    )
+
+
+def default_pod(cfg: EnvConfig) -> PodSpec:
+    return PodSpec(
+        cpu_request=jnp.float32(cfg.pod_cpu_request),
+        cpu_demand=jnp.float32(cfg.pod_cpu_demand),
+        mem_request=jnp.float32(cfg.pod_mem_request),
+        mem_demand=jnp.float32(cfg.pod_mem_demand),
+    )
+
+
+# ---------------------------------------------------------------------------
+# observation (Table 2 features)
+# ---------------------------------------------------------------------------
+
+
+def cpu_used(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
+    """Actual per-node CPU usage in millicores, incl. contention inflation.
+
+    Three super-linearities (all invisible to request-based scoring):
+      * contention — CFS pressure once utilization passes the knee;
+      * crowding — context-switch/cgroup cost once a node hosts many pods;
+      * both stack on the base + overhead + pod-demand + startup transients.
+    """
+    active = state.exp_pods > 0
+    crowd = jnp.maximum(state.num_pods.astype(jnp.float32) - cfg.crowd_knee, 0.0)
+    raw = (
+        state.base_cpu
+        + jnp.where(active, cfg.node_active_overhead, 0.0)
+        + state.pods_cpu
+        + state.startup_cpu
+        + cfg.crowd_coeff * crowd * crowd
+    )
+    util = raw / state.cpu_capacity
+    over = jnp.maximum(util - cfg.contention_knee, 0.0)
+    contention = cfg.contention_coeff * over * over * state.cpu_capacity
+    return jnp.minimum(raw + contention, state.cpu_capacity)
+
+
+def cpu_pct(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
+    return 100.0 * cpu_used(state, cfg) / state.cpu_capacity
+
+
+def features(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
+    """The six Table-2 inputs, one row per node: (N, 6) float32."""
+    return jnp.stack(
+        [
+            cpu_pct(state, cfg),
+            100.0 * state.mem_used / state.mem_capacity,
+            100.0 * state.num_pods / state.max_pods,   # utilization: ALL pods
+            state.healthy.astype(jnp.float32),
+            state.uptime_hours,
+            state.exp_pods.astype(jnp.float32),        # count: OUR workload's pods
+        ],
+        axis=-1,
+    )
+
+
+FEATURE_SCALE = jnp.array([100.0, 100.0, 100.0, 1.0, 24.0, 32.0], jnp.float32)
+
+
+def normalize_features(feats: jnp.ndarray) -> jnp.ndarray:
+    """Scale raw Table-2 features to O(1) for the neural scorers."""
+    return feats / FEATURE_SCALE
+
+
+# ---------------------------------------------------------------------------
+# scheduling predicates (k8s filtering phase)
+# ---------------------------------------------------------------------------
+
+
+def feasible(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
+    """k8s predicates: Ready, CPU/mem requests fit, below max-pods. (N,) bool."""
+    return (
+        state.healthy
+        & (state.cpu_requested + pod.cpu_request <= state.cpu_capacity)
+        & (state.mem_requested + pod.mem_request <= state.mem_capacity)
+        & (state.num_pods < state.max_pods)
+    )
+
+
+# ---------------------------------------------------------------------------
+# transitions
+# ---------------------------------------------------------------------------
+
+
+def place(state: ClusterState, action: jnp.ndarray, pod: PodSpec, cfg: EnvConfig) -> ClusterState:
+    """Bind one pod to node `action` (int32 scalar).
+
+    Cold image pulls contend for registry/network bandwidth: each pull already
+    in flight (startup transient still large) inflates a new pull's cost by
+    ``pull_concurrency_coeff`` — spreading a burst of pods across many cold
+    nodes at once (what the request-blind default scheduler does) is
+    super-additively expensive, while warm reuse is cheap (paper §4.3.2).
+    """
+    onehot = jax.nn.one_hot(action, state.n_nodes, dtype=jnp.float32)
+    onehot_i = onehot.astype(jnp.int32)
+    cold = jnp.logical_not(state.image_cached)[action]
+    in_flight = jnp.sum(state.startup_cpu > 0.25 * cfg.image_pull_cost).astype(jnp.float32)
+    pull_cost = cfg.image_pull_cost * (1.0 + cfg.pull_concurrency_coeff * in_flight)
+    start_cost = jnp.where(cold, pull_cost, cfg.warm_start_cost)
+    return state._replace(
+        num_pods=state.num_pods + onehot_i,
+        exp_pods=state.exp_pods + onehot_i,
+        cpu_requested=state.cpu_requested + onehot * pod.cpu_request,
+        mem_requested=state.mem_requested + onehot * pod.mem_request,
+        pods_cpu=state.pods_cpu + onehot * pod.cpu_demand,
+        mem_used=state.mem_used + onehot * pod.mem_demand,
+        startup_cpu=state.startup_cpu + onehot * start_cost,
+        image_cached=state.image_cached | (onehot_i > 0),
+    )
+
+
+def hypothetical_place(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
+    """Afterstate features for *every* candidate node: (N, 6).
+
+    Row i = Table-2 features of node i as if the pod were placed there.
+    This is the SDQN scoring input (Q is evaluated on afterstates).
+    """
+    n = state.n_nodes
+
+    def one(i):
+        return features(place(state, i, pod, cfg), cfg)[i]
+
+    return jax.vmap(one)(jnp.arange(n))
+
+
+def tick(state: ClusterState, cfg: EnvConfig, dt_s: float) -> ClusterState:
+    """Advance wall-clock: decay startup transients, accrue uptime."""
+    return state._replace(
+        startup_cpu=state.startup_cpu * cfg.startup_decay,
+        uptime_hours=state.uptime_hours + dt_s / 3600.0,
+        time_s=state.time_s + dt_s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the paper's evaluation metric (§4.3.2)
+# ---------------------------------------------------------------------------
+
+
+def average_cpu_utilization(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
+    """Cluster-wide average CPU% per node (idle nodes included)."""
+    return jnp.mean(cpu_pct(state, cfg))
+
+
+def run_episode(
+    key: jax.Array,
+    cfg: EnvConfig,
+    select_action,  # (key, state, pod) -> int32 node index
+    n_pods: int,
+) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray]:
+    """Schedule `n_pods` arrivals with `select_action`, then settle.
+
+    Returns (final_state, pod_distribution (N,), metric = time-averaged
+    cluster-average CPU% over the measurement window).
+    """
+    state = reset(key, cfg)
+    pod = default_pod(cfg)
+
+    def sched_step(carry, k):
+        st, acc, cnt = carry
+        a = select_action(k, st, pod)
+        st = place(st, a, pod, cfg)
+        st = tick(st, cfg, cfg.schedule_dt_s)
+        m = average_cpu_utilization(st, cfg)
+        return (st, acc + m, cnt + 1.0), a
+
+    keys = jax.random.split(key, n_pods)
+    (state, acc, cnt), actions = jax.lax.scan(sched_step, (state, 0.0, 0.0), keys)
+
+    def settle_step(carry, _):
+        st, acc, cnt = carry
+        st = tick(st, cfg, cfg.schedule_dt_s)
+        m = average_cpu_utilization(st, cfg)
+        return (st, acc + m, cnt + 1.0), None
+
+    (state, acc, cnt), _ = jax.lax.scan(
+        settle_step, (state, acc, cnt), None, length=cfg.settle_steps
+    )
+    distribution = state.num_pods
+    return state, distribution, acc / cnt

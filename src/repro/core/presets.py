@@ -1,0 +1,50 @@
+"""Canonical training presets — the configurations that reproduce the
+paper's Tables 8-12 (see EXPERIMENTS.md §Paper-reproduction).
+
+Calibration summary (5 trials on the paper cluster, seeds 100-104):
+    default scheduler   30.42%   (paper: 30.87%)
+    SDQN                -9.2% relative   (paper: -11.9%, claim "~10%")
+    SDQN-n              -23.0% relative  (paper: -27.6%, claim ">20%")
+    LSTM / Transformer  no significant advantage (paper: same finding)
+"""
+from __future__ import annotations
+
+from repro.core.train_rl import RLConfig
+
+# SDQN keeps a lower efficiency weight: its Table-3 distribution term
+# (+5/node) must stay competitive, which yields the paper's spread-but-
+# balanced distributions (13/13/21/3-style) instead of full consolidation.
+SDQN_PRESET = RLConfig(
+    variant="sdqn",
+    episodes=500,
+    n_envs=16,
+    eps_end=0.05,
+    batch_size=256,
+    efficiency_weight=5.0,
+)
+
+# SDQN-n: the Table-5 top-2 consolidation term + full efficiency shaping
+# produces the paper's 25/25/0/0-style two-node packing.
+SDQN_N_PRESET = RLConfig(
+    variant="sdqn_n",
+    episodes=1000,
+    n_envs=16,
+    eps_end=0.05,
+    batch_size=256,
+    efficiency_weight=10.0,
+)
+
+# Literal Table-4 ablation: bandit targets (no bootstrap), unshaped rewards.
+SDQN_LITERAL_PRESET = RLConfig(
+    variant="sdqn",
+    episodes=500,
+    n_envs=16,
+    eps_end=0.05,
+    batch_size=256,
+    bootstrap=False,
+    efficiency_weight=0.0,
+)
+
+N_SELECTION_SEEDS = 10      # policies trained per variant; best-on-validation deployed
+N_SUPERVISED_SEEDS = 4
+SUPERVISED_EPISODES = 30

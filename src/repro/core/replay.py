@@ -1,0 +1,46 @@
+"""On-device circular replay buffer (static shapes, scan-friendly)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Replay(NamedTuple):
+    feats: jnp.ndarray     # (cap, 6)
+    targets: jnp.ndarray   # (cap,)
+    ptr: jnp.ndarray       # () int32
+    size: jnp.ndarray      # () int32
+
+
+def replay_init(capacity: int, n_features: int = 6) -> Replay:
+    return Replay(
+        feats=jnp.zeros((capacity, n_features), jnp.float32),
+        targets=jnp.zeros((capacity,), jnp.float32),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def replay_add(buf: Replay, feats: jnp.ndarray, targets: jnp.ndarray) -> Replay:
+    """feats: (B, 6); targets: (B,)."""
+    cap = buf.feats.shape[0]
+    b = feats.shape[0]
+    idx = (buf.ptr + jnp.arange(b, dtype=jnp.int32)) % cap
+    return Replay(
+        feats=buf.feats.at[idx].set(feats),
+        targets=buf.targets.at[idx].set(targets),
+        ptr=(buf.ptr + b) % cap,
+        size=jnp.minimum(buf.size + b, cap),
+    )
+
+
+def replay_sample(
+    buf: Replay, key: jax.Array, batch: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Uniform sample with replacement; weights mask out the empty-buffer case."""
+    cap = buf.feats.shape[0]
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
+    valid = (jnp.arange(batch) < buf.size).astype(jnp.float32) * (buf.size > 0)
+    return buf.feats[idx % cap], buf.targets[idx % cap], valid

@@ -1,0 +1,73 @@
+"""Scheduler policies: SDQN, SDQN-n, and the neural baselines, as
+``(key, state, pod) -> node`` selectors compatible with ``env.run_episode``.
+
+All policies apply the k8s *filtering* phase first (paper §3.2) and only
+score feasible nodes; SDQN/SDQN-n score afterstates with the DQN.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dqn, env as kenv
+from repro.core.types import ClusterState, EnvConfig, PodSpec
+
+NEG_INF = -jnp.inf
+
+
+def masked_argmax(key: jax.Array, scores: jnp.ndarray, ok: jnp.ndarray,
+                  epsilon: jnp.ndarray | float = 0.0) -> jnp.ndarray:
+    """Greedy over feasible nodes, with epsilon-greedy exploration."""
+    scores = jnp.where(ok, scores, NEG_INF)
+    greedy = jnp.argmax(scores).astype(jnp.int32)
+    ke, kr = jax.random.split(key)
+    explore = jax.random.uniform(ke) < epsilon
+    noise = jnp.where(ok, jax.random.uniform(kr, scores.shape), NEG_INF)
+    rand = jnp.argmax(noise).astype(jnp.int32)
+    return jnp.where(explore, rand, greedy)
+
+
+def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
+                      cfg: EnvConfig, score_fn=None) -> jnp.ndarray:
+    """(N,) scores: Q(afterstate_i) for each candidate node i."""
+    after = kenv.hypothetical_place(state, pod, cfg)        # (N, 6) raw
+    fn = score_fn or dqn.qvalues
+    return fn(qparams, kenv.normalize_features(after))
+
+
+def make_sdqn_selector(qparams: dict, cfg: EnvConfig, epsilon: float = 0.0,
+                       score_fn=None) -> Callable:
+    def select(key, state, pod):
+        ok = kenv.feasible(state, pod, cfg)
+        q = score_afterstates(qparams, state, pod, cfg, score_fn)
+        return masked_argmax(key, q, ok, epsilon)
+
+    return select
+
+
+# SDQN-n uses the same scoring machinery; consolidation comes from the reward
+# the network was trained on (Table 5), not from a different selector.
+make_sdqn_n_selector = make_sdqn_selector
+
+
+def make_neural_selector(params: dict, score_fn, cfg: EnvConfig) -> Callable:
+    """LSTM / Transformer baselines: same afterstate scoring protocol."""
+
+    def select(key, state, pod):
+        ok = kenv.feasible(state, pod, cfg)
+        scores = score_afterstates(params, state, pod, cfg, score_fn)
+        return masked_argmax(key, scores, ok, 0.0)
+
+    return select
+
+
+def make_kube_selector(cfg: EnvConfig) -> Callable:
+    from repro.core import baselines
+
+    def select(key, state, pod):
+        return baselines.kube_select(key, state, pod, cfg)
+
+    return select

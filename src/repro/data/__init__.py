@@ -1,0 +1,2 @@
+from repro.data.loader import DataConfig, make_loader  # noqa: F401
+from repro.data.synthetic import synthetic_batches, synthetic_lm_tokens  # noqa: F401

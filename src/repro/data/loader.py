@@ -1,0 +1,98 @@
+"""Sharded data loading with background prefetch.
+
+Two sources: the synthetic stream (default) and a memmapped token file
+(`.bin` of uint16/uint32 tokens).  Each host loads only its slice of the
+global batch (per-host sharding for multi-host deployments); a background
+thread keeps a small prefetch queue full so step time never blocks on data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import synthetic_batches
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    batch: int = 8
+    seq_len: int = 512
+    vocab: int = 50304
+    seed: int = 0
+    token_file: Optional[str] = None
+    token_dtype: str = "uint16"
+    prefetch: int = 2
+    host_index: int = 0
+    host_count: int = 1
+
+
+def _memmap_batches(cfg: DataConfig, start_step: int) -> Iterator[Dict[str, jnp.ndarray]]:
+    data = np.memmap(cfg.token_file, dtype=np.dtype(cfg.token_dtype), mode="r")
+    tokens_per_batch = cfg.batch * (cfg.seq_len + 1)
+    n_batches = len(data) // tokens_per_batch
+    rng = np.random.RandomState(cfg.seed)
+    order = rng.permutation(n_batches)
+    step = start_step
+    while True:
+        idx = order[step % n_batches]
+        flat = np.asarray(data[idx * tokens_per_batch : (idx + 1) * tokens_per_batch])
+        toks = flat.reshape(cfg.batch, cfg.seq_len + 1).astype(np.int32)
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:]),
+            "loss_mask": jnp.ones((cfg.batch, cfg.seq_len), jnp.float32),
+        }
+        step += 1
+
+
+def _host_slice(batch: Dict[str, jnp.ndarray], cfg: DataConfig) -> Dict[str, jnp.ndarray]:
+    if cfg.host_count == 1:
+        return batch
+    per_host = batch["tokens"].shape[0] // cfg.host_count
+    lo = cfg.host_index * per_host
+    return jax.tree.map(lambda x: x[lo : lo + per_host], batch)
+
+
+def make_loader(cfg: DataConfig, model_cfg=None, start_step: int = 0) -> Iterator[dict]:
+    """Prefetching iterator over per-host training batches (seek-able)."""
+    if cfg.token_file:
+        source = _memmap_batches(cfg, start_step)
+    else:
+        source = synthetic_batches(cfg.seed, cfg.batch, cfg.seq_len, cfg.vocab,
+                                   cfg=model_cfg, start_step=start_step)
+
+    q: "queue.Queue" = queue.Queue(maxsize=cfg.prefetch)
+    stop = threading.Event()
+
+    def worker():
+        try:
+            for item in source:
+                if stop.is_set():
+                    return
+                q.put(_host_slice(item, cfg))
+        except BaseException as e:  # noqa: BLE001 - surface errors to the consumer
+            q.put(e)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+
+    class _Iter:
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            item = q.get()
+            if isinstance(item, BaseException):
+                raise item
+            return item
+
+        def close(self):
+            stop.set()
+
+    return _Iter()

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the perf-critical compute paths, with pure-jnp
+oracles (ref.py) and backend-dispatching wrappers (ops.py)."""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,80 @@
+"""Jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+Policy:
+  * on TPU       -> the Pallas kernel (compiled)
+  * on CPU/GPU   -> the XLA path (chunked-jnp implementations from
+                    ``repro.models`` — semantically identical, memory-safe)
+  * ``mode="interpret"`` -> the Pallas kernel body executed in interpret
+                    mode (used by the kernel correctness sweeps on CPU)
+  * ``mode="ref"`` -> the pure-jnp oracle
+
+The model code calls these entry points, so the same model runs under
+dry-run lowering on the CPU container and under real kernels on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import ref
+from repro.kernels import sdqn_score as _ss
+
+
+def _default_mode() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def flash_attention(q, k, v, *, causal=True, mode: Optional[str] = None,
+                    block_q: int = 256, block_k: int = 256):
+    mode = mode or _default_mode()
+    if mode == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    if mode == "interpret":
+        return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                   block_k=block_k, interpret=True)
+    if mode == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    from repro.models import layers  # XLA path: query-chunked online attention
+
+    return layers.attention(q, k, v, causal=causal, q_chunk=block_q)
+
+
+def decode_attention(q, k, v, kv_len, *, mode: Optional[str] = None, block_k: int = 512):
+    mode = mode or _default_mode()
+    if mode == "pallas":
+        return _da.decode_attention(q, k, v, kv_len, block_k=block_k)
+    if mode == "interpret":
+        return _da.decode_attention(q, k, v, kv_len, block_k=block_k, interpret=True)
+    return ref.decode_attention_ref(q, k, v, kv_len)
+
+
+def mamba_scan(x, dt, a, bmat, cmat, d_skip, h0, *, mode: Optional[str] = None,
+               block_d: int = 512, block_s: int = 256, chunk: int = 64):
+    mode = mode or _default_mode()
+    if mode == "pallas":
+        return _ms.mamba_scan(x, dt, a, bmat, cmat, d_skip, h0,
+                              block_d=block_d, block_s=block_s)
+    if mode == "interpret":
+        return _ms.mamba_scan(x, dt, a, bmat, cmat, d_skip, h0,
+                              block_d=block_d, block_s=block_s, interpret=True)
+    if mode == "ref":
+        return ref.mamba_scan_ref(x, dt, a, bmat, cmat, d_skip, h0)
+    from repro.models import mamba  # XLA path: chunked associative scan
+
+    return mamba.selective_scan(x, dt, a, bmat, cmat, d_skip, h0, chunk=chunk)
+
+
+def sdqn_score(feats, params, *, mode: Optional[str] = None, block_n: int = 1024):
+    """Score N nodes through the Table-4 Q-net. params: repro.core.dqn pytree."""
+    mode = mode or _default_mode()
+    w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
+    if mode == "pallas":
+        return _ss.sdqn_score(feats, w1, b1, w2, b2, block_n=block_n)
+    if mode == "interpret":
+        return _ss.sdqn_score(feats, w1, b1, w2, b2, block_n=block_n, interpret=True)
+    return ref.sdqn_score_ref(feats, w1, b1, w2, b2)

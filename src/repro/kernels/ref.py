@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Deliberately simple direct implementations — O(S^2) attention materializing
+the full score matrix, step-by-step sequential scan — used by the kernel
+sweep tests (``tests/test_kernels.py``) via ``assert_allclose``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, groups, d)).reshape(b, s, h * groups, d)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    if causal:
+        qpos = jnp.arange(sq) + (skv - sq)
+        mask = qpos[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B, Hq, D); k, v: (B, Hkv, S, D); kv_len: () or (B,)."""
+    b, hq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+    mask = jnp.arange(skv)[None, None, :] < lens[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mamba_scan_ref(x, dt, a, bmat, cmat, d_skip, h0):
+    """Sequential reference recurrence. Shapes as in kernels.mamba_scan."""
+    bsz, s, di = x.shape
+
+    def step(h, args):
+        x_t, dt_t, b_t, c_t = args  # (B, di), (B, di), (B, N), (B, N)
+        da = jnp.exp(dt_t[..., None] * a[None])              # (B, di, N)
+        h = da * h + (dt_t * x_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + x_t.astype(jnp.float32) * d_skip
+        return h, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          bmat.swapaxes(0, 1), cmat.swapaxes(0, 1))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), hT
+
+
+def sdqn_score_ref(feats, w1, b1, w2, b2):
+    h = jnp.maximum(feats.astype(jnp.float32) @ w1 + b1, 0.0)
+    return (h @ w2 + b2)[..., 0]

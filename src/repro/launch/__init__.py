@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, sharding rules, step builders, dry-run,
+training and serving drivers."""

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell against ShapeDtypeStruct inputs, print memory/cost analysis, and dump
+the roofline terms to JSON.
+
+MUST be run as its own process (the XLA_FLAGS line above runs before any
+other import, including jax, because jax locks the device count on first
+init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import SHAPES, get_config, list_archs, shape_applicable  # noqa: E402
+from repro.launch import shapes as shp  # noqa: E402
+from repro.launch import sharding  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.optim import adam_init  # noqa: E402
+from repro.roofline import flops  # noqa: E402
+from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms  # noqa: E402
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+CFG_OVERRIDES: Dict[str, Any] = {}
+MICRO_OVERRIDE: Dict[str, int] = {}
+MESH_OVERRIDE = None
+SEQ_SHARD = True
+DECODE_RESHARD = False
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (jitted_fn, example_args) for one cell."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if CFG_OVERRIDES:
+        cfg = _dc.replace(cfg, **CFG_OVERRIDES)
+    shape = SHAPES[shape_name]
+    params_shape = shp.params_specs(cfg)
+    p_specs = sharding.param_specs(params_shape, cfg, mesh)
+    p_named = sharding.to_named(p_specs, mesh)
+
+    if shape.kind == "train":
+        batch = shp.train_batch_specs(cfg, shape)
+        b_named = sharding.to_named(sharding.input_sharding(mesh, batch), mesh)
+        adam_cfg = steps.default_adam(cfg)
+        opt_shape = jax.eval_shape(lambda p: adam_init(p, adam_cfg), params_shape)
+        o_specs = sharding.opt_state_specs(opt_shape, p_specs, mesh)
+        o_named = sharding.to_named(o_specs, mesh)
+        nm = MICRO_OVERRIDE.get(arch) or steps.num_microbatches(arch, shape.global_batch)
+        act = (sharding.activation_spec(mesh, shape.global_batch // nm, shape.seq_len)
+               if SEQ_SHARD else None)
+        fn, _ = steps.make_train_step(cfg, adam_cfg, num_microbatches=nm,
+                                      q_chunk=min(512, shape.seq_len),
+                                      act_sharding=act)
+        jitted = jax.jit(fn, in_shardings=(p_named, o_named, b_named),
+                         donate_argnums=(0, 1))
+        return jitted, (params_shape, opt_shape, batch)
+
+    if shape.kind == "prefill":
+        batch = shp.prefill_batch_specs(cfg, shape)
+        b_named = sharding.to_named(sharding.input_sharding(mesh, batch), mesh)
+        act = (sharding.activation_spec(mesh, shape.global_batch, shape.seq_len)
+               if SEQ_SHARD else None)
+        fn = steps.make_prefill_step(cfg, q_chunk=min(256, shape.seq_len),
+                                     act_sharding=act)
+        jitted = jax.jit(fn, in_shardings=(p_named, b_named))
+        return jitted, (params_shape, batch)
+
+    # decode
+    tokens, cache_shape, index = shp.decode_specs(cfg, SHAPES[shape_name])
+    t_named = sharding.to_named(sharding.input_sharding(mesh, tokens), mesh)
+    c_specs = sharding.cache_specs(cache_shape, cfg, mesh, shape.global_batch)
+    c_named = sharding.to_named(c_specs, mesh)
+    from jax.sharding import PartitionSpec as _P
+
+    if DECODE_RESHARD:
+        bax = sharding.batch_axis(mesh, shape.global_batch)
+        fn = steps.make_decode_step(cfg, act_sharding=_P(bax, None, None),
+                                    mlp_sharding=_P(None, None, None))
+    else:
+        fn = steps.make_decode_step(cfg)
+    jitted = jax.jit(fn, in_shardings=(p_named, t_named, c_named, None),
+                     donate_argnums=(2,))
+    return jitted, (params_shape, tokens, cache_shape, index)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> Dict[str, Any]:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if CFG_OVERRIDES:
+        cfg = _dc.replace(cfg, **CFG_OVERRIDES)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        cell["status"] = "skipped"
+        cell["reason"] = why
+        print(f"[{arch} × {shape_name} × {mesh_name}] SKIP: {why}")
+        return cell
+
+    t0 = time.time()
+    mesh = MESH_OVERRIDE() if MESH_OVERRIDE else make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        jitted, args = build_cell(arch, shape_name, mesh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+        except Exception as e:  # noqa: BLE001
+            mem["error"] = str(e)
+
+        cost = {}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            cost = {k: float(v) for k, v in ca.items()
+                    if k in ("flops", "bytes accessed", "transcendentals",
+                             "optimal_seconds")
+                    or k.startswith("bytes accessed")}
+        except Exception as e:  # noqa: BLE001
+            cost["error"] = str(e)
+
+        coll = {}
+        try:
+            hlo = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo)
+        except Exception as e:  # noqa: BLE001
+            coll = {"error": str(e), "total_bytes": 0}
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    analytic = flops.cell_flops(cfg, shape, remat_full=cfg.remat == "full")
+    nm = steps.num_microbatches(arch, shape.global_batch) if shape.kind == "train" else 1
+    hbm = flops.cell_hbm_bytes(cfg, shape, n_chips, num_microbatches=nm,
+                               tp=mesh.shape["model"])
+    cell.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=mem,
+        cost=cost,
+        collectives=coll,
+        model_params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+        tokens=shape.global_batch * (1 if shape.is_decode else shape.seq_len),
+        kind=shape.kind,
+        num_microbatches=nm,
+        analytic_hbm_bytes_per_chip=hbm,
+    )
+    hbm_used = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0) - mem.get("alias_size_in_bytes", 0))
+    cell["hbm_bytes_per_chip"] = int(hbm_used)
+    cell["fits_hbm_16g"] = bool(hbm_used <= 16 * 2**30)
+    cell["roofline"] = roofline_terms(
+        n_chips=n_chips,
+        hlo_flops_global=analytic["hlo_flops"],
+        model_flops=analytic["model_flops"],
+        hbm_bytes_per_chip=hbm,
+        collective_bytes_per_chip=float(coll.get("total_bytes", 0) or 0),
+    )
+    per_dev_gb = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)) / 2**30
+    print(f"[{arch} × {shape_name} × {mesh_name}] OK lower={t_lower:.0f}s "
+          f"compile={t_compile:.0f}s mem/dev={per_dev_gb:.2f}GiB fits16G={cell['fits_hbm_16g']} "
+          f"coll={coll.get('total_bytes', 0):.3g}B "
+          f"dominant={cell['roofline'].get('dominant')} "
+          f"frac={cell['roofline'].get('roofline_fraction', 0):.2f}")
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--remat", default="", choices=["", "none", "dots", "full"])
+    ap.add_argument("--causal-buckets", type=int, default=0)
+    ap.add_argument("--moe-dispatch", default="", choices=["", "global", "batched"])
+    ap.add_argument("--mesh-shape", default="", help='e.g. "2,128" for a (data,model) override')
+    ap.add_argument("--micro", type=int, default=0, help="microbatch-count override")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--cache-dtype", default="")
+    ap.add_argument("--decode-reshard", action="store_true")
+    args = ap.parse_args()
+
+    global MESH_OVERRIDE, SEQ_SHARD, DECODE_RESHARD
+    if args.no_seq_shard:
+        SEQ_SHARD = False
+    if args.decode_reshard:
+        DECODE_RESHARD = True
+    if args.remat:
+        CFG_OVERRIDES["remat"] = args.remat
+    if args.causal_buckets:
+        CFG_OVERRIDES["causal_buckets"] = args.causal_buckets
+    if args.moe_dispatch:
+        CFG_OVERRIDES["moe_dispatch"] = args.moe_dispatch
+    if args.cache_dtype:
+        CFG_OVERRIDES["cache_dtype"] = args.cache_dtype
+    if args.mesh_shape:
+        dims = tuple(int(x) for x in args.mesh_shape.split(","))
+        MESH_OVERRIDE = lambda: jax.make_mesh(dims, ("data", "model"))  # noqa: E731
+    if args.micro:
+        for a in list_archs():
+            MICRO_OVERRIDE[a] = args.micro
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                try:
+                    cell = run_cell(arch, shape_name, multi_pod, args.out)
+                except Exception as e:  # noqa: BLE001
+                    cell = {"arch": arch, "shape": shape_name,
+                            "mesh": "2x16x16" if multi_pod else "16x16",
+                            "status": "failed", "error": str(e)}
+                    print(f"[{arch} × {shape_name}] FAILED: {e}")
+                    traceback.print_exc()
+                results.append(cell)
+                mesh_tag = cell["mesh"].replace("x", "_")
+                fname = f"{args.out}/{arch}_{shape_name}_{mesh_tag}.json"
+                with open(fname, "w") as f:
+                    json.dump(cell, f, indent=2, default=str)
+
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_fail = sum(1 for r in results if r["status"] == "failed")
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped (documented), {n_fail} failed")
+    with open(f"{args.out}/summary.json", "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

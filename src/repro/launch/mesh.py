@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single-pod: 16x16 = 256 chips ("data","model");
+multi-pod: 2 pods x 256 = 512 chips ("pod","data","model") — the "pod" axis
+carries only gradient all-reduce (DCN-economical DP across pods).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1-device mesh with the same axis names (CPU tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

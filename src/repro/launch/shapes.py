@@ -1,0 +1,66 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation: the dry-run lowers
+against these.  Modality frontends are stubs per the assignment: whisper
+gets precomputed frame embeddings, internvl gets precomputed patch
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as mdl
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "targets": _sds((b, s), jnp.int32),
+        "loss_mask": _sds((b, s), jnp.float32),
+    }
+    if cfg.is_encoder_decoder:
+        batch["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.num_vision_tokens:
+        batch["patch_embeds"] = _sds((b, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    batch = train_batch_specs(cfg, shape)
+    del batch["targets"], batch["loss_mask"]
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Dict[str, Any], Any, Any]:
+    """(token specs, cache specs, index spec) for one decode step with a
+    KV/SSM cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = {"tokens": _sds((b, 1), jnp.int32)}
+    cache = jax.eval_shape(lambda: mdl.init_cache(cfg, b, s))
+    index = _sds((), jnp.int32)
+    return tokens, cache, index
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: mdl.init_params(k, cfg), key)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, kind: str = None) -> Dict[str, Any]:
+    """The public entry: all model inputs for an (arch, shape) cell."""
+    kind = kind or shape.kind
+    if kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    tokens, cache, index = decode_specs(cfg, shape)
+    return {"batch": tokens, "cache": cache, "index": index}

@@ -1,0 +1,168 @@
+"""Sharding rules: parameter / input / cache PartitionSpecs for the
+production meshes.
+
+Scheme: TP ("model") × FSDP ("data") × optional DP ("pod", multi-pod).
+  * up-projections  (L, In, Out): In over data (ZeRO-3 gather-on-use),
+    Out over model (megatron column-parallel)
+  * down-projections (L, In, Out): In over model (row-parallel), Out over data
+  * embeddings: vocab over model (TP logits), d_model over data
+  * MoE experts: expert dim over model when E % tp == 0 (EP), otherwise
+    TP-within-expert on the FFN dim (qwen2-moe: 60 experts on a 16-way axis)
+  * decode KV caches: sequence dim over model (XLA-level split-KV decoding),
+    batch over data — batch-1 long-context shards S over data×model
+  * norms/scalars: replicated
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes ("pod" folds into batch as outer DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def batch_axis(mesh: Mesh, global_batch: int):
+    """Axis (or axes tuple) for the batch dim; None => replicated."""
+    axes = batch_axes(mesh)
+    if global_batch % _axes_size(mesh, axes) == 0:
+        return axes
+    if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def param_spec(path: Tuple[str, ...], leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, keyed by its tree path."""
+    name = path[-1]
+    stacked = path[0] in ("layers", "encoder")  # leading num_blocks dim
+    tp, fsdp = "model", "data"
+    nd = leaf.ndim
+
+    def maybe(dim_size: int, axis: Optional[str]) -> Optional[str]:
+        return axis if axis and dim_size % mesh.shape[axis] == 0 else None
+
+    if name == "embed":
+        return P(maybe(leaf.shape[0], tp), maybe(leaf.shape[1], fsdp))
+    if name == "lm_head":
+        return P(maybe(leaf.shape[0], fsdp), maybe(leaf.shape[1], tp))
+
+    # norm scales / biases / tiny vectors: replicate
+    if nd - (1 if stacked else 0) <= 1:
+        if stacked and nd == 2 and name in ("dt_bias", "conv_b", "D", "bq", "bk", "bv"):
+            return P(None, maybe(leaf.shape[1], tp))
+        return P()
+
+    if nd == 4:  # MoE expert weights: (L, E, In, Out)
+        _, e, d_in, d_out = leaf.shape
+        if e % mesh.shape[tp] == 0:  # expert parallelism
+            return P(None, tp, maybe(d_in, fsdp), None)
+        # TP-within-expert (qwen2-moe): shard the FFN dim; keep In on FSDP
+        # (replicating In was tested and REFUTED: the unsharded (E,C,*)
+        # buffers all-reduce ~1 TiB/chip/step — see EXPERIMENTS.md §Perf)
+        if name == "w_down":
+            return P(None, None, maybe(d_in, tp), maybe(d_out, fsdp))
+        return P(None, None, maybe(d_in, fsdp), maybe(d_out, tp))
+
+    if nd == 3 and stacked:
+        _, d_in, d_out = leaf.shape
+        if name in ("w_down", "wo", "out_proj", "dt_proj"):
+            return P(None, maybe(d_in, tp), maybe(d_out, fsdp))
+        if name in ("router", "x_proj", "A_log", "shared_gate"):
+            fst = tp if name in ("x_proj", "A_log") else fsdp
+            return P(None, maybe(d_in, fst), None)
+        if name == "conv_w":  # (L, cw, di)
+            return P(None, None, maybe(d_out, tp))
+        return P(None, maybe(d_in, fsdp), maybe(d_out, tp))
+
+    if nd == 2:
+        return P(maybe(leaf.shape[0], fsdp), maybe(leaf.shape[1], tp))
+    return P()
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+
+
+def param_specs(params_shape: Any, cfg: ModelConfig, mesh: Mesh):
+    """Tree of PartitionSpecs matching a params (shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_keys(path), leaf, cfg, mesh), params_shape
+    )
+
+
+def opt_state_specs(opt_shape: Any, p_specs: Any, mesh: Mesh):
+    """Adam state: step replicated; m/v/master mirror the param specs."""
+    out = {"step": P(), "m": p_specs, "v": p_specs}
+    if "master" in opt_shape:
+        out["master"] = p_specs
+    return out
+
+
+def input_sharding(mesh: Mesh, batch: dict):
+    """Specs for a train/prefill batch dict: batch dim sharded, rest replicated."""
+    gb = jax.tree.leaves(batch)[0].shape[0]
+    b = batch_axis(mesh, gb)
+    return {
+        k: P(b, *([None] * (v.ndim - 1))) if v.ndim >= 1 else P()
+        for k, v in batch.items()
+    }
+
+
+def cache_specs(cache_shape: Any, cfg: ModelConfig, mesh: Mesh, global_batch: int):
+    """Decode-cache specs: KV sequence over model (split-KV), batch over data.
+
+    For batch-1 long-context the sequence dim is sharded over data×model.
+    """
+    b_axis = batch_axis(mesh, global_batch)
+    seq_ax: Any = ("data", "model") if b_axis is None else "model"
+    if isinstance(seq_ax, tuple):
+        seq_ax = tuple(a for a in seq_ax if a in mesh.axis_names) or "model"
+
+    def visit(path, leaf):
+        name = _path_keys(path)[-1]
+        tp_ok = lambda d: "model" if d % mesh.shape["model"] == 0 else None  # noqa: E731
+        if name in ("k", "v"):  # (nb, B, S, Hkv, hd)
+            s = leaf.shape[2]
+            ax = seq_ax if s % _axes_size(mesh, seq_ax) == 0 else None
+            return P(None, b_axis, ax, None, None)
+        if name in ("xk", "xv"):  # (nb, B, enc_seq, Hkv, hd)
+            return P(None, b_axis, None, None, None)
+        if name == "conv":  # (nb, B, cw-1, di)
+            return P(None, b_axis, None, tp_ok(leaf.shape[3]))
+        if name == "h":  # (nb, B, di, n)
+            return P(None, b_axis, tp_ok(leaf.shape[2]), None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shape)
+
+
+def activation_spec(mesh: Mesh, micro_batch: int, seq_len: int) -> P:
+    """Residual-stream constraint (B, S, D): batch over data(/pod), sequence
+    over model (Megatron-style sequence parallelism between blocks — keeps
+    the scan carry and saved activations 256-way sharded)."""
+    b = batch_axis(mesh, micro_batch)
+    s_ax = "model" if seq_len % mesh.shape["model"] == 0 else None
+    return P(b, s_ax, None)
+
+
+def to_named(tree_specs: Any, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,124 @@
+"""Step builders: train (grad-accumulated + AdamW), prefill, decode.
+
+These close over static config and are the units that ``dryrun.py`` lowers
+for every (arch × shape × mesh) cell and that ``train.py`` / ``serve.py``
+execute for real.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as mdl
+from repro.optim import AdamConfig, adam_init, adam_update
+from repro.optim.schedule import cosine_warmup
+
+
+def default_adam(cfg: ModelConfig) -> AdamConfig:
+    # moments in bf16 for the largest archs to bound optimizer memory
+    big = cfg.param_count() > 60e9
+    return AdamConfig(
+        lr=3e-4,
+        weight_decay=0.1,
+        grad_clip_norm=1.0,
+        moment_dtype="bfloat16" if big else "float32",
+        master_dtype="" if big else "float32",
+    )
+
+
+def make_train_step(cfg: ModelConfig, adam_cfg: Optional[AdamConfig] = None,
+                    num_microbatches: int = 1, q_chunk: int = 512,
+                    mamba_chunk: int = 64, total_steps: int = 10000,
+                    act_sharding=None):
+    adam_cfg = adam_cfg or default_adam(cfg)
+    schedule = cosine_warmup(adam_cfg.lr, 200, total_steps)
+
+    def loss_fn(params, micro_batch):
+        loss, metrics = mdl.loss_and_metrics(
+            params, cfg, micro_batch, q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+            act_sharding=act_sharding,
+        )
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % num_microbatches == 0, (b, num_microbatches)
+                return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def accumulate(acc, mb):
+                (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return acc, metrics
+
+            grads, metrics = jax.lax.scan(accumulate, zeros, micro)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+        params, opt_state, stats = adam_update(params, grads, opt_state, adam_cfg, schedule)
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return train_step, adam_cfg
+
+
+def make_prefill_step(cfg: ModelConfig, q_chunk: int = 512, mamba_chunk: int = 64,
+                      act_sharding=None):
+    def prefill_step(params, batch):
+        logits, cache = mdl.prefill(
+            params, cfg, batch["tokens"], batch, q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+            act_sharding=act_sharding,
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, q_chunk: int = 512, act_sharding=None,
+                     mlp_sharding=None):
+    def decode_step(params, batch, cache, index):
+        logits, new_cache = mdl.decode_step(
+            params, cfg, batch["tokens"], cache, index, q_chunk=q_chunk,
+            act_sharding=act_sharding, mlp_sharding=mlp_sharding,
+        )
+        return logits, new_cache
+
+    return decode_step
+
+
+def init_train_state(key, cfg: ModelConfig, adam_cfg: Optional[AdamConfig] = None):
+    adam_cfg = adam_cfg or default_adam(cfg)
+    params = mdl.init_params(key, cfg)
+    opt_state = adam_init(params, adam_cfg)
+    return params, opt_state
+
+
+# per-arch microbatch sizes for train_4k (bounds activation + MoE dispatch
+# memory on the 256-chip mesh; global batch 256)
+TRAIN_MICROBATCH: Dict[str, int] = {
+    "olmo-1b": 256,
+    "granite-8b": 128,
+    "qwen2-moe-a2.7b": 64,
+    "whisper-medium": 256,
+    "falcon-mamba-7b": 64,
+    "dbrx-132b": 32,
+    "internvl2-76b": 32,
+    "command-r-plus-104b": 16,
+    "jamba-1.5-large-398b": 16,
+    "llama3-405b": 16,
+}
+
+
+def num_microbatches(arch: str, global_batch: int) -> int:
+    micro = TRAIN_MICROBATCH.get(arch, 32)
+    return max(1, global_batch // micro)

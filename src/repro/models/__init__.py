@@ -1,0 +1,1 @@
+from repro.models import layers, mamba, moe, model  # noqa: F401

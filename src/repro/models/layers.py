@@ -1,0 +1,262 @@
+"""Core neural layers (pure JAX, no flax).
+
+Parameters are plain nested dicts of ``jnp.ndarray``.  Every ``init_*``
+function takes a PRNG key and returns the param pytree; every ``apply``-style
+function is functional and jit-safe.
+
+Attention is implemented with *query chunking* (``lax.scan`` over query
+blocks): peak memory is O(chunk * S) instead of O(S^2), which is what makes
+the 32k-prefill dry-run memory analysis honest without a Pallas dependency on
+the CPU backend (on TPU, ``repro.kernels.ops`` swaps in the real kernels).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(norm: str, d: int, dtype) -> dict:
+    if norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if norm == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if norm == "layernorm_np":  # olmo: non-parametric LN
+        return {}
+    raise ValueError(norm)
+
+
+def apply_norm(norm: str, params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if norm == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+        x = x * params["scale"].astype(jnp.float32)
+    elif norm in ("layernorm", "layernorm_np"):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + eps)
+        if norm == "layernorm":
+            x = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(norm)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, chunked over queries)
+# ---------------------------------------------------------------------------
+
+
+def repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, hd) -> (B, S, Hkv*groups, hd)."""
+    if groups == 1:
+        return x
+    b, s, h, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, groups, d))
+    return x.reshape(b, s, h * groups, d)
+
+
+def _attend_block(q, k, v, mask, scale):
+    """Grouped-GQA attention block — KV heads are NEVER repeated/materialized.
+
+    q: (B, C, Hq, hd), k/v: (B, S, Hkv, hd), mask: (C, S) or None.
+    The query heads are reshaped to (Hkv, G) groups and contracted against
+    the raw KV heads; at 128 q-heads / 8 kv-heads × 32k keys the repeated-KV
+    tensor this avoids is ~16× the cache itself (§Perf, llama3 decode).
+    """
+    b, c, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, c, hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None, :, :], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, c, hq, hd)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    q_chunk: int = 512,
+    kv_len: Optional[jnp.ndarray] = None,
+    q_offset: Optional[jnp.ndarray] = None,
+    causal_buckets: int = 1,
+) -> jnp.ndarray:
+    """GQA attention.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd).
+    kv_len: optional scalar — valid prefix length of k/v (decode with cache).
+    q_offset: optional scalar — absolute position of q[0] (decode).
+    causal_buckets > 1: split the query chunks into buckets where bucket g
+    only attends K[: (g+1)·Skv/buckets] — skips fully-masked key regions with
+    static shapes (saves up to (1 - (B+1)/(2B)) of score FLOPs; §Perf).
+    Returns (B, Sq, Hq, hd).
+    """
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if k.dtype != q.dtype:  # low-precision (fp8) cache storage
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
+    scale = 1.0 / math.sqrt(hd)
+
+    kpos = jnp.arange(skv)
+    valid = kpos[None, :] < kv_len if kv_len is not None else None
+
+    if sq % q_chunk != 0:  # non-divisible (e.g. whisper's 1500 frames)
+        q_chunk = next((c for c in range(q_chunk, 0, -1) if sq % c == 0), sq)
+    if sq <= q_chunk:
+        mask = None
+        if causal and sq > 1:
+            off = q_offset if q_offset is not None else 0
+            qpos = jnp.arange(sq) + off
+            mask = qpos[:, None] >= kpos[None, :]
+        if valid is not None:
+            mask = valid if mask is None else jnp.logical_and(mask, valid)
+        if mask is not None and mask.shape[0] == 1:
+            mask = jnp.broadcast_to(mask, (sq, skv))
+        return _attend_block(q, k, v, mask, scale)
+    n_chunks = sq // q_chunk
+
+    if (causal_buckets > 1 and causal and sq == skv and valid is None
+            and q_offset is None and n_chunks % causal_buckets == 0
+            and skv % causal_buckets == 0):
+        # bucketed lower-triangle: bucket g's queries see only K[: (g+1)·Skv/G]
+        per = n_chunks // causal_buckets
+        kv_step = skv // causal_buckets
+        outs = []
+        for g in range(causal_buckets):
+            lo, hi = g * per * q_chunk, (g + 1) * per * q_chunk
+            outs.append(attention(
+                q[:, lo:hi], k[:, : (g + 1) * kv_step], v[:, : (g + 1) * kv_step],
+                causal=True, q_chunk=q_chunk, q_offset=jnp.int32(lo),
+            ))
+        return jnp.concatenate(outs, axis=1)
+
+    qs = q.reshape(b, n_chunks, q_chunk, hq, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, args):
+        i, qc = args
+        off = i * q_chunk + (q_offset if q_offset is not None else 0)
+        qpos = jnp.arange(q_chunk) + off
+        mask = qpos[:, None] >= kpos[None, :] if causal else jnp.ones((q_chunk, skv), bool)
+        if valid is not None:
+            mask = jnp.logical_and(mask, valid)
+        return None, _attend_block(qc, k, v, mask, scale)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(n_chunks), qs))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, hd)
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), dtype, scale=1.0 / math.sqrt(2 * cfg.num_layers * hq * hd)),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def attention_qkv(params: dict, x: jnp.ndarray, cfg):
+    """Project x -> (q, k, v) with RoPE left to the caller."""
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.use_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (
+        q.reshape(b, s, hq, hd),
+        k.reshape(b, s, hkv, hd),
+        v.reshape(b, s, hkv, hd),
+    )
+
+
+def attention_out(params: dict, o: jnp.ndarray) -> jnp.ndarray:
+    b, s, h, hd = o.shape
+    return o.reshape(b, s, h * hd) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, ff: int, act: str, dtype, num_layers: int = 1) -> dict:
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / math.sqrt(2 * num_layers * ff)
+    if act == "silu":
+        return {
+            "w_gate": dense_init(ks[0], (d, ff), dtype),
+            "w_up": dense_init(ks[1], (d, ff), dtype),
+            "w_down": dense_init(ks[2], (ff, d), dtype, scale=out_scale),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, ff), dtype),
+        "w_down": dense_init(ks[1], (ff, d), dtype, scale=out_scale),
+    }
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]

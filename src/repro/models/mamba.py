@@ -1,0 +1,172 @@
+"""Mamba-1 selective-state-space block (falcon-mamba / jamba substrate).
+
+Training/prefill uses a *chunked* selective scan: ``lax.scan`` over sequence
+chunks with an in-chunk ``associative_scan`` — O(S·d_inner·N) memory bounded
+per chunk, parallel within a chunk, sequential across chunks.  On TPU the
+Pallas ``mamba_scan`` kernel implements the same chunking in VMEM
+(``repro.kernels``); this module is the XLA path and the semantic reference.
+Decode carries (conv_state, ssm_state) and is O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d, di, n, r, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(
+        jax.random.uniform(ks[4], (di,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": layers.dense_init(ks[1], (cw, di), dtype, scale=1.0 / math.sqrt(cw)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.dense_init(ks[2], (di, r + 2 * n), dtype),
+        "dt_proj": layers.dense_init(ks[3], (r, di), dtype, scale=r**-0.5),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[5], (di, d), dtype, scale=1.0 / math.sqrt(2 * cfg.num_layers * di)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, di), w: (cw, di)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(cw):  # cw is tiny (4): unrolled adds, no conv primitive needed
+        out = out + pad[:, j : j + x.shape[1], :] * w[j][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_params(params: dict, x: jnp.ndarray, n: int, r: int):
+    """x: (B, S, di) -> dt (B,S,di) fp32, Bmat/Cmat (B,S,N) fp32."""
+    proj = (x @ params["x_proj"]).astype(jnp.float32)
+    dt, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32) + params["dt_bias"])
+    return dt, bmat, cmat
+
+
+def selective_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    bmat: jnp.ndarray,
+    cmat: jnp.ndarray,
+    d_skip: jnp.ndarray,
+    h0: jnp.ndarray,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked selective scan.
+
+    x: (B, S, di)   input sequence (post conv+silu)
+    dt: (B, S, di)  fp32 discretization steps
+    a: (di, N)      fp32 (negative) state matrix
+    bmat/cmat: (B, S, N) fp32 input/output projections
+    h0: (B, di, N)  fp32 incoming state
+    Returns (y (B, S, di), h_final (B, di, N)).
+    """
+    bsz, s, di = x.shape
+    n = a.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # chunk the raw inputs; discretized (B, chunk, di, N) tensors are built
+    # INSIDE the loop body so only one chunk's worth is ever materialized
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    x_c = to_chunks(x.astype(jnp.float32))                 # (nc, B, chunk, di)
+    dt_c = to_chunks(dt)
+    bm_c = to_chunks(bmat)                                 # (nc, B, chunk, N)
+    cm_c = to_chunks(cmat)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, args):
+        x_k, dt_k, bm_k, cm_k = args
+        da_k = jnp.exp(dt_k[..., None] * a[None, None])     # (B, chunk, di, N)
+        dbx_k = (dt_k * x_k)[..., None] * bm_k[:, :, None, :]
+        acum, bcum = jax.lax.associative_scan(combine, (da_k, dbx_k), axis=1)
+        h_t = acum * h[:, None] + bcum                      # (B, chunk, di, N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, cm_k)
+        return h_t[:, -1], y
+
+    h_final, y = jax.lax.scan(body, h0, (x_c, dt_c, bm_c, cm_c))
+    y = y.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :]
+    return y.astype(x.dtype), h_final
+
+
+def apply_mamba(params: dict, x: jnp.ndarray, cfg, h0=None, conv0=None, chunk: int = 64):
+    """Full block for train/prefill. x: (B, S, D) -> (B, S, D).
+
+    Returns (out, (conv_state, ssm_state)) so prefill can seed decode.
+    """
+    bsz, s, _ = x.shape
+    di, n, r, cw = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if conv0 is not None:  # continue from cached conv tail
+        xi_ext = jnp.concatenate([conv0.astype(xi.dtype), xi], axis=1)
+        conv_out = _causal_conv(xi_ext, params["conv_w"], params["conv_b"])[:, cw - 1 :]
+    else:
+        conv_out = _causal_conv(xi, params["conv_w"], params["conv_b"])
+    xi = jax.nn.silu(conv_out)
+
+    dt, bmat, cmat = _ssm_params(params, xi, n, r)
+    a = -jnp.exp(params["A_log"])
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    y, h_final = selective_scan(xi, dt, a, bmat, cmat, params["D"], h0, chunk)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    conv_state = (
+        jnp.concatenate([conv0.astype(xi.dtype), x @ params["in_proj"]], axis=1)
+        if conv0 is not None
+        else (x @ params["in_proj"])
+    )[:, -(cw - 1) :, :di]
+    return out, (conv_state, h_final)
+
+
+def decode_mamba(params: dict, x: jnp.ndarray, cfg, state):
+    """One-token decode. x: (B, 1, D); state = (conv_state (B,cw-1,di), h (B,di,N))."""
+    conv_state, h = state
+    di, n, r, cw = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = x @ params["in_proj"]  # (B,1,2di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([conv_state.astype(xi.dtype), xi], axis=1)  # (B,cw,di)
+    conv = jnp.einsum("bcd,cd->bd", window, params["conv_w"]) + params["conv_b"]
+    xi1 = jax.nn.silu(conv)[:, None, :]  # (B,1,di)
+
+    dt, bmat, cmat = _ssm_params(params, xi1, n, r)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt[:, 0, :, None] * a[None])              # (B,di,N)
+    dbx = (dt[:, 0] * xi1[:, 0].astype(jnp.float32))[..., None] * bmat[:, 0, None, :]
+    h_new = da * h + dbx
+    y = jnp.einsum("bdn,bn->bd", h_new, cmat[:, 0]) + xi1[:, 0].astype(jnp.float32) * params["D"]
+    out = (y.astype(x.dtype)[:, None, :] * jax.nn.silu(z)) @ params["out_proj"]
+    new_conv = window[:, 1:]
+    return out, (new_conv, h_new)
+
+
+def init_mamba_state(cfg, batch: int):
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.bfloat16),
+        jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )

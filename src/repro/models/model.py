@@ -1,0 +1,392 @@
+"""Unified LM-family model: dense / MoE / SSM / hybrid / enc-dec / VLM.
+
+One code path covers all ten assigned architectures.  Layers are grouped into
+*blocks* (the repeating unit — one layer for homogeneous archs, a period of
+``attn_period`` layers for jamba) and the model scans over stacked block
+parameters (``lax.scan``), keeping HLO size O(1) in depth.  KV / SSM caches
+are pytrees stacked the same way so prefill and decode scan in lockstep with
+the parameters.
+
+Public entry points:
+  init_params, loss_and_metrics (train), prefill, decode_step, init_cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, mamba, moe
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayer:
+    mixer: str  # "attn" | "mamba"
+    ffn: str    # "mlp" | "moe" | "none"
+    cross: bool = False  # enc-dec cross attention after the mixer
+    causal: bool = True
+
+
+def block_spec(cfg: ModelConfig) -> List[SubLayer]:
+    """The repeating sub-layer structure of one scan block (decoder side)."""
+    if cfg.family == "ssm":
+        return [SubLayer("mamba", "none")]  # mamba-1 blocks have no separate FFN
+    if cfg.attn_period:  # hybrid (jamba)
+        subs = []
+        for j in range(cfg.attn_period):
+            mixer = "attn" if j % cfg.attn_period == cfg.attn_offset else "mamba"
+            use_moe = cfg.moe_num_experts and (j % cfg.moe_every == cfg.moe_every - 1)
+            subs.append(SubLayer(mixer, "moe" if use_moe else "mlp"))
+        return subs
+    ffn = "moe" if cfg.moe_num_experts else "mlp"
+    return [SubLayer("attn", ffn, cross=cfg.is_encoder_decoder)]
+
+
+def num_blocks(cfg: ModelConfig) -> int:
+    spec = block_spec(cfg)
+    assert cfg.num_layers % len(spec) == 0, (cfg.num_layers, len(spec))
+    return cfg.num_layers // len(spec)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stacked(init_fn, key, nb: int):
+    return jax.vmap(init_fn)(jax.random.split(key, nb))
+
+
+def _init_sublayer(key, sub: SubLayer, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": layers.init_norm(cfg.norm, cfg.d_model, dtype)}
+    if sub.mixer == "attn":
+        p["attn"] = layers.init_attention(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = mamba.init_mamba(ks[1], cfg, dtype)
+    if sub.cross:
+        p["cross_norm"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = layers.init_attention(ks[2], cfg, dtype)
+    if sub.ffn != "none":
+        p["norm2"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+        if sub.ffn == "moe":
+            p["moe"] = moe.init_moe(ks[3], cfg, dtype)
+        else:
+            p["mlp"] = layers.init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg.act, dtype, cfg.num_layers)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    nb = num_blocks(cfg)
+    spec = block_spec(cfg)
+
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype),
+        "final_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        "layers": {
+            f"sub{j}": _stacked(lambda k, s=sub: _init_sublayer(k, s, cfg, dtype), ks[1 + (j % 4)], nb)
+            for j, sub in enumerate(spec)
+        },
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(ks[5], (cfg.d_model, cfg.padded_vocab), dtype, scale=cfg.d_model**-0.5)
+    if cfg.is_encoder_decoder:
+        enc_sub = SubLayer("attn", "mlp", causal=False)
+        params["encoder"] = {
+            "layers": {
+                "sub0": _stacked(lambda k: _init_sublayer(k, enc_sub, cfg, dtype), ks[6], cfg.enc_layers)
+            },
+            "final_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Decode cache pytree: per sub-layer, stacked over blocks."""
+    dtype = dtype or jnp.dtype(cfg.cache_dtype)
+    nb = num_blocks(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    cache: Dict[str, Any] = {}
+    for j, sub in enumerate(block_spec(cfg)):
+        c: Dict[str, Any] = {}
+        if sub.mixer == "attn":
+            c["k"] = jnp.zeros((nb, batch, max_len, hkv, hd), dtype)
+            c["v"] = jnp.zeros((nb, batch, max_len, hkv, hd), dtype)
+        else:
+            c["conv"] = jnp.zeros((nb, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)
+            c["h"] = jnp.zeros((nb, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        if sub.cross:
+            c["xk"] = jnp.zeros((nb, batch, cfg.enc_seq, hkv, hd), dtype)
+            c["xv"] = jnp.zeros((nb, batch, cfg.enc_seq, hkv, hd), dtype)
+        cache[f"sub{j}"] = c
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward machinery
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg, tokens, extra: Optional[dict]) -> jnp.ndarray:
+    x = params["embed"][tokens]  # (B, S, D)
+    if cfg.num_vision_tokens and extra is not None and "patch_embeds" in extra:
+        nv = extra["patch_embeds"].shape[1]
+        x = jnp.concatenate([extra["patch_embeds"].astype(x.dtype), x[:, nv:]], axis=1)
+    return x
+
+
+def _sinusoidal(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _run_attn(sp, x, cfg, *, positions, causal, q_chunk, cache_kv=None, cache_index=None,
+              kv_override=None, collect_kv=False):
+    """One attention sub-layer body (shared by train / prefill / decode)."""
+    q, k, v = layers.attention_qkv(sp, x, cfg)
+    if kv_override is not None:  # cross attention: kv precomputed from encoder
+        k, v = kv_override
+        o = layers.attention(q, k, v, causal=False, q_chunk=q_chunk)
+        return layers.attention_out(sp, o), None
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    new_kv = None
+    if cache_kv is not None and cache_index is not None:  # decode: write + attend
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        o = layers.attention(q, ck, cv, causal=False, q_chunk=q_chunk,
+                             kv_len=cache_index + 1, q_offset=cache_index)
+        new_kv = (ck, cv)
+    else:
+        o = layers.attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                             causal_buckets=cfg.causal_buckets)
+        if collect_kv:
+            new_kv = (k, v)
+    return layers.attention_out(sp, o), new_kv
+
+
+def _cross_kv(sp, enc_out, cfg):
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    b, s, _ = enc_out.shape
+    k = (enc_out @ sp["wk"]).reshape(b, s, hkv, hd)
+    v = (enc_out @ sp["wv"]).reshape(b, s, hkv, hd)
+    return k, v
+
+
+def _block_fn(block_params, x, cfg, spec, *, mode, positions, q_chunk, mamba_chunk,
+              block_cache=None, cache_index=None, enc_out=None, act_sharding=None,
+              mlp_sharding=None):
+    """Run one block (all sub-layers). Returns (x, new_block_cache, aux_loss)."""
+    if act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, act_sharding)
+    new_cache: Dict[str, Any] = {}
+    aux = jnp.float32(0.0)
+    for j, sub in enumerate(spec):
+        sp = block_params[f"sub{j}"]
+        sc = block_cache[f"sub{j}"] if block_cache is not None else None
+        ncache: Dict[str, Any] = {}
+        h = layers.apply_norm(cfg.norm, sp["norm1"], x)
+        if sub.mixer == "attn":
+            if mode == "decode":
+                out, kv = _run_attn(sp["attn"], h, cfg, positions=positions, causal=True,
+                                    q_chunk=q_chunk, cache_kv=(sc["k"], sc["v"]),
+                                    cache_index=cache_index)
+                ncache["k"], ncache["v"] = kv
+            else:
+                out, kv = _run_attn(sp["attn"], h, cfg, positions=positions,
+                                    causal=sub.causal, q_chunk=q_chunk,
+                                    collect_kv=mode == "prefill")
+                if mode == "prefill":
+                    ncache["k"], ncache["v"] = kv
+        else:  # mamba
+            if mode == "decode":
+                out, (conv, hstate) = mamba.decode_mamba(sp["mamba"], h, cfg, (sc["conv"], sc["h"]))
+                ncache["conv"], ncache["h"] = conv, hstate
+            else:
+                out, (conv, hstate) = mamba.apply_mamba(sp["mamba"], h, cfg, chunk=mamba_chunk)
+                if mode == "prefill":
+                    ncache["conv"], ncache["h"] = conv.astype(jnp.bfloat16), hstate
+        x = x + out
+
+        if sub.cross:
+            hc = layers.apply_norm(cfg.norm, sp["cross_norm"], x)
+            if mode == "decode":
+                kv = (sc["xk"], sc["xv"])
+                ncache["xk"], ncache["xv"] = kv  # pass through so cache structure persists
+            else:
+                kv = _cross_kv(sp["cross"], enc_out, cfg)
+                if mode == "prefill":
+                    ncache["xk"], ncache["xv"] = kv
+            out, _ = _run_attn(sp["cross"], hc, cfg, positions=positions, causal=False,
+                               q_chunk=q_chunk, kv_override=kv)
+            x = x + out
+
+        if sub.ffn != "none":
+            if mlp_sharding is not None:
+                # serving: replicate the tiny single-token activations so the
+                # FSDP-sharded FFN weights are consumed in place (partial
+                # matmul + small all-reduce) instead of gathered per layer
+                x = jax.lax.with_sharding_constraint(x, mlp_sharding)
+            h2 = layers.apply_norm(cfg.norm, sp["norm2"], x)
+            if sub.ffn == "moe":
+                out = moe.apply_moe(sp["moe"], h2, cfg)
+                if mode == "train":
+                    aux = aux + moe.load_balance_loss(sp["moe"]["router"], h2, cfg.moe_top_k)
+            else:
+                out = layers.apply_mlp(sp["mlp"], h2, cfg.act)
+            x = x + out
+        new_cache[f"sub{j}"] = ncache
+    return x, new_cache, aux
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _scan_blocks(params, x, cfg, *, mode, positions, q_chunk, mamba_chunk,
+                 cache=None, cache_index=None, enc_out=None, stack_key="layers",
+                 spec=None, act_sharding=None, mlp_sharding=None):
+    spec = spec or block_spec(cfg)
+
+    def body(carry, scanned):
+        xc, aux_c = carry
+        if cache is not None:
+            bp, bc = scanned
+        else:
+            bp, bc = scanned, None
+        xc, ncache, aux = _block_fn(bp, xc, cfg, spec, mode=mode, positions=positions,
+                                    q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+                                    block_cache=bc, cache_index=cache_index,
+                                    enc_out=enc_out, act_sharding=act_sharding,
+                                    mlp_sharding=mlp_sharding)
+        return (xc, aux_c + aux), ncache
+
+    policy = _remat_policy(cfg)
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    elif cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params[stack_key], cache) if cache is not None else params[stack_key]
+    if cfg.scan_layers:
+        (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    else:
+        carry = (x, jnp.float32(0.0))
+        outs = []
+        nb = jax.tree_util.tree_leaves(params[stack_key])[0].shape[0]
+        for i in range(nb):
+            sl = jax.tree.map(lambda a: a[i], xs)
+            carry, nc = body(carry, sl)
+            outs.append(nc)
+        x, aux = carry
+        new_cache = jax.tree.map(lambda *a: jnp.stack(a), *outs) if outs and outs[0] else None
+    return x, aux, new_cache
+
+
+def _encode(params, cfg, frames, q_chunk):
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    x = frames + _sinusoidal(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    spec = [SubLayer("attn", "mlp", causal=False)]
+    positions = jnp.arange(frames.shape[1])
+    x, _, _ = _scan_blocks(params["encoder"], x, cfg, mode="train", positions=positions,
+                           q_chunk=q_chunk, mamba_chunk=64, spec=spec)
+    return layers.apply_norm(cfg.norm, params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, extra: Optional[dict] = None,
+            *, mode: str = "train", cache=None, cache_index=None,
+            q_chunk: int = 512, mamba_chunk: int = 64, act_sharding=None,
+            mlp_sharding=None):
+    """Returns (hidden_states, new_cache, aux_loss)."""
+    x = _embed_tokens(params, cfg, tokens, extra)
+    enc_out = None
+    if cfg.is_encoder_decoder and mode != "decode":
+        enc_out = _encode(params, cfg, extra["frames"], q_chunk)
+    if mode == "decode":
+        positions = jnp.asarray(cache_index)
+        x_pos = positions[None] if positions.ndim == 0 else positions
+        positions = jnp.broadcast_to(x_pos, (1,))
+    else:
+        positions = jnp.arange(tokens.shape[1])
+    x, aux, new_cache = _scan_blocks(params, x, cfg, mode=mode, positions=positions,
+                                     q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+                                     cache=cache, cache_index=cache_index, enc_out=enc_out,
+                                     act_sharding=act_sharding, mlp_sharding=mlp_sharding)
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    return x, new_cache, aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+
+
+def loss_and_metrics(params, cfg: ModelConfig, batch: dict,
+                     *, q_chunk: int = 512, mamba_chunk: int = 64,
+                     aux_weight: float = 0.01, z_weight: float = 1e-4,
+                     act_sharding=None):
+    """Causal-LM loss. batch: tokens, targets, (loss_mask), (frames/patch_embeds)."""
+    x, _, aux = forward(params, cfg, batch["tokens"], batch, mode="train",
+                        q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+                        act_sharding=act_sharding)
+    logits = logits_from_hidden(params, cfg, x)  # (B, S, Vp) fp32
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    zloss = ((logz**2) * mask).sum() / denom
+    loss = ce + z_weight * zloss + aux_weight * aux
+    metrics = {"loss": loss, "ce": ce, "zloss": zloss, "aux": aux,
+               "accuracy": ((logits.argmax(-1) == targets) * mask).sum() / denom}
+    return loss, metrics
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, extra: Optional[dict] = None,
+            *, q_chunk: int = 512, mamba_chunk: int = 64, act_sharding=None):
+    """Run the prompt, return (last-token logits, cache ready for decode)."""
+    x, cache, _ = forward(params, cfg, tokens, extra, mode="prefill",
+                          q_chunk=q_chunk, mamba_chunk=mamba_chunk,
+                          act_sharding=act_sharding)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray, cache, cache_index,
+                *, q_chunk: int = 512, act_sharding=None, mlp_sharding=None):
+    """One token: tokens (B, 1), cache_index = #tokens already cached.
+
+    Returns (logits (B, Vp), new_cache).
+    """
+    x, new_cache, _ = forward(params, cfg, tokens, mode="decode", cache=cache,
+                              cache_index=cache_index, q_chunk=q_chunk,
+                              act_sharding=act_sharding, mlp_sharding=mlp_sharding)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    return logits[:, 0], new_cache

@@ -1,0 +1,2 @@
+from repro.optim.adam import AdamConfig, adam_init, adam_update  # noqa: F401
+from repro.optim.schedule import constant_lr, cosine_warmup  # noqa: F401

@@ -1,0 +1,94 @@
+"""AdamW in pure JAX (no optax available offline).
+
+Supports mixed precision: bf16 params with fp32 master copies + fp32 moments
+(``master_dtype``), or fully low-precision states for memory-limited configs
+(``moment_dtype="bfloat16"`` — used by the biggest assigned archs, see
+EXPERIMENTS.md §Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3          # paper Table 4: Adam, lr=0.001
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float = 0.0   # 0 => off
+    moment_dtype: str = "float32"
+    master_dtype: str = "float32"  # "" => update params in their own dtype
+
+
+def adam_init(params: Any, cfg: AdamConfig) -> dict:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+    }
+    if cfg.master_dtype:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.master_dtype)), params
+        )
+    return state
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adam_update(
+    params: Any,
+    grads: Any,
+    state: dict,
+    cfg: AdamConfig,
+    lr_schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = cfg.lr if lr_schedule is None else lr_schedule(step)
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd_moment(m, g, beta):
+        return (beta * m.astype(jnp.float32) + (1 - beta) * g.astype(jnp.float32)).astype(mdt)
+
+    new_m = jax.tree.map(lambda m, g: upd_moment(m, g, b1), state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: upd_moment(v, g * g, b2), state["v"], grads)
+
+    masters = state.get("master", params)
+
+    def upd_param(p, m, v):
+        mhat = m.astype(jnp.float32) / bc1
+        vhat = v.astype(jnp.float32) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_masters = jax.tree.map(upd_param, masters, new_m, new_v)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if "master" in state:
+        new_state["master"] = new_masters
+        new_params = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), new_masters, params
+        )
+    else:
+        new_params = new_masters
+    stats = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, stats

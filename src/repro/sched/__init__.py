@@ -1,0 +1,3 @@
+from repro.sched.placement import FleetState, PlacementEngine, JobSpec  # noqa: F401
+from repro.sched.elastic import consolidation_plan  # noqa: F401
+from repro.sched.straggler import StragglerMonitor  # noqa: F401

@@ -1,0 +1,111 @@
+"""SDQN-driven job→host placement for the training/serving runtime.
+
+This is the framework-integration of the paper's technique: the same
+Q-network that schedules pods in the reproduction schedules *jobs* (training
+replicas, serving replicas, data workers) onto fleet hosts.  Host state maps
+onto the six Table-2 features 1:1; scoring runs through the fused Pallas
+kernel (``repro.kernels.ops.sdqn_score``) so a 10^5-host fleet is scored in
+one kernel launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dqn, env as kenv
+from repro.core.types import EnvConfig
+from repro.kernels import ops
+
+
+class FleetState(NamedTuple):
+    """Host fleet, vectorized (same layout as the cluster env)."""
+
+    cpu_pct: jnp.ndarray       # (N,) current host utilization %
+    mem_pct: jnp.ndarray       # (N,)
+    job_util_pct: jnp.ndarray  # (N,) jobs / max_jobs * 100
+    healthy: jnp.ndarray       # (N,) {0, 1}
+    uptime_hours: jnp.ndarray  # (N,)
+    num_jobs: jnp.ndarray      # (N,)
+
+    def features(self) -> jnp.ndarray:
+        return jnp.stack(
+            [self.cpu_pct, self.mem_pct, self.job_util_pct,
+             self.healthy.astype(jnp.float32), self.uptime_hours,
+             self.num_jobs.astype(jnp.float32)], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    cpu_pct_demand: float = 5.0     # host-% one job replica adds
+    mem_pct_demand: float = 2.0
+    kind: str = "train"             # train | serve | data
+
+
+class PlacementEngine:
+    """Scores afterstates with a trained SDQN and binds jobs to hosts.
+
+    ``consolidate=True`` uses an SDQN-n-trained network: placements pack
+    onto the busiest feasible hosts, which feeds ``elastic.consolidation_plan``
+    with shut-down candidates (the paper's green-datacenter §6 narrative).
+    """
+
+    def __init__(self, qparams: dict, consolidate: bool = False,
+                 max_host_cpu_pct: float = 88.0, use_kernel: Optional[bool] = None):
+        self.qparams = qparams
+        self.consolidate = consolidate
+        self.max_host_cpu_pct = max_host_cpu_pct
+        self.use_kernel = use_kernel
+
+    def _score(self, feats: jnp.ndarray) -> jnp.ndarray:
+        mode = None if self.use_kernel is None else ("interpret" if self.use_kernel else "ref")
+        return ops.sdqn_score(kenv.normalize_features(feats), self.qparams, mode=mode)
+
+    def feasible(self, fleet: FleetState, job: JobSpec) -> jnp.ndarray:
+        return (
+            (fleet.healthy > 0.5)
+            & (fleet.cpu_pct + job.cpu_pct_demand <= self.max_host_cpu_pct)
+            & (fleet.mem_pct + job.mem_pct_demand <= 95.0)
+        )
+
+    def select(self, fleet: FleetState, job: JobSpec) -> Tuple[int, jnp.ndarray]:
+        """Pick the host for one job. Returns (host index, scores)."""
+        f = fleet.features()
+        delta = jnp.array([job.cpu_pct_demand, job.mem_pct_demand, 0.0, 0.0, 0.0, 1.0])
+        after = f + delta[None, :]      # afterstate of *each* host receiving the job
+        scores = self._score(after)
+        ok = self.feasible(fleet, job)
+        scores = jnp.where(ok, scores, -jnp.inf)
+        return int(jnp.argmax(scores)), scores
+
+    def place(self, fleet: FleetState, host: int, job: JobSpec) -> FleetState:
+        onehot = (jnp.arange(fleet.cpu_pct.shape[0]) == host)
+        return fleet._replace(
+            cpu_pct=fleet.cpu_pct + onehot * job.cpu_pct_demand,
+            mem_pct=fleet.mem_pct + onehot * job.mem_pct_demand,
+            num_jobs=fleet.num_jobs + onehot.astype(jnp.int32),
+        )
+
+    def place_batch(self, fleet: FleetState, jobs: int, job: JobSpec) -> Tuple[FleetState, np.ndarray]:
+        hosts = []
+        for _ in range(jobs):
+            h, _ = self.select(fleet, job)
+            fleet = self.place(fleet, h, job)
+            hosts.append(h)
+        return fleet, np.asarray(hosts)
+
+
+def fresh_fleet(n_hosts: int, key: Optional[jax.Array] = None) -> FleetState:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    return FleetState(
+        cpu_pct=2.0 + 8.0 * jax.random.uniform(k1, (n_hosts,)),
+        mem_pct=jnp.full((n_hosts,), 5.0),
+        job_util_pct=jnp.zeros((n_hosts,)),
+        healthy=jnp.ones((n_hosts,)),
+        uptime_hours=5.0 + 100.0 * jax.random.uniform(k2, (n_hosts,)),
+        num_jobs=jnp.zeros((n_hosts,), jnp.int32),
+    )

@@ -1,0 +1,58 @@
+"""Straggler detection and evacuation for the distributed runtime.
+
+A host whose recent step times drift beyond ``threshold``× the fleet median
+(or whose health flag drops) is declared a straggler; its jobs are re-placed
+through the SDQN engine — the Table-3 health term (−100) guarantees the
+Q-scores of unhealthy hosts are never selected, so evacuation and avoidance
+share one mechanism.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.sched.placement import FleetState, JobSpec, PlacementEngine
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 16, threshold: float = 1.8):
+        self.window = window
+        self.threshold = threshold
+        self._times: Dict[int, collections.deque] = {}
+
+    def record(self, host: int, step_time_s: float):
+        self._times.setdefault(host, collections.deque(maxlen=self.window)).append(step_time_s)
+
+    def stragglers(self) -> List[int]:
+        if not self._times:
+            return []
+        medians = {h: float(np.median(t)) for h, t in self._times.items() if len(t) >= 4}
+        if len(medians) < 2:
+            return []
+        fleet_median = float(np.median(list(medians.values())))
+        return [h for h, m in medians.items() if m > self.threshold * fleet_median]
+
+    def evacuate(self, engine: PlacementEngine, fleet: FleetState, job: JobSpec,
+                 hosts: Optional[List[int]] = None) -> tuple:
+        """Mark stragglers unhealthy and re-place their jobs. Returns
+        (new_fleet, migrations)."""
+        hosts = self.stragglers() if hosts is None else hosts
+        migrations = []
+        for host in hosts:
+            n_jobs = int(fleet.num_jobs[host])
+            fleet = fleet._replace(healthy=fleet.healthy.at[host].set(0.0))
+            for _ in range(n_jobs):
+                tgt, scores = engine.select(fleet, job)
+                if not bool(np.isfinite(np.asarray(scores)[tgt])):
+                    break
+                fleet = engine.place(fleet, tgt, job)
+                migrations.append((host, tgt))
+            onehot = (np.arange(fleet.cpu_pct.shape[0]) == host)
+            fleet = fleet._replace(
+                cpu_pct=fleet.cpu_pct - onehot * job.cpu_pct_demand * n_jobs,
+                mem_pct=fleet.mem_pct - onehot * job.mem_pct_demand * n_jobs,
+                num_jobs=fleet.num_jobs - (onehot * n_jobs).astype(np.int32),
+            )
+        return fleet, migrations

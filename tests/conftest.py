@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single CPU device (the 512-device override is ONLY for
+# the dry-run process — see src/repro/launch/dryrun.py).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

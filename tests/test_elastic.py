@@ -1,0 +1,64 @@
+"""Elastic/fault-tolerance integration: checkpoint resharding across mesh
+changes, straggler-driven evacuation preserving job counts, and the
+consolidation→restore loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import restore, save
+from repro.core import dqn
+from repro.sched import FleetState, JobSpec, PlacementEngine, StragglerMonitor
+from repro.sched.placement import fresh_fleet
+
+
+class TestElasticRestore:
+    def test_restore_onto_different_sharding(self, tmp_path):
+        """A checkpoint written unsharded restores onto an explicit sharding
+        (the single-device analogue of mesh-change restarts)."""
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        save(str(tmp_path), 0, tree)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        shardings = {"w": NamedSharding(mesh, P("data", "model"))}
+        like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+        out = restore(str(tmp_path), like, shardings=shardings)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+        assert out["w"].sharding == shardings["w"]
+
+    def test_restore_survives_extra_leaves_on_disk(self, tmp_path):
+        """Forward-compat: restoring a subtree of a larger checkpoint."""
+        save(str(tmp_path), 0, {"a": jnp.ones(3), "b": jnp.zeros(2)})
+        out = restore(str(tmp_path), {"a": jax.ShapeDtypeStruct((3,), jnp.float32)})
+        assert float(out["a"].sum()) == 3.0
+
+
+class TestFailureRecoveryLoop:
+    def test_straggler_then_consolidation(self):
+        """Evacuate a straggler, then consolidate — job conservation holds."""
+        engine = PlacementEngine(dqn.init_qnet(jax.random.PRNGKey(0)))
+        fleet = fresh_fleet(8, jax.random.PRNGKey(1))
+        job = JobSpec(cpu_pct_demand=3.0)
+        fleet, _ = engine.place_batch(fleet, 24, job)
+        total = int(fleet.num_jobs.sum())
+
+        mon = StragglerMonitor(window=8, threshold=1.5)
+        for _ in range(8):
+            for h in range(8):
+                mon.record(h, 3.0 if h == 5 else 1.0)
+        assert mon.stragglers() == [5]
+        fleet, migrations = mon.evacuate(engine, fleet, job)
+        assert int(fleet.num_jobs.sum()) == total  # jobs conserved
+        assert int(fleet.num_jobs[5]) == 0
+
+        from repro.sched.elastic import consolidation_plan
+
+        plan = consolidation_plan(engine, fleet, job, idle_threshold_jobs=2)
+        assert plan.projected_avg_cpu_after <= plan.projected_avg_cpu_before + 1e-3
+
+    def test_unhealthy_fleet_rejects_placement(self):
+        engine = PlacementEngine(dqn.init_qnet(jax.random.PRNGKey(0)))
+        fleet = fresh_fleet(4)
+        fleet = fleet._replace(healthy=jnp.zeros(4))
+        host, scores = engine.select(fleet, JobSpec())
+        assert not bool(np.isfinite(np.asarray(scores)).any())

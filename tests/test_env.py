@@ -1,0 +1,127 @@
+"""Environment unit + hypothesis property tests (cluster invariants)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import env as kenv
+from repro.core.types import paper_cluster, training_cluster
+
+
+CFG = paper_cluster()
+
+
+def fresh(seed=0, cfg=CFG):
+    return kenv.reset(jax.random.PRNGKey(seed), cfg)
+
+
+class TestReset:
+    def test_shapes_and_ranges(self):
+        st_ = fresh()
+        assert st_.n_nodes == CFG.n_nodes
+        assert bool(jnp.all(st_.base_cpu >= 0))
+        assert bool(jnp.all(st_.cpu_requested <= 0.98 * CFG.cpu_capacity))
+        assert bool(jnp.all(st_.exp_pods == 0))
+        # bookings come from tenant pods
+        np.testing.assert_array_equal(
+            np.asarray(st_.num_pods),
+            (np.asarray(st_.cpu_requested) / CFG.pod_cpu_request).astype(np.int32),
+        )
+
+    def test_profiles_are_permutations(self):
+        bases = sorted(np.asarray(fresh(1).base_cpu).tolist())
+        expect = sorted(CFG.base_cpu_profile)
+        assert np.allclose(bases, expect, atol=CFG.base_cpu_jitter + 1e-3)
+
+    def test_randomized_training_reset(self):
+        tcfg = training_cluster()
+        st_ = kenv.reset(jax.random.PRNGKey(3), tcfg)
+        assert int(st_.exp_pods.sum()) >= 0
+        cached = np.asarray(st_.image_cached)
+        has_pods = np.asarray(st_.exp_pods) > 0
+        assert bool(np.all(cached[has_pods]))  # pods imply a warm image
+
+
+class TestPlace:
+    def test_placement_updates_counts(self):
+        st_ = fresh()
+        pod = kenv.default_pod(CFG)
+        st2 = kenv.place(st_, jnp.int32(1), pod, CFG)
+        assert int(st2.exp_pods[1]) == 1
+        assert int(st2.num_pods[1]) == int(st_.num_pods[1]) + 1
+        assert float(st2.cpu_requested[1]) == pytest.approx(
+            float(st_.cpu_requested[1]) + CFG.pod_cpu_request)
+        assert bool(st2.image_cached[1])
+
+    def test_cold_pull_costs_more_than_warm(self):
+        st_ = fresh()
+        pod = kenv.default_pod(CFG)
+        st_cold = kenv.place(st_, jnp.int32(0), pod, CFG)
+        cold_spike = float(st_cold.startup_cpu[0])
+        st_warm = kenv.place(st_cold, jnp.int32(0), pod, CFG)
+        warm_spike = float(st_warm.startup_cpu[0]) - cold_spike
+        assert cold_spike >= CFG.image_pull_cost
+        assert warm_spike == pytest.approx(CFG.warm_start_cost)
+
+    def test_concurrent_pulls_inflate(self):
+        st_ = fresh()
+        pod = kenv.default_pod(CFG)
+        st1 = kenv.place(st_, jnp.int32(0), pod, CFG)
+        st2 = kenv.place(st1, jnp.int32(1), pod, CFG)
+        first = float(st1.startup_cpu[0])
+        second = float(st2.startup_cpu[1])
+        assert second > first  # concurrency multiplier
+
+    def test_tick_decays_startup(self):
+        st_ = fresh()
+        pod = kenv.default_pod(CFG)
+        st_ = kenv.place(st_, jnp.int32(0), pod, CFG)
+        before = float(st_.startup_cpu[0])
+        st_ = kenv.tick(st_, CFG, 2.0)
+        assert float(st_.startup_cpu[0]) == pytest.approx(before * CFG.startup_decay)
+        assert float(st_.uptime_hours[0]) > 0
+
+
+class TestMetric:
+    def test_paper_example_uniform_vs_consolidated(self):
+        """Paper §4.3.2: (20+20+20)/3 = 20 vs (10+25+20)/3 = 18.3."""
+        st_ = fresh()
+        uniform = jnp.array([800.0, 800.0, 800.0, 800.0])
+        st_u = st_._replace(base_cpu=uniform, startup_cpu=jnp.zeros(4))
+        m = float(kenv.average_cpu_utilization(st_u, CFG))
+        assert m == pytest.approx(20.0, abs=0.5)
+
+    def test_cpu_capped_at_capacity(self):
+        st_ = fresh()
+        st_ = st_._replace(base_cpu=jnp.full((4,), 99999.0))
+        assert bool(jnp.all(kenv.cpu_pct(st_, CFG) <= 100.0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    actions=st.lists(st.integers(0, 3), min_size=1, max_size=30),
+)
+def test_property_env_invariants(seed, actions):
+    """Conservation + monotonicity under arbitrary placements."""
+    cfg = CFG
+    state = kenv.reset(jax.random.PRNGKey(seed), cfg)
+    pod = kenv.default_pod(cfg)
+    placed = 0
+    for a in actions:
+        ok = kenv.feasible(state, pod, cfg)
+        if not bool(ok[a]):
+            continue
+        state = kenv.place(state, jnp.int32(a), pod, cfg)
+        state = kenv.tick(state, cfg, cfg.schedule_dt_s)
+        placed += 1
+    assert int(state.exp_pods.sum()) == placed           # every placement counted
+    assert bool(jnp.all(state.exp_pods >= 0))
+    assert bool(jnp.all(state.cpu_requested <= state.cpu_capacity + 1e-3))
+    feats = kenv.features(state, cfg)
+    assert feats.shape == (cfg.n_nodes, 6)
+    assert bool(jnp.all(jnp.isfinite(feats)))
+    assert bool(jnp.all(feats[:, 0] <= 100.0 + 1e-3))    # cpu% capped

@@ -1,0 +1,117 @@
+"""Pallas kernel correctness sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dqn
+from repro.kernels import ops, ref
+from repro.models import layers as mlayers
+from repro.models import mamba as mmamba
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("b,sq,skv,hq,hkv,d", [
+    (1, 64, 64, 4, 4, 32),      # MHA square
+    (2, 128, 128, 4, 2, 32),    # GQA
+    (2, 64, 128, 8, 1, 16),     # MQA, cross-length
+    (1, 256, 256, 2, 2, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, sq, skv, hq, hkv, d, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, mode="interpret",
+                              block_q=32, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               **tol(dtype))
+
+
+@pytest.mark.parametrize("b,hq,hkv,skv,d", [
+    (1, 4, 4, 128, 32),
+    (2, 8, 2, 256, 64),
+    (3, 4, 1, 512, 16),
+])
+@pytest.mark.parametrize("kv_len", [1, 17, -1])  # -1 = full
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, hq, hkv, skv, d, kv_len, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, skv, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, skv, d), dtype)
+    n = jnp.int32(skv if kv_len == -1 else kv_len)
+    out = ops.decode_attention(q, k, v, n, mode="interpret", block_k=64)
+    want = ref.decode_attention_ref(q, k, v, n)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               **tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,di,n", [(1, 32, 8, 4), (2, 64, 16, 8), (1, 128, 32, 16)])
+@pytest.mark.parametrize("block_s", [16, 32])
+def test_mamba_scan_sweep(b, s, di, n, block_s):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    x = jax.random.normal(ks[0], (b, s, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)) * 0.3 - 1.0)
+    a = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    dsk = jnp.ones((di,))
+    h0 = jax.random.normal(ks[5], (b, di, n)) * 0.1
+    y, hT = ops.mamba_scan(x, dt, a, bm, cm, dsk, h0, mode="interpret",
+                           block_d=max(di // 2, 4), block_s=block_s)
+    y_ref, h_ref = ref.mamba_scan_ref(x, dt, a, bm, cm, dsk, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=4e-5, atol=4e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h_ref), rtol=4e-5, atol=4e-5)
+
+
+@pytest.mark.parametrize("n", [1, 63, 128, 1000])
+def test_sdqn_score_sweep(n):
+    params = dqn.init_qnet(jax.random.PRNGKey(3))
+    feats = jax.random.normal(jax.random.PRNGKey(4), (n, 6))
+    out = ops.sdqn_score(feats, params, mode="interpret", block_n=64)
+    want = ref.sdqn_score_ref(feats, params["w1"], params["b1"], params["w2"], params["b2"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+class TestXlaPathsMatchOracles:
+    """The jnp fallbacks used on CPU/dry-run must agree with the oracles too."""
+
+    def test_chunked_attention(self):
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = jax.random.normal(ks[0], (2, 96, 4, 16))
+        k = jax.random.normal(ks[1], (2, 96, 2, 16))
+        v = jax.random.normal(ks[2], (2, 96, 2, 16))
+        out = mlayers.attention(q, k, v, causal=True, q_chunk=32)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+    def test_chunked_attention_non_divisible(self):
+        ks = jax.random.split(jax.random.PRNGKey(6), 3)
+        q = jax.random.normal(ks[0], (1, 150, 2, 16))  # 150 % 32 != 0 (whisper case)
+        k = jax.random.normal(ks[1], (1, 150, 2, 16))
+        v = jax.random.normal(ks[2], (1, 150, 2, 16))
+        out = mlayers.attention(q, k, v, causal=False, q_chunk=32)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+    def test_chunked_selective_scan(self):
+        ks = jax.random.split(jax.random.PRNGKey(7), 6)
+        b, s, di, n = 2, 64, 8, 4
+        x = jax.random.normal(ks[0], (b, s, di)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)) * 0.3 - 1.0)
+        a = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+        bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+        cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+        dsk = jnp.ones((di,))
+        h0 = jnp.zeros((b, di, n))
+        y, hT = mmamba.selective_scan(x, dt, a, bm, cm, dsk, h0, chunk=16)
+        y_ref, h_ref = ref.mamba_scan_ref(x, dt, a, bm, cm, dsk, h0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=4e-5, atol=4e-5)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(h_ref), rtol=4e-5, atol=4e-5)

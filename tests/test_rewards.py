@@ -1,0 +1,84 @@
+"""Unit tests for the Table-3 / Table-5 reward functions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rewards
+
+
+def feats(cpu=30.0, mem=1.0, pod_util=10.0, health=1.0, uptime=50.0, pods=5.0):
+    return jnp.array([cpu, mem, pod_util, health, uptime, pods], jnp.float32)
+
+
+class TestNodePoints:
+    def test_base_and_bands(self):
+        # cpu<40 (-10), mem<40 (-10), pod_util outside [60,90] (-10), uptime>=24 (+5)
+        assert float(rewards.node_points(feats())) == 100 - 10 - 10 - 10 + 5
+
+    def test_cpu_in_band(self):
+        r = rewards.node_points(feats(cpu=55.0))
+        assert float(r) == 100 + 10 - 10 - 10 + 5
+
+    def test_cpu_above_threshold_penalty(self):
+        r75 = rewards.node_points(feats(cpu=75.0))
+        r85 = rewards.node_points(feats(cpu=85.0))
+        # -2 points per percent above 70
+        assert float(r75) - float(r85) == pytest.approx(20.0)
+
+    def test_unhealthy_kills_score(self):
+        r = rewards.node_points(feats(health=0.0))
+        assert float(r) <= 0.0
+
+    def test_uptime_bonus(self):
+        young = rewards.node_points(feats(uptime=2.0))
+        old = rewards.node_points(feats(uptime=25.0))
+        assert float(old) - float(young) == pytest.approx(10.0)
+
+    def test_pod_util_band(self):
+        inband = rewards.node_points(feats(pod_util=75.0))
+        outband = rewards.node_points(feats(pod_util=10.0))
+        assert float(inband) - float(outband) == pytest.approx(30.0)
+
+
+class TestSdqnReward:
+    def test_distribution_term(self):
+        after = jnp.stack([feats(pods=1), feats(pods=1), feats(pods=0), feats(pods=0)])
+        exp1 = jnp.array([1, 1, 0, 0])
+        exp2 = jnp.array([1, 1, 1, 1])
+        r2 = rewards.sdqn_reward(after, jnp.int32(0), exp_pods=exp1)
+        r4 = rewards.sdqn_reward(after, jnp.int32(0), exp_pods=exp2)
+        assert float(r4) - float(r2) == pytest.approx(10.0)  # +5 per extra node
+
+    def test_efficiency_shaping_penalizes_cpu_increase(self):
+        before = jnp.stack([feats(cpu=10.0)] * 4)
+        after_small = jnp.stack([feats(cpu=11.0)] + [feats(cpu=10.0)] * 3)
+        after_big = jnp.stack([feats(cpu=51.0)] + [feats(cpu=10.0)] * 3)
+        exp = jnp.array([1, 0, 0, 0])
+        r_small = rewards.sdqn_reward(after_small, jnp.int32(1), exp_pods=exp,
+                                      efficiency_weight=10.0, before_feats=before)
+        r_big = rewards.sdqn_reward(after_big, jnp.int32(1), exp_pods=exp,
+                                    efficiency_weight=10.0, before_feats=before)
+        assert float(r_small) > float(r_big)
+
+
+class TestSdqnNReward:
+    def test_top2_bonus_and_penalty(self):
+        after = jnp.stack([feats()] * 4)
+        before = after
+        ok = jnp.array([True, True, True, True])
+        exp_before = jnp.array([10, 8, 1, 0])
+        r_top = rewards.sdqn_n_reward(after, before, ok, jnp.int32(0), 2,
+                                      exp_pods_before=exp_before)
+        r_out = rewards.sdqn_n_reward(after, before, ok, jnp.int32(3), 2,
+                                      exp_pods_before=exp_before)
+        assert float(r_top) - float(r_out) == pytest.approx(70.0)  # +20 vs -50
+
+    def test_fallback_when_few_candidates(self):
+        after = jnp.stack([feats()] * 4)
+        ok = jnp.array([True, False, False, False])
+        exp_before = jnp.array([3, 0, 0, 0])
+        r = rewards.sdqn_n_reward(after, after, ok, jnp.int32(0), 2,
+                                  exp_pods_before=exp_before)
+        r_empty = rewards.sdqn_n_reward(after, after, ok, jnp.int32(0), 2,
+                                        exp_pods_before=jnp.zeros(4, jnp.int32))
+        assert float(r) - float(r_empty) == pytest.approx(30.0)  # +20 vs -10

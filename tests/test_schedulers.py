@@ -1,0 +1,115 @@
+"""Scheduler policy tests: kube baseline, SDQN machinery, selection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, dqn, env as kenv, schedulers
+from repro.core.types import paper_cluster
+
+CFG = paper_cluster()
+
+
+class TestKubeScheduler:
+    def test_prefers_least_requested(self):
+        state = kenv.reset(jax.random.PRNGKey(0), CFG)
+        pod = kenv.default_pod(CFG)
+        a = baselines.kube_select(jax.random.PRNGKey(1), state, pod, CFG)
+        requested = np.asarray(state.cpu_requested)
+        assert int(a) == int(np.argmin(requested))
+
+    def test_respects_filtering(self):
+        state = kenv.reset(jax.random.PRNGKey(0), CFG)
+        pod = kenv.default_pod(CFG)
+        # block every node but #2 via health
+        state = state._replace(healthy=jnp.array([False, False, True, False]))
+        for s in range(5):
+            a = baselines.kube_select(jax.random.PRNGKey(s), state, pod, CFG)
+            assert int(a) == 2
+
+    def test_episode_runs(self):
+        sel = schedulers.make_kube_selector(CFG)
+        _, dist, metric = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        assert int(dist.sum()) >= 50  # includes tenant pods
+        assert 5.0 < float(metric) < 60.0
+
+
+class TestDQN:
+    def test_qnet_shapes(self):
+        params = dqn.init_qnet(jax.random.PRNGKey(0))
+        q = dqn.qvalues(params, jnp.zeros((7, 6)))
+        assert q.shape == (7,)
+
+    def test_training_reduces_loss(self):
+        params, opt = dqn.init_train_state(jax.random.PRNGKey(0))
+        feats = jax.random.normal(jax.random.PRNGKey(1), (256, 6))
+        targets = feats[:, 0] * 3.0 - feats[:, 4]
+        first = None
+        step = jax.jit(dqn.train_step)
+        for _ in range(300):
+            params, opt, loss, _ = step(params, opt, feats, targets)
+            first = float(loss) if first is None else first
+        assert float(loss) < first * 0.1
+
+    def test_pallas_kernel_matches_dqn(self):
+        from repro.kernels import ops
+
+        params = dqn.init_qnet(jax.random.PRNGKey(0))
+        feats = jax.random.normal(jax.random.PRNGKey(1), (300, 6))
+        np.testing.assert_allclose(
+            np.asarray(ops.sdqn_score(feats, params, mode="interpret", block_n=64)),
+            np.asarray(dqn.qvalues(params, feats)),
+            rtol=2e-5, atol=2e-5,
+        )
+
+
+class TestSelectors:
+    def test_masked_argmax_respects_mask(self):
+        scores = jnp.array([5.0, 10.0, 1.0, 0.0])
+        ok = jnp.array([True, False, True, True])
+        a = schedulers.masked_argmax(jax.random.PRNGKey(0), scores, ok, 0.0)
+        assert int(a) == 0
+
+    def test_epsilon_explores(self):
+        scores = jnp.array([100.0, 0.0, 0.0, 0.0])
+        ok = jnp.ones(4, bool)
+        picks = {
+            int(schedulers.masked_argmax(jax.random.PRNGKey(s), scores, ok, 1.0))
+            for s in range(40)
+        }
+        assert len(picks) > 1  # pure exploration reaches several nodes
+
+    def test_sdqn_selector_runs_episode(self):
+        qp = dqn.init_qnet(jax.random.PRNGKey(0))
+        sel = schedulers.make_sdqn_selector(qp, CFG)
+        _, dist, metric = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        assert float(metric) > 0
+
+    def test_unhealthy_node_never_selected(self):
+        qp = dqn.init_qnet(jax.random.PRNGKey(0))
+        state = kenv.reset(jax.random.PRNGKey(0), CFG)
+        state = state._replace(healthy=jnp.array([True, True, False, True]))
+        pod = kenv.default_pod(CFG)
+        sel = schedulers.make_sdqn_selector(qp, CFG)
+        for s in range(8):
+            assert int(sel(jax.random.PRNGKey(s), state, pod)) != 2
+
+
+class TestNeuralBaselines:
+    def test_lstm_and_transformer_score_shapes(self):
+        feats = jax.random.normal(jax.random.PRNGKey(0), (5, 6))
+        lstm = baselines.init_lstm(jax.random.PRNGKey(1))
+        tr = baselines.init_transformer(jax.random.PRNGKey(2))
+        assert baselines.lstm_score(lstm, feats).shape == (5,)
+        assert baselines.transformer_score(tr, feats).shape == (5,)
+
+    def test_regression_trainer_converges(self):
+        feats = jax.random.normal(jax.random.PRNGKey(0), (512, 6))
+        targets = 2.0 * feats[:, 1] + 0.5
+        params, opt = baselines.init_regression_state(baselines.init_lstm, jax.random.PRNGKey(1))
+        step = jax.jit(baselines.make_regression_trainer(baselines.lstm_score))
+        losses = []
+        for _ in range(600):
+            params, opt, loss = step(params, opt, feats, targets)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.5

@@ -1,0 +1,129 @@
+"""Launch-layer tests: sharding rules, input specs, roofline machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch import shapes as shp
+from repro.launch import sharding
+from repro.roofline import flops as rflops
+from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms
+
+
+def fake_mesh(shape=(4, 2), axes=("data", "model")):
+    """Spec computation only needs axis names/sizes — AbstractMesh suffices."""
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+class TestParamSpecs:
+    @pytest.mark.parametrize("arch", list(list_archs()))
+    def test_specs_divisible_everywhere(self, arch):
+        """Every sharded dim must divide by its mesh axes (the rule's job)."""
+        cfg = get_config(arch)
+        mesh = fake_mesh((16, 16))
+        params_shape = shp.params_specs(cfg)
+        specs = sharding.param_specs(params_shape, cfg, mesh)
+
+        def check(leaf, spec):
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+                if ax is None:
+                    continue
+                size = mesh.shape[ax] if isinstance(ax, str) else int(
+                    np.prod([mesh.shape[a] for a in ax]))
+                assert dim % size == 0, (arch, leaf.shape, spec)
+
+        jax.tree.map(check, params_shape, specs,
+                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    def test_expert_parallel_vs_tp_within_expert(self):
+        mesh = fake_mesh((16, 16))
+        dbrx = get_config("dbrx-132b")      # 16 experts -> EP
+        qwen = get_config("qwen2-moe-a2.7b")  # 60 experts -> TP-within-expert
+        s_dbrx = sharding.param_specs(shp.params_specs(dbrx), dbrx, mesh)
+        s_qwen = sharding.param_specs(shp.params_specs(qwen), qwen, mesh)
+        assert s_dbrx["layers"]["sub0"]["moe"]["w_gate"][1] == "model"
+        assert s_qwen["layers"]["sub0"]["moe"]["w_gate"][1] is None
+        assert s_qwen["layers"]["sub0"]["moe"]["w_gate"][3] == "model"
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("shape_name", list(SHAPES))
+    def test_all_cells_have_specs(self, shape_name):
+        for arch in list_archs():
+            cfg = get_config(arch)
+            shape = SHAPES[shape_name]
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                assert shape_name == "long_500k" and not cfg.sub_quadratic
+                continue
+            specs = shp.input_specs(cfg, shape)
+            assert "batch" in specs
+            if shape.kind == "train":
+                assert specs["batch"]["tokens"].shape == (shape.global_batch, shape.seq_len)
+            elif shape.kind == "prefill":
+                assert "targets" not in specs["batch"]
+            else:
+                assert specs["batch"]["tokens"].shape == (shape.global_batch, 1)
+                assert "cache" in specs and "index" in specs
+
+    def test_long_500k_runs_only_subquadratic(self):
+        runnable = [a for a in list_archs()
+                    if shape_applicable(get_config(a), SHAPES["long_500k"])[0]]
+        assert sorted(runnable) == ["falcon-mamba-7b", "jamba-1.5-large-398b"]
+
+    def test_modality_stubs_present(self):
+        wsp = shp.train_batch_specs(get_config("whisper-medium"), SHAPES["train_4k"])
+        assert wsp["frames"].shape == (256, 1500, 1024)
+        ivl = shp.train_batch_specs(get_config("internvl2-76b"), SHAPES["train_4k"])
+        assert ivl["patch_embeds"].shape == (256, 256, 8192)
+
+
+class TestRooflineMachinery:
+    def test_collective_parser_trip_counts(self):
+        hlo = """
+HloModule test
+
+%body.1 (arg: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %ag = f32[4,8]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[4,8]{1,0} all-reduce(%ag), to_apply=%add.1
+}
+
+%cond.1 (arg: (s32[], f32[4,8])) -> pred[] {
+  %c = s32[] constant(10)
+  %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main.9 (p: f32[4,8]) -> f32[4,8] {
+  %w = (s32[], f32[4,8]) while(%init), condition=%cond.1, body=%body.1
+  %ar2 = f32[16,16]{1,0} all-reduce(%y), to_apply=%add.1
+}
+"""
+        out = collective_bytes_from_hlo(hlo)
+        # 10 iterations x (128B ag + 128B ar) + one 1024B ar outside
+        assert out["per_op_bytes"]["all-gather"] == 10 * 4 * 8 * 4
+        assert out["per_op_bytes"]["all-reduce"] == 10 * 4 * 8 * 4 + 16 * 16 * 4
+        assert out["entry"].startswith("main")
+
+    def test_roofline_terms_dominance(self):
+        r = roofline_terms(n_chips=256, hlo_flops_global=1e18, model_flops=8e17,
+                           hbm_bytes_per_chip=1e9, collective_bytes_per_chip=1e9)
+        assert r["dominant"] == "compute"
+        assert 0 < r["roofline_fraction"] <= 1.0
+        assert r["useful_flops_ratio"] == pytest.approx(0.8)
+
+    def test_analytic_flops_close_to_6nd_for_dense(self):
+        """Implementation FLOPs >= 6ND and within ~2.2x for dense train."""
+        for arch in ("granite-8b", "llama3-405b", "command-r-plus-104b"):
+            cfg = get_config(arch)
+            shape = SHAPES["train_4k"]
+            got = rflops.cell_flops(cfg, shape, remat_full=True)
+            assert got["hlo_flops"] >= got["model_flops"] * 0.95
+            assert got["hlo_flops"] <= got["model_flops"] * 2.2, arch
+
+    def test_decode_flops_scale_with_batch(self):
+        cfg = get_config("granite-8b")
+        f1 = rflops.cell_flops(cfg, SHAPES["decode_32k"])
+        assert f1["hlo_flops"] > 0
+        assert f1["model_flops"] == 2 * cfg.active_param_count() * 128

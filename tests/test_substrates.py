@@ -1,0 +1,159 @@
+"""Optimizer, data pipeline, replay buffer, schedules, sched-layer tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dqn
+from repro.core.replay import replay_add, replay_init, replay_sample
+from repro.data import DataConfig, make_loader
+from repro.data.synthetic import synthetic_lm_tokens
+from repro.optim import AdamConfig, adam_init, adam_update
+from repro.optim.schedule import cosine_warmup
+from repro.sched import FleetState, JobSpec, PlacementEngine, StragglerMonitor
+from repro.sched.elastic import consolidation_plan
+from repro.sched.placement import fresh_fleet
+
+
+class TestAdam:
+    def test_quadratic_convergence(self):
+        cfg = AdamConfig(lr=0.1)
+        params = {"x": jnp.array([5.0, -3.0])}
+        state = adam_init(params, cfg)
+        for _ in range(200):
+            grads = {"x": 2 * params["x"]}
+            params, state, _ = adam_update(params, grads, state, cfg)
+        assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+    def test_grad_clipping(self):
+        cfg = AdamConfig(lr=1e-3, grad_clip_norm=1.0)
+        params = {"x": jnp.zeros(3)}
+        state = adam_init(params, cfg)
+        _, _, stats = adam_update(params, {"x": jnp.full((3,), 1e6)}, state, cfg)
+        assert float(stats["grad_norm"]) > 1e5  # reported pre-clip
+
+    def test_mixed_precision_master(self):
+        cfg = AdamConfig(lr=1e-2, master_dtype="float32")
+        params = {"x": jnp.zeros(4, jnp.bfloat16)}
+        state = adam_init(params, cfg)
+        assert state["master"]["x"].dtype == jnp.float32
+        params, state, _ = adam_update(params, {"x": jnp.ones(4, jnp.bfloat16)}, state, cfg)
+        assert params["x"].dtype == jnp.bfloat16
+
+    def test_bf16_moments(self):
+        cfg = AdamConfig(moment_dtype="bfloat16", master_dtype="")
+        params = {"x": jnp.zeros(4, jnp.bfloat16)}
+        state = adam_init(params, cfg)
+        assert state["m"]["x"].dtype == jnp.bfloat16
+        assert "master" not in state
+
+    def test_cosine_warmup_shape(self):
+        sched = cosine_warmup(1.0, 10, 100)
+        assert float(sched(jnp.int32(0))) == pytest.approx(0.0)
+        assert float(sched(jnp.int32(10))) == pytest.approx(1.0, abs=0.1)
+        assert float(sched(jnp.int32(100))) == pytest.approx(0.1, abs=0.02)
+
+
+class TestData:
+    def test_synthetic_deterministic(self):
+        a = synthetic_lm_tokens(jax.random.PRNGKey(0), 4, 64, 1000)
+        b = synthetic_lm_tokens(jax.random.PRNGKey(0), 4, 64, 1000)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.shape == (4, 64)
+        assert int(a.max()) < 1000
+
+    def test_loader_seekable(self):
+        cfg = DataConfig(batch=2, seq_len=16, vocab=100, seed=1)
+        it0 = make_loader(cfg, start_step=0)
+        _ = next(it0)
+        second = next(it0)
+        it1 = make_loader(cfg, start_step=1)
+        again = next(it1)
+        np.testing.assert_array_equal(np.asarray(second["tokens"]), np.asarray(again["tokens"]))
+        it0.close(), it1.close()
+
+    def test_memmap_loader(self, tmp_path):
+        path = str(tmp_path / "toks.bin")
+        np.arange(2000, dtype=np.uint16).tofile(path)
+        cfg = DataConfig(batch=2, seq_len=16, vocab=65536, token_file=path)
+        it = make_loader(cfg)
+        batch = next(it)
+        assert batch["tokens"].shape == (2, 16)
+        np.testing.assert_array_equal(
+            np.asarray(batch["targets"][:, :-1]), np.asarray(batch["tokens"][:, 1:]))
+        it.close()
+
+    def test_host_slicing(self):
+        cfg = DataConfig(batch=8, seq_len=8, vocab=50, host_index=1, host_count=4)
+        it = make_loader(cfg)
+        batch = next(it)
+        assert batch["tokens"].shape[0] == 2
+        it.close()
+
+
+class TestReplay:
+    @settings(max_examples=20, deadline=None)
+    @given(adds=st.lists(st.integers(1, 7), min_size=1, max_size=12))
+    def test_property_size_and_ptr(self, adds):
+        cap = 16
+        buf = replay_init(cap)
+        total = 0
+        for i, n in enumerate(adds):
+            feats = jnp.full((n, 6), float(i))
+            buf = replay_add(buf, feats, jnp.full((n,), float(i)))
+            total += n
+        assert int(buf.size) == min(total, cap)
+        assert 0 <= int(buf.ptr) < cap
+        f, t, w = replay_sample(buf, jax.random.PRNGKey(0), 8)
+        assert f.shape == (8, 6)
+        # sampled targets must come from what was added
+        vals = {float(i) for i in range(len(adds))}
+        assert set(np.asarray(t).tolist()) <= vals
+
+
+class TestSchedLayer:
+    def _engine(self):
+        return PlacementEngine(dqn.init_qnet(jax.random.PRNGKey(0)))
+
+    def test_placement_respects_ceiling(self):
+        eng = self._engine()
+        fleet = fresh_fleet(4)
+        fleet = fleet._replace(cpu_pct=jnp.array([86.0, 5.0, 5.0, 5.0]))
+        job = JobSpec(cpu_pct_demand=10.0)
+        host, scores = eng.select(fleet, job)
+        assert host != 0  # 86 + 10 > 88 ceiling
+
+    def test_place_batch_updates_load(self):
+        eng = self._engine()
+        fleet = fresh_fleet(4)
+        fleet, hosts = eng.place_batch(fleet, 12, JobSpec(cpu_pct_demand=5.0))
+        assert int(fleet.num_jobs.sum()) == 12
+        assert len(hosts) == 12
+
+    def test_consolidation_frees_hosts(self):
+        eng = self._engine()
+        n = 6
+        fleet = fresh_fleet(n)
+        # two nearly-idle hosts + capacity elsewhere
+        fleet = fleet._replace(
+            cpu_pct=jnp.array([40.0, 40.0, 6.0, 7.0, 30.0, 30.0]),
+            num_jobs=jnp.array([8, 8, 1, 1, 6, 6], jnp.int32),
+        )
+        plan = consolidation_plan(eng, fleet, JobSpec(cpu_pct_demand=4.0))
+        assert plan.hosts_freed >= 1
+        assert plan.projected_avg_cpu_after <= plan.projected_avg_cpu_before + 1e-3
+
+    def test_straggler_detection_and_evacuation(self):
+        mon = StragglerMonitor(window=8, threshold=1.5)
+        for t in range(8):
+            for h in range(4):
+                mon.record(h, 1.0 if h != 2 else 3.0)
+        assert mon.stragglers() == [2]
+        eng = self._engine()
+        fleet = fresh_fleet(4)
+        fleet = fleet._replace(num_jobs=jnp.array([2, 2, 3, 2], jnp.int32))
+        fleet2, migrations = mon.evacuate(eng, fleet, JobSpec(cpu_pct_demand=2.0))
+        assert len(migrations) == 3
+        assert int(fleet2.num_jobs[2]) == 0
+        assert all(dst != 2 for _, dst in migrations)

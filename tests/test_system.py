@@ -1,0 +1,96 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline integration test trains SDQN and SDQN-n from scratch (short
+budget), evaluates them on the paper cluster against the default scheduler,
+and asserts the paper's qualitative claims: both RL schedulers at or below
+default average CPU, and SDQN-n consolidating onto ~n=2 nodes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, env as kenv, schedulers, train_rl
+from repro.core.types import paper_cluster, training_cluster
+
+
+CFG = paper_cluster()
+
+
+def evaluate(select, trials=3, n_pods=50):
+    mets, dists = [], []
+    ep = jax.jit(lambda kk: kenv.run_episode(kk, CFG, select, n_pods))
+    for t in range(trials):
+        state, _, met = ep(jax.random.PRNGKey(100 + t))
+        mets.append(float(met))
+        dists.append(np.asarray(state.exp_pods))
+    return float(np.mean(mets)), dists
+
+
+@pytest.fixture(scope="module")
+def trained_policies():
+    tcfg = training_cluster()
+    rl = train_rl.RLConfig(variant="sdqn", episodes=250, n_envs=16, eps_end=0.05,
+                           batch_size=256, efficiency_weight=5.0)
+    qp, _ = train_rl.train_and_select(jax.random.PRNGKey(0), tcfg, CFG, rl,
+                                      n_seeds=3, val_trials=4)
+    rln = dataclasses.replace(rl, variant="sdqn_n", efficiency_weight=10.0)
+    qpn, _ = train_rl.train_and_select(jax.random.PRNGKey(1), tcfg, CFG, rln,
+                                       n_seeds=3, val_trials=4)
+    return qp, qpn
+
+
+class TestEndToEnd:
+    def test_sdqn_beats_or_matches_default(self, trained_policies):
+        qp, _ = trained_policies
+        d, _ = evaluate(schedulers.make_kube_selector(CFG))
+        s, _ = evaluate(schedulers.make_sdqn_selector(qp, CFG))
+        assert s <= d * 1.02, (s, d)  # at-or-below default (paper: -10%)
+
+    def test_sdqn_n_consolidates(self, trained_policies):
+        _, qpn = trained_policies
+        m, dists = evaluate(schedulers.make_sdqn_selector(qpn, CFG))
+        active = np.mean([(d > 0).sum() for d in dists])
+        assert active <= 3.2, dists  # paper: pods concentrated on ~2 nodes
+
+    def test_sdqn_n_saves_over_20pct_vs_default_trend(self, trained_policies):
+        _, qpn = trained_policies
+        d, _ = evaluate(schedulers.make_kube_selector(CFG))
+        s, _ = evaluate(schedulers.make_sdqn_selector(qpn, CFG))
+        # short-budget test: require a clear saving; the full benchmark
+        # (benchmarks/paper_tables.py) reproduces the >20% claim
+        assert s < d * 0.93, (s, d)
+
+    def test_all_pods_scheduled(self, trained_policies):
+        qp, qpn = trained_policies
+        for params in (qp, qpn):
+            _, dists = evaluate(schedulers.make_sdqn_selector(params, CFG), trials=2)
+            for dist in dists:
+                assert dist.sum() == 50
+
+
+class TestLiteralAblation:
+    def test_table4_bandit_mode_trains(self):
+        """The literal Table-4 update (no bootstrap, no shaping) must run."""
+        tcfg = training_cluster()
+        rl = train_rl.RLConfig(variant="sdqn", episodes=30, n_envs=4,
+                               bootstrap=False, efficiency_weight=0.0)
+        qp, metrics = jax.jit(lambda k: train_rl.train(k, tcfg, rl))(jax.random.PRNGKey(0))
+        assert np.isfinite(float(metrics["loss"][-1]))
+        sel = schedulers.make_sdqn_selector(qp, CFG)
+        _, dist, met = kenv.run_episode(jax.random.PRNGKey(5), CFG, sel, 50)
+        assert np.isfinite(float(met))
+
+
+class TestServeIntegration:
+    def test_serve_driver(self):
+        from repro.launch import serve as serve_mod
+
+        counts = serve_mod.main([
+            "--arch", "olmo-1b", "--smoke", "--replicas", "3",
+            "--requests", "12", "--wave-size", "4", "--gen-tokens", "4",
+            "--prompt-len", "8",
+        ])
+        assert counts.sum() == 3  # 3 waves routed
