@@ -8,10 +8,9 @@ bursts, disjoint from the benchmark trials) using the canonical presets.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import numpy as np
@@ -147,3 +146,17 @@ def literal_ablation():
     _, mets, mean, _, dt_us = _trials(schedulers.make_sdqn_selector(qp, CFG))
     print(f"\n--- Ablation: literal Table-4 (bandit, unshaped) SDQN: {mean:.2f}% ---")
     return "sdqn_literal", dt_us, mean
+
+
+def scenario_generalization(trials: int = 3, n_pods=None, train_episodes=None):
+    """Beyond-paper: one mixture-trained SDQN vs the default scheduler across
+    every registry scenario (the paper's closing claim — strategies must be
+    tailored per scenario — measured rather than asserted)."""
+    from benchmarks import scenario_bench
+
+    print("\n--- Scenario generalization: default vs mixture-trained SDQN ---")
+    return scenario_bench.sweep(
+        trials=trials,
+        n_pods=n_pods,
+        train_episodes=train_episodes or presets.SDQN_SCENARIO_MIX_PRESET.episodes,
+    )

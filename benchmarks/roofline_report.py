@@ -4,7 +4,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 
 def load_cells(dryrun_dir: str = "experiments/dryrun") -> List[dict]:

@@ -1,44 +1,123 @@
-"""Benchmark harness — one function per paper table + fleet-scale and
-roofline benches.  Prints ``name,us_per_call,derived`` CSV at the end.
+"""Benchmark harness — one function per paper table + scenario, fleet-scale
+and roofline benches.  Prints ``name,us_per_call,derived`` CSV at the end.
 
-    PYTHONPATH=src python -m benchmarks.run            # everything
-    PYTHONPATH=src python -m benchmarks.run --fast     # skip RL training
+    PYTHONPATH=src python -m benchmarks.run                     # everything
+    PYTHONPATH=src python -m benchmarks.run --fast              # skip RL training
+    PYTHONPATH=src python -m benchmarks.run --scenario spot-flaky
+    PYTHONPATH=src python -m benchmarks.run --smoke --json out.json   # CI job
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
+
+
+def _write_json(path: str, rows) -> None:
+    payload = {
+        "schema": "repro-bench-v1",
+        "python": platform.python_version(),
+        "argv": sys.argv[1:],
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {len(payload['rows'])} rows to {path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true", help="skip policy training benches")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--fast", action="store_true", help="skip policy training benches")
+    mode.add_argument("--scenario", metavar="NAME",
+                      help="run one registry scenario (see repro.scenarios)")
+    mode.add_argument("--list-scenarios", action="store_true",
+                      help="print the scenario registry and exit")
+    mode.add_argument("--smoke", action="store_true",
+                      help="CI-sized run: scenario sweep + hot-path benches, tiny configs")
+    ap.add_argument("--trials", type=int, default=None,
+                    help="episodes per measurement (default: 3, or 1 with --smoke)")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="override pods per episode (default: scenario's n_pods, "
+                         "or 20 with --smoke)")
+    ap.add_argument("--train-episodes", type=int, default=None,
+                    help="episodes for the mixture-trained SDQN policy "
+                         "(default: 120, or 12 with --smoke)")
+    ap.add_argument("--json", metavar="PATH", help="also dump rows as JSON")
     args = ap.parse_args()
+    for flag in ("trials", "pods", "train_episodes"):
+        val = getattr(args, flag)
+        if val is not None and val < 1:
+            ap.error(f"--{flag.replace('_', '-')} must be >= 1")
+    if args.fast and (args.pods is not None or args.train_episodes is not None):
+        ap.error("--fast skips the training/scenario benches; "
+                 "--pods/--train-episodes have no effect with it")
+
+    if args.list_scenarios:
+        from repro import scenarios
+
+        for name in scenarios.scenario_names():
+            scn = scenarios.get_scenario(name)
+            classes = "+".join(f"{c.count}x{c.name}" for c in scn.node_classes)
+            pods = "/".join(p.name for p in scn.pod_types)
+            print(f"{name:18s} nodes=[{classes}] pods=[{pods}] "
+                  f"arrival={scn.arrival.kind} n_pods={scn.n_pods}")
+        return
 
     rows = []
 
-    from benchmarks import roofline_report, sched_scale
+    if args.scenario:
+        from benchmarks import scenario_bench
+        from repro import scenarios
 
-    if not args.fast:
-        from benchmarks import paper_tables
+        try:  # validate only the name here: real bench errors must traceback
+            scenarios.get_scenario(args.scenario)
+        except KeyError as e:
+            ap.error(str(e.args[0]) if e.args else str(e))
+        rows += scenario_bench.bench_scenario(
+            args.scenario, trials=args.trials or 3, n_pods=args.pods,
+            train_episodes=args.train_episodes or 120)
+    elif args.smoke:
+        from benchmarks import scenario_bench, sched_scale
 
-        for fn in (paper_tables.table8, paper_tables.table9, paper_tables.table10,
-                   paper_tables.table11, paper_tables.table12):
-            name, us, derived = fn()
-            rows.append((f"paper_{fn.__name__}_{name}", us, derived))
-        (fname, us, derived), claims, _ = paper_tables.figure6()
-        rows.append((fname, us, derived))
-        rows.append(("claims_validated", 0.0,
-                     float(sum(claims.values())) / len(claims)))
-        name, us, derived = paper_tables.literal_ablation()
-        rows.append((name, us, derived))
+        rows += scenario_bench.smoke_rows(
+            trials=args.trials or 1, n_pods=args.pods or 20,
+            train_episodes=args.train_episodes or 12)
+        rows += sched_scale.afterstate_throughput()
+        rows += sched_scale.scoring_throughput()
+    else:
+        from benchmarks import roofline_report, sched_scale
 
-    rows += sched_scale.run_all()
-    rows += roofline_report.report(mesh="16x16")
+        if not args.fast:
+            from benchmarks import paper_tables
+
+            for fn in (paper_tables.table8, paper_tables.table9, paper_tables.table10,
+                       paper_tables.table11, paper_tables.table12):
+                name, us, derived = fn()
+                rows.append((f"paper_{fn.__name__}_{name}", us, derived))
+            (fname, us, derived), claims, _ = paper_tables.figure6()
+            rows.append((fname, us, derived))
+            rows.append(("claims_validated", 0.0,
+                         float(sum(claims.values())) / len(claims)))
+            name, us, derived = paper_tables.literal_ablation()
+            rows.append((name, us, derived))
+            rows += paper_tables.scenario_generalization(
+                trials=args.trials or 3, n_pods=args.pods,
+                train_episodes=args.train_episodes)
+
+        rows += sched_scale.run_all()
+        rows += roofline_report.report(mesh="16x16")
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        _write_json(args.json, rows)
 
 
 if __name__ == "__main__":

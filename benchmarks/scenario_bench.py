@@ -1,0 +1,89 @@
+"""Scenario benchmarks: run registry scenarios under the default
+kube-scheduler and a scenario-mixture-trained SDQN.
+
+    PYTHONPATH=src python -m benchmarks.run --scenario hetero-bigsmall
+    PYTHONPATH=src python -m benchmarks.run --smoke          # CI-sized sweep
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro import scenarios
+from repro.core import presets, schedulers, train_rl
+
+
+@functools.lru_cache(maxsize=None)
+def mixture_policy(episodes: int = 120):
+    """One Q-net trained across the standard scenario mixture (cached)."""
+    import dataclasses
+
+    rl = dataclasses.replace(presets.SDQN_SCENARIO_MIX_PRESET, episodes=episodes)
+    cfgs = scenarios.training_mixture(presets.SCENARIO_MIX_NAMES)
+    params, _ = train_rl.train_mixture(jax.random.PRNGKey(42), cfgs, rl)
+    return params
+
+
+def bench_scenario(
+    name: str,
+    trials: int = 3,
+    n_pods: Optional[int] = None,
+    train_episodes: int = 120,
+    policies: Tuple[str, ...] = ("kube", "sdqn"),
+) -> List[Tuple[str, float, float]]:
+    """CSV rows (name, us_per_episode, avg-CPU metric) for one scenario."""
+    env_cfg = scenarios.make_env(name)
+    rows = []
+    for policy in policies:
+        if policy == "kube":
+            sel = schedulers.make_kube_selector(env_cfg)
+        elif policy == "sdqn":
+            sel = schedulers.make_sdqn_selector(mixture_policy(train_episodes), env_cfg)
+        else:
+            raise ValueError(f"unknown policy {policy!r}; expected 'kube' or 'sdqn'")
+        ep = scenarios.scenario_episode(env_cfg, sel, n_pods)
+        jax.block_until_ready(ep(jax.random.PRNGKey(0)))  # compile outside the clock
+        t0 = time.time()
+        res = scenarios.evaluate_scenario(
+            jax.random.PRNGKey(100), env_cfg, sel, trials=trials, n_pods=n_pods,
+            episode=ep)
+        us = (time.time() - t0) / trials * 1e6
+        rows.append((f"scenario_{name}_{policy}", us, res["metric_mean"]))
+        print(f"  {name:18s} {policy:5s}  avg_cpu={res['metric_mean']:6.2f}%"
+              f" (+-{res['metric_std']:.2f})  placed={res['pods_placed_mean']:.0f}"
+              f"/{res['n_pods']:.0f}  nodes={res['n_nodes']:.0f}")
+    return rows
+
+
+def sweep(
+    trials: int = 3,
+    n_pods: Optional[int] = None,
+    train_episodes: int = 120,
+    policies: Tuple[str, ...] = ("kube", "sdqn"),
+    names: Optional[Tuple[str, ...]] = None,
+) -> List[Tuple[str, float, float]]:
+    """Every registry scenario under every policy."""
+    rows = []
+    print("\n--- scenario sweep (avg CPU %, lower = better) ---")
+    for name in names or scenarios.scenario_names():
+        rows += bench_scenario(name, trials=trials, n_pods=n_pods,
+                               train_episodes=train_episodes, policies=policies)
+    return rows
+
+
+def smoke_rows(
+    trials: int = 1,
+    n_pods: int = 20,
+    train_episodes: int = 12,
+) -> List[Tuple[str, float, float]]:
+    """CI-sized benchmark: tiny training, one trial, capped pod counts.
+
+    Excludes fleet-hetero (1024 nodes) to keep the smoke job under a minute
+    of compute; the full sweep covers it.
+    """
+    names = tuple(n for n in scenarios.scenario_names() if n != "fleet-hetero")
+    return sweep(trials=trials, n_pods=n_pods, train_episodes=train_episodes,
+                 names=names)

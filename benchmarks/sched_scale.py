@@ -3,8 +3,11 @@
 1. SDQN scoring throughput vs fleet size (the scheduler's hot loop) —
    XLA path vs the fused Pallas kernel in interpret mode (CPU container;
    on TPU the compiled kernel path is selected automatically).
-2. End-to-end placement throughput (pods/s) on a 1024-node cluster.
-3. On-device RL training throughput (Anakin-style, transitions/s).
+2. Afterstate feature construction: the O(N) incremental scorer vs the
+   vmap-of-place reference (O(N^2)) it replaced.
+3. End-to-end placement throughput (pods/s) on 1024-node clusters,
+   homogeneous and heterogeneous (fleet-hetero scenario).
+4. On-device RL training throughput (Anakin-style, transitions/s).
 """
 from __future__ import annotations
 
@@ -12,11 +15,10 @@ import time
 from typing import List, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import dqn, env as kenv, schedulers, train_rl
 from repro.core.types import fleet_cluster, training_cluster
+from repro.scenarios import make_env
 
 
 def _time(fn, *args, iters=20, warmup=3):
@@ -40,14 +42,53 @@ def scoring_throughput() -> List[Tuple[str, float, float]]:
     return rows
 
 
+def afterstate_throughput() -> List[Tuple[str, float, float]]:
+    """The scoring hot path: O(N) incremental afterstates vs vmap reference.
+
+    ``derived`` is nodes scored per second for the timed rows and the
+    measured speedup for the summary rows.  The reference materializes N
+    full cluster states per call, so it is only timed up to 2048 nodes.
+    """
+    rows = []
+    pod = kenv.default_pod(fleet_cluster(4))
+    fast_times = {}
+    for n in (1024, 4096, 16384):
+        cfg = fleet_cluster(n)
+        state = kenv.reset(jax.random.PRNGKey(0), cfg)
+        fast = jax.jit(lambda s, _cfg=cfg: kenv.hypothetical_place(s, pod, _cfg))
+        dt = _time(fast, state)
+        fast_times[n] = dt
+        rows.append((f"afterstate_incremental_n{n}", dt * 1e6, n / dt))
+    for n in (1024, 2048):
+        cfg = fleet_cluster(n)
+        state = kenv.reset(jax.random.PRNGKey(0), cfg)
+        ref = jax.jit(lambda s, _cfg=cfg: kenv.hypothetical_place_reference(s, pod, _cfg))
+        dt_ref = _time(ref, state, iters=5, warmup=2)
+        rows.append((f"afterstate_vmap_ref_n{n}", dt_ref * 1e6, n / dt_ref))
+        dt_fast = fast_times.get(n) or _time(
+            jax.jit(lambda s, _cfg=cfg: kenv.hypothetical_place(s, pod, _cfg)), state)
+        rows.append((f"afterstate_speedup_n{n}", 0.0, dt_ref / dt_fast))
+    return rows
+
+
 def placement_throughput() -> List[Tuple[str, float, float]]:
+    rows = []
     cfg = fleet_cluster(1024)
     qp = dqn.init_qnet(jax.random.PRNGKey(0))
     sel = schedulers.make_sdqn_selector(qp, cfg)
     n_pods = 200
     ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, n_pods)[2])
     dt = _time(ep, jax.random.PRNGKey(0), iters=3, warmup=1)
-    return [("sdqn_place_1024node_ep", dt * 1e6, n_pods / dt)]
+    rows.append(("sdqn_place_1024node_ep", dt * 1e6, n_pods / dt))
+
+    # heterogeneous 1024-node pool with a mixed Poisson stream
+    hcfg = make_env("fleet-hetero")
+    hsel = schedulers.make_sdqn_selector(qp, hcfg)
+    hn = hcfg.scenario.n_pods
+    hep = jax.jit(lambda kk: kenv.run_episode(kk, hcfg, hsel, hn)[2])
+    dt = _time(hep, jax.random.PRNGKey(0), iters=3, warmup=1)
+    rows.append(("sdqn_place_fleet_hetero_ep", dt * 1e6, hn / dt))
+    return rows
 
 
 def training_throughput() -> List[Tuple[str, float, float]]:
@@ -62,6 +103,7 @@ def training_throughput() -> List[Tuple[str, float, float]]:
 def run_all() -> List[Tuple[str, float, float]]:
     out = []
     out += scoring_throughput()
+    out += afterstate_throughput()
     out += placement_throughput()
     out += training_throughput()
     return out

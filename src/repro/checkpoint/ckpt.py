@@ -18,7 +18,6 @@ import hashlib
 import json
 import os
 import shutil
-import tempfile
 import threading
 from typing import Any, Dict, Optional
 

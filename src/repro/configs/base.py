@@ -6,9 +6,8 @@ are selected by id via ``get_config("--arch" id)``; shapes via ``SHAPES``.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, Tuple
 
 
 @dataclass(frozen=True)

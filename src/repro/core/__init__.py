@@ -3,10 +3,16 @@ schedulers for compute-intensive pods, plus the paper's baselines
 (default kube-scheduler, LSTM, Transformer) and their training loops."""
 from repro.core import baselines, dqn, env, replay, rewards, schedulers, train_rl  # noqa: F401
 from repro.core.types import (  # noqa: F401
+    ArrivalConfig,
     ClusterState,
     EnvConfig,
+    NodeClass,
     PodSpec,
+    PodTable,
+    PodType,
+    ScenarioConfig,
     fleet_cluster,
     paper_cluster,
+    scenario_env,
     training_cluster,
 )

@@ -19,12 +19,13 @@ explanation for why consolidation saves CPU.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.types import ClusterState, EnvConfig, PodSpec
+from repro.core.types import ClusterState, EnvConfig, PodSpec, PodTable
 
 # ---------------------------------------------------------------------------
 # construction
@@ -40,53 +41,106 @@ def _profile(key, profile: tuple, jitter: float, n: int) -> jnp.ndarray:
     return vals + jax.random.uniform(kj, (n,), minval=-jitter, maxval=jitter)
 
 
+def _scenario_pool(scn) -> dict:
+    """Static per-node arrays for a heterogeneous pool (trace-time numpy)."""
+
+    def col(get, dtype=np.float32):
+        return np.concatenate(
+            [np.full(c.count, get(c), dtype) for c in scn.node_classes]
+        )
+
+    return {
+        "cpu_capacity": col(lambda c: c.cpu_capacity),
+        "mem_capacity": col(lambda c: c.mem_capacity),
+        "max_pods": col(lambda c: c.max_pods, np.int32),
+        "unhealthy_prob": col(lambda c: c.unhealthy_prob),
+        "cached_prob": col(lambda c: c.image_cached_prob),
+        "base_lo": col(lambda c: c.base_cpu_frac[0]),
+        "base_hi": col(lambda c: c.base_cpu_frac[1]),
+        "req_lo": col(lambda c: c.requested_frac[0]),
+        "req_hi": col(lambda c: c.requested_frac[1]),
+    }
+
+
 def reset(key: jax.Array, cfg: EnvConfig) -> ClusterState:
     n = cfg.n_nodes
     k1, k2, k3, k4 = jax.random.split(key, 4)
-    base = jnp.maximum(_profile(k1, cfg.base_cpu_profile, cfg.base_cpu_jitter, n), 0.0)
     uptime = jax.random.uniform(
         k2, (n,), minval=cfg.init_uptime_range_h[0], maxval=cfg.init_uptime_range_h[1]
     )
-    healthy = jax.random.uniform(k3, (n,)) >= cfg.unhealthy_prob
-    # pre-existing *requests* (control-plane bookings by other tenants) are
-    # permuted independently of pre-existing *usage* — see EnvConfig docstring.
-    requested0 = cfg.cpu_capacity * jnp.clip(
-        _profile(k4, cfg.requested_frac_profile, cfg.requested_frac_jitter, n), 0.0, 0.95
-    )
+    if cfg.scenario is None:
+        cap = jnp.full((n,), cfg.cpu_capacity)
+        mem_cap = jnp.full((n,), cfg.mem_capacity)
+        max_pods = jnp.full((n,), cfg.max_pods, jnp.int32)
+        base = jnp.maximum(_profile(k1, cfg.base_cpu_profile, cfg.base_cpu_jitter, n), 0.0)
+        healthy = jax.random.uniform(k3, (n,)) >= cfg.unhealthy_prob
+        # pre-existing *requests* (control-plane bookings by other tenants) are
+        # permuted independently of pre-existing *usage* — see EnvConfig docstring.
+        requested0 = cfg.cpu_capacity * jnp.clip(
+            _profile(k4, cfg.requested_frac_profile, cfg.requested_frac_jitter, n), 0.0, 0.95
+        )
+        cached_prob = jnp.zeros((n,), jnp.float32)
+    else:
+        pool = _scenario_pool(cfg.scenario)
+        cap = jnp.asarray(pool["cpu_capacity"])
+        mem_cap = jnp.asarray(pool["mem_capacity"])
+        max_pods = jnp.asarray(pool["max_pods"])
+        # base load and bookings scale with each class's own capacity, so a
+        # 2-core edge node and a 16-core crunch node are proportionately busy.
+        base = cap * jax.random.uniform(
+            k1, (n,), minval=jnp.asarray(pool["base_lo"]), maxval=jnp.asarray(pool["base_hi"])
+        )
+        healthy = jax.random.uniform(k3, (n,)) >= jnp.asarray(pool["unhealthy_prob"])
+        requested0 = cap * jnp.clip(
+            jax.random.uniform(
+                k4, (n,), minval=jnp.asarray(pool["req_lo"]), maxval=jnp.asarray(pool["req_hi"])
+            ),
+            0.0, 0.95,
+        )
+        cached_prob = jnp.asarray(pool["cached_prob"])
     z = jnp.zeros((n,), jnp.float32)
+    pod0 = mean_pod(cfg)
 
     # bookings come from tenant pods: a node with X millicores requested is
     # hosting ~X/pod_request pods of other tenants (visible to the Table-2
     # num_pods / pod-utilization features; their CPU usage is part of base).
-    tenant_pods = (requested0 / cfg.pod_cpu_request).astype(jnp.int32)
+    tenant_pods = (requested0 / pod0.cpu_request).astype(jnp.int32)
 
     exp_pods0 = jnp.zeros((n,), jnp.int32)
-    cached0 = jnp.zeros((n,), bool)
+    cached0 = jax.random.uniform(jax.random.fold_in(key, 11), (n,)) < cached_prob
     startup0 = z
     if cfg.randomize_workload:
         # training-only domain randomization: nodes start mid-flight so the
         # Q-net sees (features -> reward) decorrelated from episode time.
         kr1, kr2, kr3, kr4 = jax.random.split(jax.random.fold_in(key, 7), 4)
         pods = jax.random.randint(kr1, (n,), 0, cfg.randomize_max_pods + 1)
+        # keep randomized starts physical on every node class: a node hosts
+        # only what fits its own memory and pod slots (a small-edge node must
+        # not wake up with a big node's worth of pods).
+        mem_den = jnp.maximum(jnp.maximum(pod0.mem_request, pod0.mem_demand), 1e-6)
+        mem_fit = jnp.floor(0.9 * mem_cap / mem_den).astype(jnp.int32)
+        slot_fit = max_pods - tenant_pods
+        pods = jnp.minimum(pods, jnp.maximum(jnp.minimum(mem_fit, slot_fit), 0))
         empty = jax.random.uniform(kr2, (n,)) < cfg.randomize_empty_prob
         exp_pods0 = jnp.where(empty, 0, pods).astype(jnp.int32)
-        cached0 = (exp_pods0 > 0) | (jax.random.uniform(kr3, (n,)) < cfg.randomize_cached_prob)
+        cached0 = cached0 | (exp_pods0 > 0) | (
+            jax.random.uniform(kr3, (n,)) < cfg.randomize_cached_prob
+        )
         startup0 = jax.random.uniform(kr4, (n,), maxval=0.3 * cfg.image_pull_cost)
 
     fexp = exp_pods0.astype(jnp.float32)
     return ClusterState(
-        cpu_capacity=jnp.full((n,), cfg.cpu_capacity),
-        mem_capacity=jnp.full((n,), cfg.mem_capacity),
-        max_pods=jnp.full((n,), cfg.max_pods, jnp.int32),
+        cpu_capacity=cap,
+        mem_capacity=mem_cap,
+        max_pods=max_pods,
         healthy=healthy,
         uptime_hours=uptime,
         num_pods=tenant_pods + exp_pods0,
         exp_pods=exp_pods0,
-        cpu_requested=jnp.minimum(requested0 + fexp * cfg.pod_cpu_request,
-                                  0.98 * cfg.cpu_capacity),
-        mem_requested=fexp * cfg.pod_mem_request,
-        pods_cpu=fexp * cfg.pod_cpu_demand,
-        mem_used=fexp * cfg.pod_mem_demand,
+        cpu_requested=jnp.minimum(requested0 + fexp * pod0.cpu_request, 0.98 * cap),
+        mem_requested=fexp * pod0.mem_request,
+        pods_cpu=fexp * pod0.cpu_demand,
+        mem_used=fexp * pod0.mem_demand,
         base_cpu=base,
         startup_cpu=startup0,
         image_cached=cached0,
@@ -103,32 +157,133 @@ def default_pod(cfg: EnvConfig) -> PodSpec:
     )
 
 
+def mean_pod(cfg: EnvConfig) -> PodSpec:
+    """Mixture-weighted mean PodSpec of the scenario's catalog (falls back to
+    the homogeneous default pod).  Used for pre-existing workload accounting
+    at reset; the per-arrival specs come from the sampled pod table."""
+    scn = cfg.scenario
+    if scn is None:
+        return default_pod(cfg)
+    w = np.asarray([p.weight for p in scn.pod_types], np.float64)
+    w = w / w.sum()
+
+    def m(get):
+        return jnp.float32(float(np.sum(w * np.asarray([get(p) for p in scn.pod_types]))))
+
+    return PodSpec(
+        cpu_request=m(lambda p: p.cpu_request),
+        cpu_demand=m(lambda p: p.cpu_demand),
+        mem_request=m(lambda p: p.mem_request),
+        mem_demand=m(lambda p: p.mem_demand),
+    )
+
+
+# ---------------------------------------------------------------------------
+# arrival stream (pre-sampled pod table; lax.scan consumes it row by row)
+# ---------------------------------------------------------------------------
+
+
+def _arrival_gaps(key: jax.Array, cfg: EnvConfig, n_pods: int) -> jnp.ndarray:
+    """Inter-arrival times (n_pods,) for the scenario's arrival process."""
+    arr = cfg.scenario.arrival if cfg.scenario is not None else None
+    if arr is None or arr.kind == "burst":
+        return jnp.full((n_pods,), cfg.schedule_dt_s, jnp.float32)
+    e = jax.random.exponential(key, (n_pods,), jnp.float32)
+    if arr.kind == "poisson":
+        return e / arr.rate_per_s
+
+    if arr.kind != "diurnal":
+        raise ValueError(f"unknown arrival kind: {arr.kind!r}")
+
+    # diurnal: Poisson stream with sinusoidally modulated rate.  The arrival
+    # clock advances sequentially (each gap depends on the rate at the current
+    # wall-clock), so thin through a tiny scan over the pre-sampled unit
+    # exponentials — still one fused XLA loop.
+    def step(t, e_i):
+        rate = arr.rate_per_s * (1.0 + arr.depth * jnp.sin(2.0 * jnp.pi * t / arr.period_s))
+        dt = e_i / jnp.maximum(rate, 1e-6)
+        return t + dt, dt
+
+    _, dts = jax.lax.scan(step, jnp.float32(0.0), e)
+    return dts
+
+
+def sample_pod_table(key: jax.Array, cfg: EnvConfig, n_pods: int) -> PodTable:
+    """Draw the episode's arrival stream from the scenario (jittable).
+
+    Without a scenario this is the paper's homogeneous burst: `n_pods` copies
+    of the default pod every `schedule_dt_s` seconds.
+    """
+    k_type, k_dt = jax.random.split(key)
+    scn = cfg.scenario
+    if scn is None:
+        specs = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_pods,)), default_pod(cfg)
+        )
+        return PodTable(specs=specs, dt_s=_arrival_gaps(k_dt, cfg, n_pods),
+                        type_idx=jnp.zeros((n_pods,), jnp.int32))
+    w = jnp.asarray([p.weight for p in scn.pod_types], jnp.float32)
+    type_idx = jax.random.categorical(k_type, jnp.log(w), shape=(n_pods,))
+    by_type = PodSpec(
+        cpu_request=jnp.asarray([p.cpu_request for p in scn.pod_types], jnp.float32),
+        cpu_demand=jnp.asarray([p.cpu_demand for p in scn.pod_types], jnp.float32),
+        mem_request=jnp.asarray([p.mem_request for p in scn.pod_types], jnp.float32),
+        mem_demand=jnp.asarray([p.mem_demand for p in scn.pod_types], jnp.float32),
+    )
+    specs = jax.tree.map(lambda col: col[type_idx], by_type)
+    return PodTable(specs=specs, dt_s=_arrival_gaps(k_dt, cfg, n_pods),
+                    type_idx=type_idx.astype(jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # observation (Table 2 features)
 # ---------------------------------------------------------------------------
 
 
-def cpu_used(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
-    """Actual per-node CPU usage in millicores, incl. contention inflation.
+def _node_cpu_used(base_cpu, active, pods_cpu, startup_cpu, num_pods,
+                   cpu_capacity, cfg: EnvConfig) -> jnp.ndarray:
+    """Elementwise per-node CPU model, shared by state scoring and the O(N)
+    afterstate fast path (one definition, so they cannot diverge).
 
     Three super-linearities (all invisible to request-based scoring):
       * contention — CFS pressure once utilization passes the knee;
       * crowding — context-switch/cgroup cost once a node hosts many pods;
       * both stack on the base + overhead + pod-demand + startup transients.
     """
-    active = state.exp_pods > 0
-    crowd = jnp.maximum(state.num_pods.astype(jnp.float32) - cfg.crowd_knee, 0.0)
+    crowd = jnp.maximum(num_pods.astype(jnp.float32) - cfg.crowd_knee, 0.0)
     raw = (
-        state.base_cpu
+        base_cpu
         + jnp.where(active, cfg.node_active_overhead, 0.0)
-        + state.pods_cpu
-        + state.startup_cpu
+        + pods_cpu
+        + startup_cpu
         + cfg.crowd_coeff * crowd * crowd
     )
-    util = raw / state.cpu_capacity
+    util = raw / cpu_capacity
     over = jnp.maximum(util - cfg.contention_knee, 0.0)
-    contention = cfg.contention_coeff * over * over * state.cpu_capacity
-    return jnp.minimum(raw + contention, state.cpu_capacity)
+    contention = cfg.contention_coeff * over * over * cpu_capacity
+    return jnp.minimum(raw + contention, cpu_capacity)
+
+
+def _feature_stack(used, mem_used, num_pods, max_pods, healthy, uptime_hours,
+                   exp_pods, cpu_capacity, mem_capacity) -> jnp.ndarray:
+    """The six Table-2 columns from elementwise node quantities: (..., 6)."""
+    return jnp.stack(
+        [
+            100.0 * used / cpu_capacity,
+            100.0 * mem_used / mem_capacity,
+            100.0 * num_pods / max_pods,               # utilization: ALL pods
+            healthy.astype(jnp.float32),
+            uptime_hours,
+            exp_pods.astype(jnp.float32),              # count: OUR workload's pods
+        ],
+        axis=-1,
+    )
+
+
+def cpu_used(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
+    """Actual per-node CPU usage in millicores, incl. contention inflation."""
+    return _node_cpu_used(state.base_cpu, state.exp_pods > 0, state.pods_cpu,
+                          state.startup_cpu, state.num_pods, state.cpu_capacity, cfg)
 
 
 def cpu_pct(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
@@ -137,17 +292,9 @@ def cpu_pct(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
 
 def features(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
     """The six Table-2 inputs, one row per node: (N, 6) float32."""
-    return jnp.stack(
-        [
-            cpu_pct(state, cfg),
-            100.0 * state.mem_used / state.mem_capacity,
-            100.0 * state.num_pods / state.max_pods,   # utilization: ALL pods
-            state.healthy.astype(jnp.float32),
-            state.uptime_hours,
-            state.exp_pods.astype(jnp.float32),        # count: OUR workload's pods
-        ],
-        axis=-1,
-    )
+    return _feature_stack(cpu_used(state, cfg), state.mem_used, state.num_pods,
+                          state.max_pods, state.healthy, state.uptime_hours,
+                          state.exp_pods, state.cpu_capacity, state.mem_capacity)
 
 
 FEATURE_SCALE = jnp.array([100.0, 100.0, 100.0, 1.0, 24.0, 32.0], jnp.float32)
@@ -209,7 +356,38 @@ def hypothetical_place(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp
     """Afterstate features for *every* candidate node: (N, 6).
 
     Row i = Table-2 features of node i as if the pod were placed there.
-    This is the SDQN scoring input (Q is evaluated on afterstates).
+    This is the SDQN scoring input (Q is evaluated on afterstates) and the
+    hottest function in both training and serving-time placement.
+
+    Row i of ``features(place(state, i, ...))`` depends only on node i's own
+    columns, so instead of materializing N full placed cluster states
+    (vmap-of-place: O(N^2) work and memory), apply the placement delta to
+    every node at once and evaluate the feature formula elementwise — O(N).
+    The ops mirror ``place``/``cpu_used``/``features`` exactly so the result
+    is bit-identical to ``hypothetical_place_reference``.
+    """
+    # placement deltas (same arithmetic as `place` restricted to the chosen row)
+    in_flight = jnp.sum(state.startup_cpu > 0.25 * cfg.image_pull_cost).astype(jnp.float32)
+    pull_cost = cfg.image_pull_cost * (1.0 + cfg.pull_concurrency_coeff * in_flight)
+    start_cost = jnp.where(jnp.logical_not(state.image_cached), pull_cost, cfg.warm_start_cost)
+    num_pods = state.num_pods + 1
+    exp_pods = state.exp_pods + 1
+    pods_cpu = state.pods_cpu + 1.0 * pod.cpu_demand
+    mem_used = state.mem_used + 1.0 * pod.mem_demand
+    startup_cpu = state.startup_cpu + start_cost
+
+    used = _node_cpu_used(state.base_cpu, exp_pods > 0, pods_cpu, startup_cpu,
+                          num_pods, state.cpu_capacity, cfg)
+    return _feature_stack(used, mem_used, num_pods, state.max_pods, state.healthy,
+                          state.uptime_hours, exp_pods, state.cpu_capacity,
+                          state.mem_capacity)
+
+
+def hypothetical_place_reference(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
+    """Reference afterstate scorer: vmap of the full transition (O(N^2)).
+
+    Kept as the semantic ground truth the fast path is verified against
+    (tests/test_scenarios.py) and as the baseline in benchmarks/sched_scale.py.
     """
     n = state.n_nodes
 
@@ -219,10 +397,17 @@ def hypothetical_place(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp
     return jax.vmap(one)(jnp.arange(n))
 
 
-def tick(state: ClusterState, cfg: EnvConfig, dt_s: float) -> ClusterState:
-    """Advance wall-clock: decay startup transients, accrue uptime."""
+def tick(state: ClusterState, cfg: EnvConfig, dt_s) -> ClusterState:
+    """Advance wall-clock: decay startup transients, accrue uptime.
+
+    ``startup_decay`` is calibrated per ``schedule_dt_s`` step, so with
+    variable arrival gaps (Poisson/diurnal scenarios) the transient decays
+    by ``decay ** (dt / schedule_dt_s)`` — wall-clock time, not arrival
+    count, governs how long an image pull saturates a node.
+    """
+    decay = cfg.startup_decay ** (dt_s / cfg.schedule_dt_s)
     return state._replace(
-        startup_cpu=state.startup_cpu * cfg.startup_decay,
+        startup_cpu=state.startup_cpu * decay,
         uptime_hours=state.uptime_hours + dt_s / 3600.0,
         time_s=state.time_s + dt_s,
     )
@@ -243,31 +428,45 @@ def run_episode(
     cfg: EnvConfig,
     select_action,  # (key, state, pod) -> int32 node index
     n_pods: int,
+    pod_table: Optional[PodTable] = None,
 ) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray]:
     """Schedule `n_pods` arrivals with `select_action`, then settle.
+
+    Arrivals come from `pod_table` when given, otherwise they are sampled
+    from `cfg.scenario` (homogeneous fixed burst when no scenario is set).
+    The reset / arrival-stream / per-step action keys are split up front so
+    the initial cluster layout is independent of the exploration noise.
 
     Returns (final_state, pod_distribution (N,), metric = time-averaged
     cluster-average CPU% over the measurement window).
     """
-    state = reset(key, cfg)
-    pod = default_pod(cfg)
+    k_reset, k_pods, k_act = jax.random.split(key, 3)
+    state = reset(k_reset, cfg)
+    if pod_table is None:
+        pod_table = sample_pod_table(k_pods, cfg, n_pods)
 
-    def sched_step(carry, k):
+    # the metric integrates cluster-average CPU% over wall-clock (dt-weighted),
+    # so bursty arrival phases don't over-weight the average under Poisson /
+    # diurnal streams; with constant gaps this reduces to the plain mean.
+    def sched_step(carry, xs):
         st, acc, cnt = carry
+        k, pod, dt = xs
         a = select_action(k, st, pod)
         st = place(st, a, pod, cfg)
-        st = tick(st, cfg, cfg.schedule_dt_s)
+        st = tick(st, cfg, dt)
         m = average_cpu_utilization(st, cfg)
-        return (st, acc + m, cnt + 1.0), a
+        return (st, acc + m * dt, cnt + dt), a
 
-    keys = jax.random.split(key, n_pods)
-    (state, acc, cnt), actions = jax.lax.scan(sched_step, (state, 0.0, 0.0), keys)
+    keys = jax.random.split(k_act, n_pods)
+    (state, acc, cnt), actions = jax.lax.scan(
+        sched_step, (state, 0.0, 0.0), (keys, pod_table.specs, pod_table.dt_s)
+    )
 
     def settle_step(carry, _):
         st, acc, cnt = carry
         st = tick(st, cfg, cfg.schedule_dt_s)
         m = average_cpu_utilization(st, cfg)
-        return (st, acc + m, cnt + 1.0), None
+        return (st, acc + m * cfg.schedule_dt_s, cnt + cfg.schedule_dt_s), None
 
     (state, acc, cnt), _ = jax.lax.scan(
         settle_step, (state, acc, cnt), None, length=cfg.settle_steps

@@ -48,3 +48,30 @@ SDQN_LITERAL_PRESET = RLConfig(
 N_SELECTION_SEEDS = 10      # policies trained per variant; best-on-validation deployed
 N_SUPERVISED_SEEDS = 4
 SUPERVISED_EPISODES = 30
+
+# ---------------------------------------------------------------------------
+# scenario-mixture training (one Q-net across heterogeneous workloads)
+# ---------------------------------------------------------------------------
+
+# Scenario names the generalist SDQN trains across (resolved via
+# ``repro.scenarios.training_mixture`` — kept as names here so presets stay
+# import-light and the registry remains the single source of truth).
+SCENARIO_MIX_NAMES = (
+    "paper-burst",
+    "hetero-bigsmall",
+    "train-serve-mix",
+    "memory-pressure",
+    "spot-flaky",
+    "diurnal-serve",
+)
+
+# One net over the whole mixture: more episodes than the single-scenario
+# presets (they are split across scenarios), bandit-safe efficiency shaping.
+SDQN_SCENARIO_MIX_PRESET = RLConfig(
+    variant="sdqn",
+    episodes=720,
+    n_envs=16,
+    eps_end=0.05,
+    batch_size=256,
+    efficiency_weight=5.0,
+)

@@ -100,3 +100,32 @@ def sdqn_n_reward(
         delta = jnp.mean(after_feats[:, 0]) - jnp.mean(before_feats[:, 0])
         pts = pts - efficiency_weight * delta
     return pts
+
+
+def make_reward_fn(variant: str = "sdqn", consolidation_n: int = 2,
+                   efficiency_weight: float = 0.0):
+    """Uniform reward interface for the training loop (and scenario mixtures):
+
+        fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after)
+
+    Both variants see the same arguments so one transition function can train
+    either head across any scenario; the features already carry the
+    heterogeneity (percentages are relative to each node's own capacity).
+    """
+    if variant == "sdqn":
+
+        def fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):
+            return sdqn_reward(after_feats, action, exp_pods=exp_pods_after,
+                               efficiency_weight=efficiency_weight,
+                               before_feats=before_feats)
+
+    elif variant == "sdqn_n":
+
+        def fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):
+            return sdqn_n_reward(after_feats, before_feats, ok, action,
+                                 consolidation_n, exp_pods_before=exp_pods_before,
+                                 efficiency_weight=efficiency_weight)
+
+    else:
+        raise ValueError(f"unknown reward variant: {variant!r}")
+    return fn

@@ -6,7 +6,6 @@ score feasible nodes; SDQN/SDQN-n score afterstates with the DQN.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

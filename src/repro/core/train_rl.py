@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, NamedTuple, Optional, Tuple
+import itertools
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +28,6 @@ from repro.core import dqn, env as kenv, rewards
 from repro.core.replay import Replay, replay_add, replay_init, replay_sample
 from repro.core.schedulers import masked_argmax
 from repro.core.types import EnvConfig
-from repro.optim import adam_init, adam_update
 
 # Rewards are ~100-point scale (Table 3 base = 100); scale them down so the
 # bootstrapped Q (~ r/(1-gamma)) stays O(1-10) under Adam(1e-3) + MSE.
@@ -66,7 +66,8 @@ class TrainCarry(NamedTuple):
     learn_step: jnp.ndarray
 
 
-def _transition(key, qparams, env_state, pod, env_cfg: EnvConfig, rl: RLConfig, epsilon):
+def _transition(key, qparams, env_state, pod, dt_s, env_cfg: EnvConfig, rl: RLConfig,
+                epsilon, reward_fn):
     """One pod arrival in one env: act, step, shape reward.
 
     Returns (new_env_state, stored_feats (6,), target (,), reward).
@@ -79,15 +80,9 @@ def _transition(key, qparams, env_state, pod, env_cfg: EnvConfig, rl: RLConfig, 
 
     new_state = kenv.place(env_state, action, pod, env_cfg)
     after_feats = kenv.features(new_state, env_cfg)
-    if rl.variant == "sdqn_n":
-        r = rewards.sdqn_n_reward(after_feats, before_feats, ok, action,
-                                  rl.consolidation_n, exp_pods_before=env_state.exp_pods,
-                                  efficiency_weight=rl.efficiency_weight)
-    else:
-        r = rewards.sdqn_reward(after_feats, action, exp_pods=new_state.exp_pods,
-                                efficiency_weight=rl.efficiency_weight,
-                                before_feats=before_feats)
-    new_state = kenv.tick(new_state, env_cfg, env_cfg.schedule_dt_s)
+    r = reward_fn(after_feats, before_feats, ok, action,
+                  env_state.exp_pods, new_state.exp_pods)
+    new_state = kenv.tick(new_state, env_cfg, dt_s)
     stored = kenv.normalize_features(after_all[action])
     return new_state, stored, r * REWARD_SCALE, action
 
@@ -108,44 +103,56 @@ def _bootstrap_bonus(online_params, target_params, env_state, pod, env_cfg, rl: 
     return jnp.where(jnp.any(ok), rl.gamma * q_tgt, 0.0)
 
 
-def train(
-    key: jax.Array,
-    env_cfg: EnvConfig,
-    rl: RLConfig,
-) -> Tuple[dict, dict]:
-    """Train SDQN/SDQN-n. Returns (qparams, metrics dict of per-episode arrays)."""
-    k_init, k_train = jax.random.split(key)
-    params, opt_state = dqn.init_train_state(k_init)
-    buffer = replay_init(rl.buffer_capacity)
-    pod = kenv.default_pod(env_cfg)
-    n_steps = rl.episodes * rl.pods_per_episode
+def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int):
+    """Episode body for ``lax.scan``: (TrainCarry, global episode idx) -> carry.
+
+    Per-arrival ``PodSpec``s come from the scenario's pod table (the
+    homogeneous default pod when ``env_cfg.scenario`` is None), so the same
+    Q-net trains across heterogeneous workload mixtures.  ``n_steps_total``
+    anchors the epsilon schedule, which lets scenario-mixture training thread
+    one schedule through interleaved per-scenario segments.
+    """
+    reward_fn = rewards.make_reward_fn(rl.variant, rl.consolidation_n,
+                                       rl.efficiency_weight)
 
     def epsilon_at(step):
-        frac = step.astype(jnp.float32) / max(n_steps, 1)
+        frac = step.astype(jnp.float32) / max(n_steps_total, 1)
         return rl.eps_start + (rl.eps_end - rl.eps_start) * jnp.minimum(frac, 1.0)
 
     def episode(carry: TrainCarry, ep_idx):
         key_ep = jax.random.fold_in(carry.key, ep_idx)
-        k_reset, k_steps = jax.random.split(key_ep)
+        k_reset, k_pods, k_steps = jax.random.split(key_ep, 3)
         env_states = jax.vmap(lambda k: kenv.reset(k, env_cfg))(
             jax.random.split(k_reset, rl.n_envs)
         )
+        # pre-sample each env's arrival stream; scan wants leading dim = time
+        tables = jax.vmap(
+            lambda k: kenv.sample_pod_table(k, env_cfg, rl.pods_per_episode)
+        )(jax.random.split(k_pods, rl.n_envs))
+        pods_t = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), tables.specs)
+        dt_t = jnp.swapaxes(tables.dt_s, 0, 1)
+        # the arrival after this one, for bootstrapped Q(s') scoring (the last
+        # row wraps, but its bonus is masked out below)
+        pods_next_t = jax.tree.map(lambda x: jnp.roll(x, -1, axis=0), pods_t)
 
-        def pod_step(inner, t):
+        def pod_step(inner, xs):
+            t, pod_t, pod_next_t, dt_row = xs
             c, env_states = inner
             kt = jax.random.fold_in(k_steps, t)
             step_no = ep_idx * rl.pods_per_episode + t
             eps = epsilon_at(step_no)
             keys = jax.random.split(kt, rl.n_envs + 2)
             new_states, stored, r, _ = jax.vmap(
-                lambda kk, st: _transition(kk, c.params, st, pod, env_cfg, rl, eps)
-            )(keys[: rl.n_envs], env_states)
+                lambda kk, st, pod, dt: _transition(
+                    kk, c.params, st, pod, dt, env_cfg, rl, eps, reward_fn)
+            )(keys[: rl.n_envs], env_states, pod_t, dt_row)
 
             targets = r
             if rl.bootstrap:
                 bonus = jax.vmap(
-                    lambda st: _bootstrap_bonus(c.params, c.target_params, st, pod, env_cfg, rl)
-                )(new_states)
+                    lambda st, pod: _bootstrap_bonus(
+                        c.params, c.target_params, st, pod, env_cfg, rl)
+                )(new_states, pod_next_t)
                 targets = r + jnp.where(t + 1 < rl.pods_per_episode, bonus, 0.0)
 
             buf = replay_add(c.buffer, stored, targets)
@@ -164,7 +171,8 @@ def train(
             return (c, new_states), (loss, jnp.mean(r))
 
         (carry2, env_states), (losses, rews) = jax.lax.scan(
-            pod_step, (carry, env_states), jnp.arange(rl.pods_per_episode)
+            pod_step, (carry, env_states),
+            (jnp.arange(rl.pods_per_episode), pods_t, pods_next_t, dt_t),
         )
         metric = jax.vmap(lambda st: kenv.average_cpu_utilization(st, env_cfg))(env_states)
         return carry2, {
@@ -173,12 +181,89 @@ def train(
             "avg_cpu": metric.mean(),
         }
 
-    carry = TrainCarry(params, opt_state, params, buffer, k_train, jnp.zeros((), jnp.int32))
+    return episode
+
+
+def _init_carry(key: jax.Array, rl: RLConfig) -> TrainCarry:
+    k_init, k_train = jax.random.split(key)
+    params, opt_state = dqn.init_train_state(k_init)
+    buffer = replay_init(rl.buffer_capacity)
+    return TrainCarry(params, opt_state, params, buffer, k_train,
+                      jnp.zeros((), jnp.int32))
+
+
+def train(
+    key: jax.Array,
+    env_cfg: EnvConfig,
+    rl: RLConfig,
+) -> Tuple[dict, dict]:
+    """Train SDQN/SDQN-n. Returns (qparams, metrics dict of per-episode arrays)."""
+    carry = _init_carry(key, rl)
+    episode = _make_episode_fn(env_cfg, rl, rl.episodes * rl.pods_per_episode)
     carry, metrics = jax.lax.scan(episode, carry, jnp.arange(rl.episodes))
     return carry.params, metrics
 
 
 train_jit = jax.jit(train, static_argnames=("env_cfg", "rl"))
+
+
+def train_mixture(
+    key: jax.Array,
+    env_cfgs,
+    rl: RLConfig,
+    rounds: int = 4,
+) -> Tuple[dict, dict]:
+    """Train ONE Q-net across a scenario mixture.
+
+    ``rl.episodes`` is split evenly across the scenario ``EnvConfig``s and
+    interleaved over ``rounds`` visits, so late training (low epsilon) still
+    sees every scenario.  Params, target net, replay buffer, learn-step and
+    the epsilon schedule all thread through: the replay stores (6,)-feature
+    afterstates, which are node-count-independent, so transitions from a
+    4-node paper cluster and a 1024-node heterogeneous fleet mix freely in
+    one buffer.
+
+    Returns (qparams, metrics dict of per-episode arrays concatenated in
+    training order).  The episode budget is honored to within one chunk
+    (= episodes // (len(cfgs) * rounds), min 1): scenarios are visited in
+    cycle until ``rl.episodes`` episodes have run, so a budget smaller than
+    one full cycle trains exactly that many episodes rather than inflating
+    to a whole round.
+    """
+    env_cfgs = list(env_cfgs)
+    chunk = max(rl.episodes // (len(env_cfgs) * rounds), 1)
+    schedule = []
+    total_eps = 0
+    cycle = itertools.cycle(env_cfgs)
+    while total_eps < rl.episodes:
+        schedule.append(next(cycle))
+        total_eps += chunk
+    n_steps_total = total_eps * rl.pods_per_episode
+
+    segments = {}
+    for cfg in env_cfgs:
+        if cfg in segments:
+            continue
+        ep_fn = _make_episode_fn(cfg, rl, n_steps_total)
+        segments[cfg] = jax.jit(
+            functools.partial(
+                lambda episode, carry, ep0: jax.lax.scan(
+                    episode, carry, ep0 + jnp.arange(chunk)),
+                ep_fn,
+            )
+        )
+
+    carry = _init_carry(key, rl)
+    per_ep = []
+    ep0 = 0
+    for cfg in schedule:
+        carry, m = segments[cfg](carry, jnp.int32(ep0))
+        per_ep.append(m)
+        ep0 += chunk
+    metrics = {
+        k: jnp.concatenate([m[k] for m in per_ep]) for k in per_ep[0]
+    }
+    return carry.params, metrics
 
 
 # ---------------------------------------------------------------------------

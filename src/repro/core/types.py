@@ -1,8 +1,8 @@
-"""Pytree types for the cluster scheduling environment."""
+"""Pytree types for the cluster scheduling environment and its scenarios."""
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -44,6 +44,92 @@ class PodSpec(NamedTuple):
     cpu_demand: jnp.ndarray    # millicores actually burned while running
     mem_request: jnp.ndarray   # MiB
     mem_demand: jnp.ndarray    # MiB
+
+
+# ---------------------------------------------------------------------------
+# scenario description (heterogeneous node pools × pod catalogs × arrivals)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeClass:
+    """A homogeneous slice of a heterogeneous node pool.
+
+    ``base_cpu_frac`` / ``requested_frac`` are uniform ranges *as fractions of
+    this class's capacity*, so a big node and a small node with the same
+    fraction carry proportionate pre-existing load.
+    """
+
+    name: str
+    count: int
+    cpu_capacity: float               # millicores
+    mem_capacity: float               # MiB
+    max_pods: int = 110
+    unhealthy_prob: float = 0.0       # spot / flaky pools set this > 0
+    base_cpu_frac: tuple = (0.02, 0.2)
+    requested_frac: tuple = (0.05, 0.5)
+    image_cached_prob: float = 0.0    # chance the experiment image is pre-pulled
+
+
+@dataclasses.dataclass(frozen=True)
+class PodType:
+    """One entry of the workload catalog (mixture component of the stream)."""
+
+    name: str
+    weight: float                     # mixture weight in the arrival stream
+    cpu_request: float                # millicores (scheduling request)
+    cpu_demand: float                 # millicores actually burned
+    mem_request: float                # MiB
+    mem_demand: float                 # MiB
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalConfig:
+    """Pod arrival process.
+
+    * ``burst``   — fixed inter-arrival gap (the paper's 50-pod burst);
+    * ``poisson`` — exponential inter-arrival times at ``rate_per_s``;
+    * ``diurnal`` — Poisson stream whose rate is modulated by a sine wave of
+      ``period_s`` and relative amplitude ``depth`` (daily traffic wave).
+    """
+
+    kind: str = "burst"               # "burst" | "poisson" | "diurnal"
+    rate_per_s: float = 0.5           # mean arrival rate (poisson / diurnal)
+    period_s: float = 1200.0          # diurnal wave period
+    depth: float = 0.8                # diurnal modulation depth in [0, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Declarative scenario: node pool + pod catalog + arrival process.
+
+    Static (hashable) so an ``EnvConfig`` carrying it can stay a jit static
+    argument; all sampled quantities (which pod type arrives when, per-node
+    jitter) are drawn inside jit from explicit PRNG keys.
+    """
+
+    name: str
+    node_classes: tuple               # tuple[NodeClass, ...]
+    pod_types: tuple                  # tuple[PodType, ...]
+    arrival: ArrivalConfig = ArrivalConfig()
+    n_pods: int = 50                  # default arrivals per episode
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(c.count for c in self.node_classes)
+
+
+class PodTable(NamedTuple):
+    """Pre-sampled arrival stream: everything ``lax.scan`` needs per step.
+
+    ``specs`` holds one ``PodSpec`` per arrival (leading dim n_pods);
+    ``dt_s`` is the wall-clock gap *after* each placement; ``type_idx``
+    indexes the scenario's pod catalog (for logging / per-type metrics).
+    """
+
+    specs: PodSpec                    # each field (n_pods,)
+    dt_s: jnp.ndarray                 # (n_pods,) float32
+    type_idx: jnp.ndarray             # (n_pods,) int32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +188,10 @@ class EnvConfig:
     randomize_max_pods: int = 26
     randomize_empty_prob: float = 0.45    # chance a node starts with no pods
     randomize_cached_prob: float = 0.3    # chance an empty node has the image
+    # scenario mode: when set, reset() builds the heterogeneous node pool from
+    # scenario.node_classes (n_nodes/capacity fields above are overridden) and
+    # episodes draw per-arrival PodSpecs from the scenario's pod catalog.
+    scenario: Optional[ScenarioConfig] = None
 
 
 def training_cluster() -> "EnvConfig":
@@ -117,3 +207,15 @@ def paper_cluster() -> EnvConfig:
 def fleet_cluster(n_nodes: int = 1024) -> EnvConfig:
     """A fleet-scale cluster for the 1000+-node scheduling benchmarks."""
     return dataclasses.replace(paper_cluster(), n_nodes=n_nodes, max_pods=110)
+
+
+def scenario_env(scn: ScenarioConfig, randomize: bool = False, **overrides) -> EnvConfig:
+    """EnvConfig for a scenario: n_nodes tracks the node pool; capacity and
+    pod fields become per-class / per-arrival at reset/episode time."""
+    return dataclasses.replace(
+        paper_cluster(),
+        n_nodes=scn.n_nodes,
+        scenario=scn,
+        randomize_workload=randomize,
+        **overrides,
+    )

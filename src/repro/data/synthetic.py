@@ -11,7 +11,6 @@ from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def synthetic_lm_tokens(key: jax.Array, batch: int, seq_len: int, vocab: int) -> jnp.ndarray:

@@ -16,7 +16,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa

@@ -20,7 +20,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.core import dqn
 from repro.models import model as mdl
-from repro.sched.placement import FleetState, JobSpec, PlacementEngine, fresh_fleet
+from repro.sched.placement import JobSpec, PlacementEngine, fresh_fleet
 
 
 def sample_requests(key, n, vocab, prompt_len):

@@ -16,12 +16,11 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager, latest_step, restore
 from repro.configs.base import get_config
 from repro.data import DataConfig, make_loader
-from repro.launch import sharding, steps
+from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as mdl
 from repro.optim import adam_init

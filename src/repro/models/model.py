@@ -13,8 +13,7 @@ Public entry points:
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

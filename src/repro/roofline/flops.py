@@ -14,7 +14,7 @@ from __future__ import annotations
 from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models.model import SubLayer, block_spec
+from repro.models.model import block_spec
 
 
 def _attn_flops_per_token(cfg: ModelConfig, kv_len: float, causal: bool = True) -> float:

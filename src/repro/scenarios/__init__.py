@@ -1,0 +1,28 @@
+"""Scenario subsystem: declarative heterogeneous workloads for the scheduler.
+
+A scenario = node pool (classes of machines) x pod catalog (workload mixture)
+x arrival process.  ``registry`` holds the named scenarios the benchmarks and
+tests run; ``catalog`` holds the reusable building blocks; ``engine`` turns a
+scenario + policy into episode metrics.
+"""
+from repro.scenarios.catalog import NODE_CLASSES, POD_TYPES
+from repro.scenarios.engine import evaluate_scenario, scenario_episode
+from repro.scenarios.registry import (
+    SCENARIOS,
+    get_scenario,
+    make_env,
+    scenario_names,
+    training_mixture,
+)
+
+__all__ = [
+    "NODE_CLASSES",
+    "POD_TYPES",
+    "SCENARIOS",
+    "evaluate_scenario",
+    "get_scenario",
+    "make_env",
+    "scenario_episode",
+    "scenario_names",
+    "training_mixture",
+]

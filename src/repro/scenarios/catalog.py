@@ -1,0 +1,94 @@
+"""Reusable scenario building blocks: node classes and pod types.
+
+Numbers are in the environment's native units (millicores / MiB) and sized
+against the paper's 4-vCPU slaves so the homogeneous paper cluster is just
+one more entry in the catalog.
+"""
+from __future__ import annotations
+
+from repro.core.types import NodeClass, PodType
+
+# ---------------------------------------------------------------------------
+# node classes
+# ---------------------------------------------------------------------------
+
+PAPER_SLAVE = NodeClass(
+    name="paper-slave", count=4, cpu_capacity=4000.0, mem_capacity=16384.0,
+    base_cpu_frac=(0.02, 0.2), requested_frac=(0.05, 0.8),
+)
+
+BIG_CPU = NodeClass(
+    name="big-cpu", count=2, cpu_capacity=16000.0, mem_capacity=65536.0,
+    max_pods=250, base_cpu_frac=(0.02, 0.12), requested_frac=(0.05, 0.4),
+)
+
+SMALL_EDGE = NodeClass(
+    name="small-edge", count=6, cpu_capacity=2000.0, mem_capacity=4096.0,
+    max_pods=30, base_cpu_frac=(0.05, 0.3), requested_frac=(0.1, 0.6),
+)
+
+MEM_HEAVY = NodeClass(
+    name="mem-heavy", count=4, cpu_capacity=8000.0, mem_capacity=131072.0,
+    max_pods=150, base_cpu_frac=(0.02, 0.15), requested_frac=(0.05, 0.45),
+)
+
+SPOT = NodeClass(
+    name="spot", count=6, cpu_capacity=4000.0, mem_capacity=16384.0,
+    unhealthy_prob=0.25, base_cpu_frac=(0.01, 0.1), requested_frac=(0.0, 0.3),
+)
+
+WARM_POOL = NodeClass(
+    name="warm-pool", count=4, cpu_capacity=4000.0, mem_capacity=16384.0,
+    image_cached_prob=1.0, base_cpu_frac=(0.02, 0.2), requested_frac=(0.05, 0.5),
+)
+
+NODE_CLASSES = {
+    c.name: c
+    for c in (PAPER_SLAVE, BIG_CPU, SMALL_EDGE, MEM_HEAVY, SPOT, WARM_POOL)
+}
+
+# ---------------------------------------------------------------------------
+# pod types
+# ---------------------------------------------------------------------------
+
+# the paper's compute-intensive no-op burner (requests >> burns)
+NOOP_PAPER = PodType(
+    name="noop-paper", weight=1.0,
+    cpu_request=140.0, cpu_demand=20.0, mem_request=128.0, mem_demand=100.0,
+)
+
+# training replica: big request, burns close to it, memory-hungry
+TRAIN_HEAVY = PodType(
+    name="train-heavy", weight=1.0,
+    cpu_request=900.0, cpu_demand=780.0, mem_request=2048.0, mem_demand=1800.0,
+)
+
+# serving replica: small request, mostly idle between requests
+SERVE_LIGHT = PodType(
+    name="serve-light", weight=1.0,
+    cpu_request=120.0, cpu_demand=60.0, mem_request=256.0, mem_demand=180.0,
+)
+
+# batch job: burns MORE than it requests (the classic noisy neighbour)
+BATCH_BURST = PodType(
+    name="batch-burst", weight=1.0,
+    cpu_request=400.0, cpu_demand=520.0, mem_request=512.0, mem_demand=420.0,
+)
+
+# in-memory cache shard: negligible CPU, giant working set
+MEM_CACHE = PodType(
+    name="mem-cache", weight=1.0,
+    cpu_request=100.0, cpu_demand=40.0, mem_request=4096.0, mem_demand=3900.0,
+)
+
+POD_TYPES = {
+    p.name: p
+    for p in (NOOP_PAPER, TRAIN_HEAVY, SERVE_LIGHT, BATCH_BURST, MEM_CACHE)
+}
+
+
+def weighted(pod: PodType, weight: float) -> PodType:
+    """Catalog pod type with a scenario-specific mixture weight."""
+    import dataclasses
+
+    return dataclasses.replace(pod, weight=weight)

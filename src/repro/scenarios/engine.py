@@ -1,0 +1,53 @@
+"""Run scenarios against scheduler policies and collect episode metrics."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import env as kenv
+from repro.core.types import EnvConfig
+
+
+def default_n_pods(env_cfg: EnvConfig, n_pods: Optional[int] = None) -> int:
+    if n_pods is not None:
+        return n_pods
+    return env_cfg.scenario.n_pods if env_cfg.scenario is not None else 50
+
+
+def scenario_episode(env_cfg: EnvConfig, select: Callable,
+                     n_pods: Optional[int] = None) -> Callable:
+    """Jitted ``key -> (final_state, distribution, metric)`` for one scenario."""
+    n = default_n_pods(env_cfg, n_pods)
+    return jax.jit(lambda k: kenv.run_episode(k, env_cfg, select, n))
+
+
+def evaluate_scenario(
+    key: jax.Array,
+    env_cfg: EnvConfig,
+    select: Callable,
+    trials: int = 3,
+    n_pods: Optional[int] = None,
+    episode: Optional[Callable] = None,
+) -> Dict[str, float]:
+    """Average the paper's metric (cluster-average CPU%) over `trials` episodes.
+
+    Pass a prebuilt (already warmed) ``episode`` fn to keep jit compilation
+    out of a caller's timing window — each ``scenario_episode`` call returns
+    a fresh closure, so re-calling it would recompile.
+    """
+    ep = episode if episode is not None else scenario_episode(env_cfg, select, n_pods)
+    mets, placed = [], []
+    for t in range(trials):
+        state, _, met = ep(jax.random.fold_in(key, t))
+        mets.append(float(met))
+        placed.append(int(np.asarray(state.exp_pods).sum()))
+    return {
+        "metric_mean": float(np.mean(mets)),
+        "metric_std": float(np.std(mets)),
+        "pods_placed_mean": float(np.mean(placed)),
+        "trials": float(trials),
+        "n_pods": float(default_n_pods(env_cfg, n_pods)),
+        "n_nodes": float(env_cfg.n_nodes),
+    }

@@ -1,0 +1,144 @@
+"""Named scenario registry.
+
+Every entry is a fully declarative ``ScenarioConfig`` runnable via
+
+    PYTHONPATH=src python -m benchmarks.run --scenario <name>
+
+and convertible to an ``EnvConfig`` with ``make_env(name)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.core.types import ArrivalConfig, EnvConfig, ScenarioConfig, scenario_env
+from repro.scenarios import catalog as cat
+
+_c = dataclasses.replace  # shrink a node class / retune a pod type in place
+
+
+SCENARIOS: Dict[str, ScenarioConfig] = {}
+
+
+def _register(scn: ScenarioConfig) -> ScenarioConfig:
+    SCENARIOS[scn.name] = scn
+    return scn
+
+
+# 1. the paper's experiment, expressed as a scenario: homogeneous 4-slave
+#    pool, 50 identical no-op pods arriving as a fixed burst.
+PAPER_BURST = _register(ScenarioConfig(
+    name="paper-burst",
+    node_classes=(cat.PAPER_SLAVE,),
+    pod_types=(cat.NOOP_PAPER,),
+    arrival=ArrivalConfig(kind="burst"),
+    n_pods=50,
+))
+
+# 2. big/small CPU split: two 16-core crunchers next to six 2-core edge
+#    boxes; a mixed stream where train-heavy pods only really fit the big
+#    nodes while serve-light pods fit anywhere.
+HETERO_BIGSMALL = _register(ScenarioConfig(
+    name="hetero-bigsmall",
+    node_classes=(cat.BIG_CPU, cat.SMALL_EDGE),
+    pod_types=(cat.weighted(cat.TRAIN_HEAVY, 0.25), cat.weighted(cat.SERVE_LIGHT, 0.75)),
+    arrival=ArrivalConfig(kind="burst"),
+    n_pods=60,
+))
+
+# 3. train/serve mixture on a mixed pool under a Poisson stream (the
+#    AGMARL-DKS-style heterogeneous evaluation).
+TRAIN_SERVE_MIX = _register(ScenarioConfig(
+    name="train-serve-mix",
+    node_classes=(cat.BIG_CPU, cat.PAPER_SLAVE),
+    pod_types=(cat.weighted(cat.TRAIN_HEAVY, 0.3), cat.weighted(cat.SERVE_LIGHT, 0.7)),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=0.5),
+    n_pods=60,
+))
+
+# 4. memory pressure: cache shards whose working sets dwarf their CPU needs,
+#    on a pool where only half the nodes are memory-heavy.
+MEMORY_PRESSURE = _register(ScenarioConfig(
+    name="memory-pressure",
+    node_classes=(cat.MEM_HEAVY, cat.PAPER_SLAVE),
+    pod_types=(cat.weighted(cat.MEM_CACHE, 0.5), cat.weighted(cat.SERVE_LIGHT, 0.5)),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=0.4),
+    n_pods=50,
+))
+
+# 5. flaky spot pool: a quarter of the spot nodes come up NotReady, so the
+#    filtering phase actually bites; batch pods burn above their requests.
+SPOT_FLAKY = _register(ScenarioConfig(
+    name="spot-flaky",
+    node_classes=(cat.SPOT, _c(cat.PAPER_SLAVE, count=2)),
+    pod_types=(cat.weighted(cat.BATCH_BURST, 0.6), cat.weighted(cat.NOOP_PAPER, 0.4)),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=0.6),
+    n_pods=50,
+))
+
+# 6. diurnal serving wave: warm image pool, light pods, arrival rate swinging
+#    sinusoidally over a 20-minute "day".
+DIURNAL_SERVE = _register(ScenarioConfig(
+    name="diurnal-serve",
+    node_classes=(cat.WARM_POOL, cat.PAPER_SLAVE),
+    pod_types=(cat.SERVE_LIGHT,),
+    arrival=ArrivalConfig(kind="diurnal", rate_per_s=0.5, period_s=1200.0, depth=0.8),
+    n_pods=80,
+))
+
+# 7. batch storm: a dense Poisson burst of over-burning batch jobs onto big
+#    nodes plus unreliable spot capacity.
+BATCH_STORM = _register(ScenarioConfig(
+    name="batch-storm",
+    node_classes=(_c(cat.BIG_CPU, count=4), _c(cat.SPOT, count=4)),
+    pod_types=(cat.BATCH_BURST,),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=1.5),
+    n_pods=80,
+))
+
+# 8. fleet-scale heterogeneous pool for the scaling benchmarks.
+FLEET_HETERO = _register(ScenarioConfig(
+    name="fleet-hetero",
+    node_classes=(
+        _c(cat.BIG_CPU, count=256),
+        _c(cat.PAPER_SLAVE, count=512),
+        _c(cat.SMALL_EDGE, count=256),
+    ),
+    pod_types=(
+        cat.weighted(cat.TRAIN_HEAVY, 0.2),
+        cat.weighted(cat.SERVE_LIGHT, 0.6),
+        cat.weighted(cat.BATCH_BURST, 0.2),
+    ),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=5.0),
+    n_pods=200,
+))
+
+
+def scenario_names() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def get_scenario(name: str) -> ScenarioConfig:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {', '.join(scenario_names())}"
+        ) from None
+
+
+def make_env(name: str, randomize: bool = False, **overrides) -> EnvConfig:
+    """EnvConfig for a registry scenario (randomize=True for training resets)."""
+    return scenario_env(get_scenario(name), randomize=randomize, **overrides)
+
+
+def training_mixture(names=None) -> List[EnvConfig]:
+    """The scenario mixture one Q-net trains across (domain-randomized resets).
+
+    Defaults to ``presets.SCENARIO_MIX_NAMES`` so the mixture is defined in
+    exactly one place (lazy import: presets pulls in the training stack).
+    """
+    if names is None:
+        from repro.core.presets import SCENARIO_MIX_NAMES
+        names = SCENARIO_MIX_NAMES
+    return [make_env(n, randomize=True) for n in names]

@@ -16,8 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dqn, env as kenv
-from repro.core.types import EnvConfig
+from repro.core import env as kenv
 from repro.kernels import ops
 
 

@@ -4,12 +4,11 @@ consolidation→restore loop."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import restore, save
 from repro.core import dqn
-from repro.sched import FleetState, JobSpec, PlacementEngine, StragglerMonitor
+from repro.sched import JobSpec, PlacementEngine, StragglerMonitor
 from repro.sched.placement import fresh_fleet
 
 

@@ -1,6 +1,5 @@
 """Unit tests for the Table-3 / Table-5 reward functions."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import rewards

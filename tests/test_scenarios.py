@@ -1,0 +1,253 @@
+"""Scenario subsystem tests: registry integrity, episode determinism,
+feasibility invariants under heterogeneous capacities, and equivalence of the
+O(N) incremental afterstate scorer against the vmap reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import env as kenv, schedulers, train_rl
+from repro.core.types import PodSpec, paper_cluster, training_cluster
+
+HETERO = ("hetero-bigsmall", "train-serve-mix", "memory-pressure", "spot-flaky")
+
+
+class TestRegistry:
+    def test_at_least_six_scenarios(self):
+        names = scenarios.scenario_names()
+        assert len(names) >= 6
+        for name in names:
+            scn = scenarios.get_scenario(name)
+            assert scn.name == name
+            assert len(scn.node_classes) >= 1 and len(scn.pod_types) >= 1
+            assert scn.n_nodes == sum(c.count for c in scn.node_classes)
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError, match="unknown scenario"):
+            scenarios.get_scenario("nope")
+
+    def test_make_env_tracks_pool_size(self):
+        for name in scenarios.scenario_names():
+            env_cfg = scenarios.make_env(name)
+            assert env_cfg.n_nodes == scenarios.get_scenario(name).n_nodes
+            assert env_cfg.scenario is scenarios.get_scenario(name)
+
+    def test_heterogeneous_capacities_materialize(self):
+        env_cfg = scenarios.make_env("hetero-bigsmall")
+        state = kenv.reset(jax.random.PRNGKey(0), env_cfg)
+        cap = np.asarray(state.cpu_capacity)
+        classes = scenarios.get_scenario("hetero-bigsmall").node_classes
+        expect = np.concatenate([np.full(c.count, c.cpu_capacity) for c in classes])
+        np.testing.assert_array_equal(cap, expect)
+        # base load scales with class capacity (big nodes carry more)
+        base = np.asarray(state.base_cpu)
+        assert base.max() <= cap.max()
+        assert bool(np.all(base <= cap * 0.35))
+
+
+class TestPodTable:
+    def test_burst_table_matches_default_pod(self):
+        cfg = paper_cluster()
+        table = kenv.sample_pod_table(jax.random.PRNGKey(0), cfg, 20)
+        np.testing.assert_allclose(np.asarray(table.specs.cpu_request),
+                                   np.full(20, cfg.pod_cpu_request))
+        np.testing.assert_allclose(np.asarray(table.dt_s),
+                                   np.full(20, cfg.schedule_dt_s))
+
+    def test_table_is_deterministic(self):
+        env_cfg = scenarios.make_env("train-serve-mix")
+        t1 = kenv.sample_pod_table(jax.random.PRNGKey(3), env_cfg, 64)
+        t2 = kenv.sample_pod_table(jax.random.PRNGKey(3), env_cfg, 64)
+        for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mixture_weights_respected(self):
+        env_cfg = scenarios.make_env("train-serve-mix")  # 30% train / 70% serve
+        table = kenv.sample_pod_table(jax.random.PRNGKey(0), env_cfg, 2000)
+        frac_train = float(np.mean(np.asarray(table.type_idx) == 0))
+        assert 0.2 < frac_train < 0.4
+        # specs gather the per-type catalog entries
+        scn = env_cfg.scenario
+        req = np.asarray(table.specs.cpu_request)
+        idx = np.asarray(table.type_idx)
+        for i, p in enumerate(scn.pod_types):
+            assert np.all(req[idx == i] == p.cpu_request)
+
+    def test_poisson_gaps(self):
+        env_cfg = scenarios.make_env("spot-flaky")
+        rate = env_cfg.scenario.arrival.rate_per_s
+        table = kenv.sample_pod_table(jax.random.PRNGKey(1), env_cfg, 4000)
+        dt = np.asarray(table.dt_s)
+        assert np.all(dt > 0)
+        assert np.mean(dt) == pytest.approx(1.0 / rate, rel=0.1)
+
+    def test_diurnal_gaps_modulate(self):
+        env_cfg = scenarios.make_env("diurnal-serve")
+        table = kenv.sample_pod_table(jax.random.PRNGKey(1), env_cfg, 2000)
+        dt = np.asarray(table.dt_s)
+        assert np.all(dt > 0) and np.all(np.isfinite(dt))
+        # the wave makes gaps systematically longer in the trough than the
+        # crest — far beyond what a constant-rate stream's noise produces
+        assert dt.max() / max(dt.min(), 1e-9) > 20.0
+
+
+class TestEpisodes:
+    def test_episode_deterministic_per_key(self):
+        for name in ("hetero-bigsmall", "diurnal-serve"):
+            env_cfg = scenarios.make_env(name)
+            sel = schedulers.make_kube_selector(env_cfg)
+            ep = scenarios.scenario_episode(env_cfg, sel)
+            s1, d1, m1 = ep(jax.random.PRNGKey(5))
+            s2, d2, m2 = ep(jax.random.PRNGKey(5))
+            assert float(m1) == float(m2)
+            np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+            s3, _, m3 = ep(jax.random.PRNGKey(6))
+            assert not np.array_equal(np.asarray(s1.base_cpu), np.asarray(s3.base_cpu))
+
+    def test_reset_key_disjoint_from_action_keys(self):
+        """run_episode must derive reset and action keys from disjoint splits
+        (the seed reused `key` for both, correlating layout with noise)."""
+        cfg = paper_cluster()
+        key = jax.random.PRNGKey(9)
+        sel = schedulers.make_kube_selector(cfg)
+        final, _, _ = kenv.run_episode(key, cfg, sel, 10)
+        expected = kenv.reset(jax.random.split(key, 3)[0], cfg)
+        # base_cpu is invariant through placements/ticks: the episode's
+        # initial layout must be exactly reset(first split), not reset(key)
+        np.testing.assert_array_equal(np.asarray(final.base_cpu),
+                                      np.asarray(expected.base_cpu))
+        old = kenv.reset(key, cfg)
+        assert not np.array_equal(np.asarray(final.base_cpu), np.asarray(old.base_cpu))
+
+    @pytest.mark.parametrize("name", HETERO)
+    def test_feasibility_invariants(self, name):
+        env_cfg = scenarios.make_env(name)
+        sel = schedulers.make_kube_selector(env_cfg)
+        ep = scenarios.scenario_episode(env_cfg, sel, n_pods=30)
+        for seed in (0, 1):
+            state, _, metric = ep(jax.random.PRNGKey(seed))
+            cap = np.asarray(state.cpu_capacity)
+            assert bool(np.all(np.asarray(state.cpu_requested) <= cap + 1e-3))
+            assert bool(np.all(np.asarray(state.mem_requested)
+                               <= np.asarray(state.mem_capacity) + 1e-3))
+            assert bool(np.all(np.asarray(state.num_pods)
+                               <= np.asarray(state.max_pods)))
+            assert bool(np.all(np.asarray(state.exp_pods)[~np.asarray(state.healthy)] == 0))
+            assert np.isfinite(float(metric))
+
+    def test_randomized_resets_stay_physical(self):
+        """Domain-randomized training resets must respect each node class's
+        own memory and pod-slot capacity (a 4 GiB edge node must not wake up
+        hosting a big node's worth of pods)."""
+        for name in HETERO:
+            env_cfg = scenarios.make_env(name, randomize=True)
+            for seed in range(4):
+                state = kenv.reset(jax.random.PRNGKey(seed), env_cfg)
+                assert bool(np.all(np.asarray(state.mem_used)
+                                   <= np.asarray(state.mem_capacity))), name
+                assert bool(np.all(np.asarray(state.mem_requested)
+                                   <= np.asarray(state.mem_capacity))), name
+                assert bool(np.all(np.asarray(state.num_pods)
+                                   <= np.asarray(state.max_pods))), name
+                feats = np.asarray(kenv.features(state, env_cfg))
+                assert feats[:, 1].max() <= 100.0 + 1e-3, name  # mem%
+
+    def test_feasible_respects_per_node_capacity(self):
+        env_cfg = scenarios.make_env("hetero-bigsmall")
+        state = kenv.reset(jax.random.PRNGKey(0), env_cfg)
+        # a pod requesting more than a small-edge node's total capacity
+        big_pod = PodSpec(cpu_request=jnp.float32(3000.0), cpu_demand=jnp.float32(2500.0),
+                          mem_request=jnp.float32(1024.0), mem_demand=jnp.float32(900.0))
+        ok = np.asarray(kenv.feasible(state, big_pod, env_cfg))
+        small = np.asarray(state.cpu_capacity) < 3000.0
+        assert not ok[small].any()
+
+
+class TestAfterstateEquivalence:
+    def _pods(self):
+        return [
+            kenv.default_pod(paper_cluster()),
+            PodSpec(cpu_request=jnp.float32(900.0), cpu_demand=jnp.float32(780.0),
+                    mem_request=jnp.float32(2048.0), mem_demand=jnp.float32(1800.0)),
+        ]
+
+    def _states(self):
+        out = []
+        for cfg in (paper_cluster(), training_cluster(),
+                    scenarios.make_env("hetero-bigsmall"),
+                    scenarios.make_env("spot-flaky", randomize=True)):
+            for seed in (0, 1, 2):
+                out.append((kenv.reset(jax.random.PRNGKey(seed), cfg), cfg))
+        return out
+
+    def test_fast_matches_reference(self):
+        for state, cfg in self._states():
+            for pod in self._pods():
+                fast = np.asarray(kenv.hypothetical_place(state, pod, cfg))
+                ref = np.asarray(kenv.hypothetical_place_reference(state, pod, cfg))
+                np.testing.assert_allclose(fast, ref, atol=1e-5, rtol=1e-5)
+
+    def test_fast_matches_reference_under_jit(self):
+        cfg = scenarios.make_env("memory-pressure")
+        state = kenv.reset(jax.random.PRNGKey(7), cfg)
+        pod = self._pods()[1]
+        fast = jax.jit(lambda s: kenv.hypothetical_place(s, pod, cfg))(state)
+        ref = jax.jit(lambda s: kenv.hypothetical_place_reference(s, pod, cfg))(state)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_rows_match_full_transition(self):
+        """Row i of the fast path == features(place(state, i))[i] exactly."""
+        cfg = scenarios.make_env("hetero-bigsmall")
+        state = kenv.reset(jax.random.PRNGKey(3), cfg)
+        pod = self._pods()[0]
+        fast = np.asarray(kenv.hypothetical_place(state, pod, cfg))
+        for i in (0, 3, cfg.n_nodes - 1):
+            placed = kenv.place(state, jnp.int32(i), pod, cfg)
+            row = np.asarray(kenv.features(placed, cfg))[i]
+            np.testing.assert_allclose(fast[i], row, atol=1e-5, rtol=1e-5)
+
+    def test_mid_episode_states_match(self):
+        """Equivalence must hold on evolved states (startup transients, warm
+        caches, crowded nodes), not just fresh resets."""
+        cfg = scenarios.make_env("batch-storm")
+        state = kenv.reset(jax.random.PRNGKey(0), cfg)
+        pod = self._pods()[0]
+        for step, a in enumerate([0, 0, 1, 5, 5, 5, 2]):
+            state = kenv.place(state, jnp.int32(a), pod, cfg)
+            if step % 2:
+                state = kenv.tick(state, cfg, cfg.schedule_dt_s)
+            fast = np.asarray(kenv.hypothetical_place(state, pod, cfg))
+            ref = np.asarray(kenv.hypothetical_place_reference(state, pod, cfg))
+            np.testing.assert_allclose(fast, ref, atol=1e-5, rtol=1e-5)
+
+
+class TestMixtureTraining:
+    def test_train_mixture_smoke(self):
+        rl = train_rl.RLConfig(variant="sdqn", episodes=4, pods_per_episode=6,
+                               n_envs=2, buffer_capacity=128, batch_size=16)
+        cfgs = [scenarios.make_env(n, randomize=True)
+                for n in ("paper-burst", "hetero-bigsmall")]
+        params, metrics = train_rl.train_mixture(jax.random.PRNGKey(0), cfgs, rl,
+                                                 rounds=2)
+        assert metrics["loss"].shape == (4,)
+        for leaf in jax.tree.leaves(params):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+        # the mixture-trained net drives a scenario it never saw
+        env_cfg = scenarios.make_env("memory-pressure")
+        sel = schedulers.make_sdqn_selector(params, env_cfg)
+        res = scenarios.evaluate_scenario(jax.random.PRNGKey(1), env_cfg, sel,
+                                          trials=1, n_pods=10)
+        assert np.isfinite(res["metric_mean"])
+        assert res["pods_placed_mean"] == 10.0
+
+    def test_train_mixture_honors_episode_budget(self):
+        """episodes smaller than cfgs*rounds must not be silently inflated."""
+        rl = train_rl.RLConfig(variant="sdqn", episodes=5, pods_per_episode=4,
+                               n_envs=2, buffer_capacity=64, batch_size=8)
+        cfgs = [scenarios.make_env(n, randomize=True)
+                for n in ("paper-burst", "hetero-bigsmall")]
+        _, metrics = train_rl.train_mixture(jax.random.PRNGKey(0), cfgs, rl,
+                                            rounds=4)
+        assert metrics["loss"].shape == (5,)

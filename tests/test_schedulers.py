@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import baselines, dqn, env as kenv, schedulers
 from repro.core.types import paper_cluster

@@ -1,9 +1,7 @@
 """Launch-layer tests: sharding rules, input specs, roofline machinery."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, list_archs, shape_applicable
 from repro.launch import shapes as shp
@@ -13,8 +11,16 @@ from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms
 
 
 def fake_mesh(shape=(4, 2), axes=("data", "model")):
-    """Spec computation only needs axis names/sizes — AbstractMesh suffices."""
-    return jax.sharding.AbstractMesh(shape, axes)
+    """Spec computation only needs axis names/sizes — AbstractMesh suffices.
+
+    jax 0.4.x wants one (name, size) tuple per axis; jax >= 0.5 takes
+    (shape, axes) positionally.  Support both so the suite tracks the
+    installed CPU jax.
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(shape, axes)
 
 
 class TestParamSpecs:

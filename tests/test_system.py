@@ -8,11 +8,10 @@ default average CPU, and SDQN-n consolidating onto ~n=2 nodes.
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import baselines, env as kenv, schedulers, train_rl
+from repro.core import env as kenv, schedulers, train_rl
 from repro.core.types import paper_cluster, training_cluster
 
 
