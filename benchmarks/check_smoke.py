@@ -1,0 +1,87 @@
+"""CI gate: fail when a scheduler-vs-kube avg-CPU row regresses vs baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_smoke bench-smoke.json \
+        benchmarks/baseline_smoke.json [--tolerance 0.10]
+
+For every scenario present in both runs, compares the sdqn/kube ratio of the
+avg-CPU metric (``derived`` column of the ``scenario_<name>_<policy>`` rows).
+The ratio — not the absolute percentage — is gated, so container-speed noise
+and calibration drift cancel out; what must not regress is *how much better
+than the default scheduler* the learned policy stays.  A current ratio more
+than ``tolerance`` (default 10%) above the committed baseline ratio fails.
+Timing columns are informational only (CI machines vary too much to gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+
+def scenario_ratios(rows) -> Dict[str, Tuple[float, float, float]]:
+    """{scenario: (kube_cpu, sdqn_cpu, sdqn/kube)} from benchmark rows."""
+    metric: Dict[Tuple[str, str], float] = {}
+    for row in rows:
+        name = row["name"]
+        if not name.startswith("scenario_"):
+            continue
+        scenario, _, policy = name[len("scenario_"):].rpartition("_")
+        metric[(scenario, policy)] = float(row["derived"])
+    out = {}
+    for (scenario, policy), kube_cpu in metric.items():
+        if policy != "kube":
+            continue
+        sdqn_cpu = metric.get((scenario, "sdqn"))
+        if sdqn_cpu is None or kube_cpu <= 0.0:
+            continue
+        out[scenario] = (kube_cpu, sdqn_cpu, sdqn_cpu / kube_cpu)
+    return out
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> int:
+    cur = scenario_ratios(current["rows"])
+    base = scenario_ratios(baseline["rows"])
+    if not base:
+        print("check_smoke: baseline has no scenario rows", file=sys.stderr)
+        return 2
+    failures = []
+    print(f"{'scenario':20s} {'base sdqn/kube':>14s} {'cur sdqn/kube':>14s}  verdict")
+    for scenario, (_, _, base_ratio) in sorted(base.items()):
+        if scenario not in cur:
+            failures.append(f"{scenario}: missing from current run")
+            print(f"{scenario:20s} {base_ratio:14.3f} {'MISSING':>14s}  FAIL")
+            continue
+        ratio = cur[scenario][2]
+        ok = ratio <= base_ratio * (1.0 + tolerance)
+        print(f"{scenario:20s} {base_ratio:14.3f} {ratio:14.3f}  "
+              f"{'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{scenario}: sdqn/kube {ratio:.3f} vs baseline "
+                f"{base_ratio:.3f} (> +{tolerance:.0%})")
+    if failures:
+        print("\nREGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(base)} scenario ratios within +{tolerance:.0%} of baseline")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="JSON from benchmarks.run --smoke --json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative regression of sdqn/kube (default 0.10)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    return compare(current, baseline, args.tolerance)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

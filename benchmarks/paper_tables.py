@@ -15,8 +15,9 @@ from typing import Callable, Dict, Tuple
 import jax
 import numpy as np
 
-from repro.core import baselines, env as kenv, presets, schedulers, train_rl
+from repro.core import baselines, presets, schedulers, train_rl
 from repro.core.types import paper_cluster, training_cluster
+from repro.eval import engine as eval_engine
 
 CFG = paper_cluster()
 TCFG = training_cluster()
@@ -28,14 +29,18 @@ PAPER = {
 
 
 def _trials(select: Callable, n_trials: int = 5, n_pods: int = 50):
-    rows, mets = [], []
-    ep = jax.jit(lambda kk: kenv.run_episode(kk, CFG, select, n_pods))
+    """All trials of one scheduler as a single vmapped XLA launch.
+
+    Keys stay ``PRNGKey(100 + t)`` — the benchmark protocol's trial ladder —
+    so the batched engine reproduces the per-trial loop's episodes exactly.
+    """
+    batch = eval_engine.make_batch_episode(CFG, select, n_pods)
+    keys = eval_engine.fixed_trial_keys(100, n_trials)
     t0 = time.time()
-    for t in range(n_trials):
-        state, _, met = ep(jax.random.PRNGKey(100 + t))
-        rows.append([int(x) for x in np.asarray(state.exp_pods)])
-        mets.append(float(met))
+    res = jax.block_until_ready(batch(keys))
     dt_us = (time.time() - t0) / n_trials * 1e6
+    rows = [[int(x) for x in row] for row in np.asarray(res.exp_pods)]
+    mets = [float(m) for m in np.asarray(res.metric)]
     mean = float(np.mean(mets))
     cv = float(np.std(mets) / mean * 100.0)
     return rows, mets, mean, cv, dt_us
@@ -56,13 +61,15 @@ def policies() -> Dict[str, dict]:
 
     def pick_supervised(init_fn, score_fn, salt):
         best, bestm = None, np.inf
+        # one compilation for all seeds: params flow through the evaluator
+        evaluator = eval_engine.make_param_evaluator(
+            CFG, lambda p: schedulers.make_neural_selector(p, score_fn, CFG), 50)
+        val_keys = eval_engine.fixed_trial_keys(5000, 6)
         for s in range(presets.N_SUPERVISED_SEEDS):
             p = train_rl.train_supervised_scorer(
                 jax.random.fold_in(key, salt + s), TCFG, init_fn, score_fn,
                 episodes=presets.SUPERVISED_EPISODES)
-            sel = schedulers.make_neural_selector(p, score_fn, CFG)
-            ep = jax.jit(lambda kk: kenv.run_episode(kk, CFG, sel, 50)[2])
-            m = float(np.mean([ep(jax.random.PRNGKey(5000 + t)) for t in range(6)]))
+            m = float(np.mean(np.asarray(evaluator(p, val_keys).metric)))
             if m < bestm:
                 best, bestm = p, m
         return best

@@ -89,6 +89,8 @@ def main() -> None:
             train_episodes=args.train_episodes or 12)
         rows += sched_scale.afterstate_throughput()
         rows += sched_scale.scoring_throughput()
+        rows += sched_scale.fused_scoring()
+        rows += sched_scale.eval_engine_speedup(trials=16)
     else:
         from benchmarks import roofline_report, sched_scale
 

@@ -14,6 +14,7 @@ import jax
 
 from repro import scenarios
 from repro.core import presets, schedulers, train_rl
+from repro.eval import engine as eval_engine
 
 
 @functools.lru_cache(maxsize=None)
@@ -44,8 +45,9 @@ def bench_scenario(
             sel = schedulers.make_sdqn_selector(mixture_policy(train_episodes), env_cfg)
         else:
             raise ValueError(f"unknown policy {policy!r}; expected 'kube' or 'sdqn'")
-        ep = scenarios.scenario_episode(env_cfg, sel, n_pods)
-        jax.block_until_ready(ep(jax.random.PRNGKey(0)))  # compile outside the clock
+        # batched trial runner: all trials are ONE vmapped XLA launch
+        ep = scenarios.batch_episode(env_cfg, sel, n_pods)
+        jax.block_until_ready(ep(eval_engine.trial_keys(jax.random.PRNGKey(0), trials)))
         t0 = time.time()
         res = scenarios.evaluate_scenario(
             jax.random.PRNGKey(100), env_cfg, sel, trials=trials, n_pods=n_pods,
@@ -54,7 +56,8 @@ def bench_scenario(
         rows.append((f"scenario_{name}_{policy}", us, res["metric_mean"]))
         print(f"  {name:18s} {policy:5s}  avg_cpu={res['metric_mean']:6.2f}%"
               f" (+-{res['metric_std']:.2f})  placed={res['pods_placed_mean']:.0f}"
-              f"/{res['n_pods']:.0f}  nodes={res['n_nodes']:.0f}")
+              f"/{res['n_pods']:.0f}  dropped={res['dropped_mean']:.1f}"
+              f"  nodes={res['n_nodes']:.0f}")
     return rows
 
 

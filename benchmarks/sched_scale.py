@@ -5,9 +5,14 @@
    on TPU the compiled kernel path is selected automatically).
 2. Afterstate feature construction: the O(N) incremental scorer vs the
    vmap-of-place reference (O(N^2)) it replaced.
-3. End-to-end placement throughput (pods/s) on 1024-node clusters,
+3. Fused afterstate *scoring*: features + Q-net in one pass
+   (``ops.sdqn_score_afterstate``) vs the unfused
+   ``hypothetical_place`` -> normalize -> ``qvalues`` chain.
+4. Batched evaluation engine: 64 vmapped trials in one launch vs the
+   per-trial Python dispatch loop it replaced.
+5. End-to-end placement throughput (pods/s) on 1024-node clusters,
    homogeneous and heterogeneous (fleet-hetero scenario).
-4. On-device RL training throughput (Anakin-style, transitions/s).
+6. On-device RL training throughput (Anakin-style, transitions/s).
 """
 from __future__ import annotations
 
@@ -17,7 +22,9 @@ from typing import List, Tuple
 import jax
 
 from repro.core import dqn, env as kenv, schedulers, train_rl
-from repro.core.types import fleet_cluster, training_cluster
+from repro.core.types import fleet_cluster, paper_cluster, training_cluster
+from repro.eval import engine as eval_engine
+from repro.kernels import ops
 from repro.scenarios import make_env
 
 
@@ -71,6 +78,62 @@ def afterstate_throughput() -> List[Tuple[str, float, float]]:
     return rows
 
 
+def fused_scoring() -> List[Tuple[str, float, float]]:
+    """Fused in-kernel afterstate scoring vs the unfused jnp chain.
+
+    The unfused baseline is ``schedulers.score_afterstates``'s small-N path
+    (``hypothetical_place`` -> normalize -> ``qvalues``), jitted as one
+    program; the fused path computes the features inside the scorer
+    (Pallas on TPU, the fused-XLA twin on CPU — the interpret-safe
+    fallback) without materializing the (N, 6) matrix.  ``derived`` is
+    nodes/s for timed rows and measured speedup for summary rows.
+    """
+    rows = []
+    params = dqn.init_qnet(jax.random.PRNGKey(0))
+    mode = None if jax.default_backend() == "tpu" else "xla"
+    for n in (4096, 16384, 131072):
+        cfg = fleet_cluster(n)
+        state = kenv.reset(jax.random.PRNGKey(0), cfg)
+        pod = kenv.default_pod(cfg)
+        unfused = jax.jit(lambda s, _cfg=cfg: ops.sdqn_score_afterstate(
+            s, pod, _cfg, params, mode="ref"))
+        fused = jax.jit(lambda s, _cfg=cfg: ops.sdqn_score_afterstate(
+            s, pod, _cfg, params, mode=mode))
+        dt_un = _time(unfused, state)
+        dt_fu = _time(fused, state)
+        rows.append((f"afterscore_unfused_n{n}", dt_un * 1e6, n / dt_un))
+        rows.append((f"afterscore_fused_n{n}", dt_fu * 1e6, n / dt_fu))
+        rows.append((f"afterscore_fused_speedup_n{n}", 0.0, dt_un / dt_fu))
+    return rows
+
+
+def eval_engine_speedup(trials: int = 64) -> List[Tuple[str, float, float]]:
+    """Batched evaluation engine vs the per-trial Python dispatch loop.
+
+    Same episodes (identical trial keys), same jitted episode body; the only
+    difference is one vmapped launch vs ``trials`` sequential dispatches.
+    ``derived`` is episodes/s for the timed rows, speedup for the summary.
+    """
+    cfg = paper_cluster()
+    sel = schedulers.make_kube_selector(cfg)
+    n_pods = 50
+    keys = eval_engine.trial_keys(jax.random.PRNGKey(0), trials)
+
+    loop_ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, n_pods)[2])
+
+    def loop(keys):
+        return [loop_ep(keys[t]) for t in range(trials)]
+
+    batch = eval_engine.make_batch_episode(cfg, sel, n_pods)
+    dt_loop = _time(loop, keys, iters=3, warmup=1)
+    dt_batch = _time(batch, keys, iters=3, warmup=1)
+    return [
+        (f"eval_loop_{trials}trials", dt_loop * 1e6, trials / dt_loop),
+        (f"eval_batched_{trials}trials", dt_batch * 1e6, trials / dt_batch),
+        (f"eval_engine_speedup_{trials}trials", 0.0, dt_loop / dt_batch),
+    ]
+
+
 def placement_throughput() -> List[Tuple[str, float, float]]:
     rows = []
     cfg = fleet_cluster(1024)
@@ -104,6 +167,8 @@ def run_all() -> List[Tuple[str, float, float]]:
     out = []
     out += scoring_throughput()
     out += afterstate_throughput()
+    out += fused_scoring()
+    out += eval_engine_speedup()
     out += placement_throughput()
     out += training_throughput()
     return out

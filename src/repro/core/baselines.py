@@ -38,10 +38,13 @@ def kube_scores(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarra
 def kube_select(key: jax.Array, state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
     ok = kenv.feasible(state, pod, cfg)
     scores = jnp.where(ok, kube_scores(state, pod, cfg), -jnp.inf)
-    top = scores >= jnp.max(scores) - 1e-6
-    # random tie-break among top scorers
+    top = ok & (scores >= jnp.max(scores) - 1e-6)
+    # random tie-break among top scorers; with no feasible node every score is
+    # -inf and `top` would be all-True, making the tie-break bind the pod to a
+    # *random* infeasible node — return the drop sentinel instead.
     noise = jax.random.uniform(key, scores.shape)
-    return jnp.argmax(jnp.where(top, noise, -jnp.inf)).astype(jnp.int32)
+    choice = jnp.argmax(jnp.where(top, noise, -jnp.inf)).astype(jnp.int32)
+    return jnp.where(jnp.any(ok), choice, jnp.int32(kenv.NO_NODE))
 
 
 # ---------------------------------------------------------------------------
@@ -140,11 +143,14 @@ ADAM = AdamConfig(lr=1e-3, master_dtype="")
 
 
 def make_regression_trainer(score_fn):
-    def loss_fn(params, feats, targets):
-        return jnp.mean(jnp.square(score_fn(params, feats) - targets))
+    def loss_fn(params, feats, targets, weights):
+        err = jnp.square(score_fn(params, feats) - targets)
+        return jnp.sum(err * weights) / jnp.maximum(jnp.sum(weights), 1e-9)
 
-    def step(params, opt_state, feats, targets):
-        loss, grads = jax.value_and_grad(loss_fn)(params, feats, targets)
+    def step(params, opt_state, feats, targets, weights=None):
+        if weights is None:
+            weights = jnp.ones(targets.shape, targets.dtype)
+        loss, grads = jax.value_and_grad(loss_fn)(params, feats, targets, weights)
         params, opt_state, _ = adam_update(params, grads, opt_state, ADAM)
         return params, opt_state, loss
 

@@ -325,8 +325,8 @@ def feasible(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def place(state: ClusterState, action: jnp.ndarray, pod: PodSpec, cfg: EnvConfig) -> ClusterState:
-    """Bind one pod to node `action` (int32 scalar).
+def pull_cost_now(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
+    """Cost of starting a cold image pull *right now* (scalar).
 
     Cold image pulls contend for registry/network bandwidth: each pull already
     in flight (startup transient still large) inflates a new pull's cost by
@@ -334,12 +334,25 @@ def place(state: ClusterState, action: jnp.ndarray, pod: PodSpec, cfg: EnvConfig
     nodes at once (what the request-blind default scheduler does) is
     super-additively expensive, while warm reuse is cheap (paper §4.3.2).
     """
+    in_flight = jnp.sum(state.startup_cpu > 0.25 * cfg.image_pull_cost).astype(jnp.float32)
+    return cfg.image_pull_cost * (1.0 + cfg.pull_concurrency_coeff * in_flight)
+
+
+NO_NODE = -1  # sentinel action: no feasible node, the pod is dropped (no-op bind)
+
+
+def place(state: ClusterState, action: jnp.ndarray, pod: PodSpec, cfg: EnvConfig) -> ClusterState:
+    """Bind one pod to node `action` (int32 scalar).
+
+    ``action == NO_NODE`` (-1) is the drop sentinel emitted by the selectors
+    when the filtering phase leaves no candidate: the one-hot of -1 is all
+    zeros, so the bind is a no-op and the cluster state passes through
+    unchanged (no phantom pod on node 0 / a random node).
+    """
     onehot = jax.nn.one_hot(action, state.n_nodes, dtype=jnp.float32)
     onehot_i = onehot.astype(jnp.int32)
-    cold = jnp.logical_not(state.image_cached)[action]
-    in_flight = jnp.sum(state.startup_cpu > 0.25 * cfg.image_pull_cost).astype(jnp.float32)
-    pull_cost = cfg.image_pull_cost * (1.0 + cfg.pull_concurrency_coeff * in_flight)
-    start_cost = jnp.where(cold, pull_cost, cfg.warm_start_cost)
+    cold = jnp.logical_not(state.image_cached)[jnp.clip(action, 0, state.n_nodes - 1)]
+    start_cost = jnp.where(cold, pull_cost_now(state, cfg), cfg.warm_start_cost)
     return state._replace(
         num_pods=state.num_pods + onehot_i,
         exp_pods=state.exp_pods + onehot_i,
@@ -367,9 +380,8 @@ def hypothetical_place(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp
     is bit-identical to ``hypothetical_place_reference``.
     """
     # placement deltas (same arithmetic as `place` restricted to the chosen row)
-    in_flight = jnp.sum(state.startup_cpu > 0.25 * cfg.image_pull_cost).astype(jnp.float32)
-    pull_cost = cfg.image_pull_cost * (1.0 + cfg.pull_concurrency_coeff * in_flight)
-    start_cost = jnp.where(jnp.logical_not(state.image_cached), pull_cost, cfg.warm_start_cost)
+    start_cost = jnp.where(jnp.logical_not(state.image_cached),
+                           pull_cost_now(state, cfg), cfg.warm_start_cost)
     num_pods = state.num_pods + 1
     exp_pods = state.exp_pods + 1
     pods_cpu = state.pods_cpu + 1.0 * pod.cpu_demand
@@ -429,7 +441,7 @@ def run_episode(
     select_action,  # (key, state, pod) -> int32 node index
     n_pods: int,
     pod_table: Optional[PodTable] = None,
-) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray]:
+) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Schedule `n_pods` arrivals with `select_action`, then settle.
 
     Arrivals come from `pod_table` when given, otherwise they are sampled
@@ -438,7 +450,9 @@ def run_episode(
     the initial cluster layout is independent of the exploration noise.
 
     Returns (final_state, pod_distribution (N,), metric = time-averaged
-    cluster-average CPU% over the measurement window).
+    cluster-average CPU% over the measurement window, dropped = number of
+    arrivals for which the selector returned the ``NO_NODE`` sentinel, i.e.
+    the filtering phase left no feasible candidate and the pod was dropped).
     """
     k_reset, k_pods, k_act = jax.random.split(key, 3)
     state = reset(k_reset, cfg)
@@ -472,4 +486,5 @@ def run_episode(
         settle_step, (state, acc, cnt), None, length=cfg.settle_steps
     )
     distribution = state.num_pods
-    return state, distribution, acc / cnt
+    dropped = jnp.sum(actions < 0).astype(jnp.int32)
+    return state, distribution, acc / cnt, dropped

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 class Replay(NamedTuple):
     feats: jnp.ndarray     # (cap, 6)
     targets: jnp.ndarray   # (cap,)
+    weights: jnp.ndarray   # (cap,) per-entry sample weight (0 = masked out)
     ptr: jnp.ndarray       # () int32
     size: jnp.ndarray      # () int32
 
@@ -18,19 +19,29 @@ def replay_init(capacity: int, n_features: int = 6) -> Replay:
     return Replay(
         feats=jnp.zeros((capacity, n_features), jnp.float32),
         targets=jnp.zeros((capacity,), jnp.float32),
+        weights=jnp.zeros((capacity,), jnp.float32),
         ptr=jnp.zeros((), jnp.int32),
         size=jnp.zeros((), jnp.int32),
     )
 
 
-def replay_add(buf: Replay, feats: jnp.ndarray, targets: jnp.ndarray) -> Replay:
-    """feats: (B, 6); targets: (B,)."""
+def replay_add(buf: Replay, feats: jnp.ndarray, targets: jnp.ndarray,
+               weights: jnp.ndarray = None) -> Replay:
+    """feats: (B, 6); targets: (B,); weights: (B,) or None (= all 1).
+
+    A zero weight stores a transition that never contributes to the loss —
+    used for dropped arrivals (``action == env.NO_NODE``), whose "afterstate"
+    is fabricated and must not train the Q-net.
+    """
     cap = buf.feats.shape[0]
     b = feats.shape[0]
+    if weights is None:
+        weights = jnp.ones((b,), jnp.float32)
     idx = (buf.ptr + jnp.arange(b, dtype=jnp.int32)) % cap
     return Replay(
         feats=buf.feats.at[idx].set(feats),
         targets=buf.targets.at[idx].set(targets),
+        weights=buf.weights.at[idx].set(weights.astype(jnp.float32)),
         ptr=(buf.ptr + b) % cap,
         size=jnp.minimum(buf.size + b, cap),
     )
@@ -39,8 +50,14 @@ def replay_add(buf: Replay, feats: jnp.ndarray, targets: jnp.ndarray) -> Replay:
 def replay_sample(
     buf: Replay, key: jax.Array, batch: int
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Uniform sample with replacement; weights mask out the empty-buffer case."""
+    """Uniform sample with replacement; weights mask out the empty-buffer case.
+
+    Every draw from ``randint(0, size)`` indexes a live entry once the buffer
+    is non-empty, so validity is the scalar ``size > 0`` broadcast over the
+    batch — NOT a per-position ``arange(batch) < size`` mask, which would
+    silently zero-weight the tail of every batch while ``size < batch``.
+    """
     cap = buf.feats.shape[0]
     idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
-    valid = (jnp.arange(batch) < buf.size).astype(jnp.float32) * (buf.size > 0)
+    valid = buf.weights[idx % cap] * (buf.size > 0)
     return buf.feats[idx % cap], buf.targets[idx % cap], valid

@@ -16,22 +16,46 @@ from repro.core.types import ClusterState, EnvConfig, PodSpec
 
 NEG_INF = -jnp.inf
 
+# Above this node count, SDQN scoring goes through the fused afterstate
+# kernel (repro.kernels.ops.sdqn_score_afterstate): afterstate features are
+# computed *inside* the scoring kernel, so the (N, 6) feature matrix is never
+# materialized in HBM.  Below it, the plain O(N) jnp path wins on dispatch
+# overhead.  n_nodes is a static shape, so the branch resolves at trace time.
+FUSED_SCORE_MIN_NODES = 4096
+
 
 def masked_argmax(key: jax.Array, scores: jnp.ndarray, ok: jnp.ndarray,
                   epsilon: jnp.ndarray | float = 0.0) -> jnp.ndarray:
-    """Greedy over feasible nodes, with epsilon-greedy exploration."""
+    """Greedy over feasible nodes, with epsilon-greedy exploration.
+
+    Returns ``env.NO_NODE`` (-1) when no node is feasible: an argmax over
+    all ``-inf`` scores would silently return node 0, binding pods to
+    full/unhealthy nodes during infeasible bursts.  ``env.place`` treats the
+    sentinel as a no-op and ``env.run_episode`` counts it as a drop.
+    """
     scores = jnp.where(ok, scores, NEG_INF)
     greedy = jnp.argmax(scores).astype(jnp.int32)
     ke, kr = jax.random.split(key)
     explore = jax.random.uniform(ke) < epsilon
     noise = jnp.where(ok, jax.random.uniform(kr, scores.shape), NEG_INF)
     rand = jnp.argmax(noise).astype(jnp.int32)
-    return jnp.where(explore, rand, greedy)
+    choice = jnp.where(explore, rand, greedy)
+    return jnp.where(jnp.any(ok), choice, jnp.int32(kenv.NO_NODE))
 
 
 def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
                       cfg: EnvConfig, score_fn=None) -> jnp.ndarray:
-    """(N,) scores: Q(afterstate_i) for each candidate node i."""
+    """(N,) scores: Q(afterstate_i) for each candidate node i.
+
+    With the default Table-4 Q-net and ``N >= FUSED_SCORE_MIN_NODES`` the
+    scoring runs through the fused kernel path (Pallas on TPU, a fused XLA
+    twin elsewhere) which computes afterstate features in-kernel; custom
+    ``score_fn``s (LSTM/Transformer baselines) always take the jnp path.
+    """
+    if score_fn is None and state.n_nodes >= FUSED_SCORE_MIN_NODES:
+        from repro.kernels import ops
+
+        return ops.sdqn_score_afterstate(state, pod, cfg, qparams)
     after = kenv.hypothetical_place(state, pod, cfg)        # (N, 6) raw
     fn = score_fn or dqn.qvalues
     return fn(qparams, kenv.normalize_features(after))

@@ -83,7 +83,10 @@ def _transition(key, qparams, env_state, pod, dt_s, env_cfg: EnvConfig, rl: RLCo
     r = reward_fn(after_feats, before_feats, ok, action,
                   env_state.exp_pods, new_state.exp_pods)
     new_state = kenv.tick(new_state, env_cfg, dt_s)
-    stored = kenv.normalize_features(after_all[action])
+    # action == NO_NODE (drop): there is no realized afterstate — clamp the
+    # gather (a negative index would wrap to the LAST node's features) and
+    # let the caller zero-weight the stored transition in the replay buffer.
+    stored = kenv.normalize_features(after_all[jnp.maximum(action, 0)])
     return new_state, stored, r * REWARD_SCALE, action
 
 
@@ -142,7 +145,7 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int):
             step_no = ep_idx * rl.pods_per_episode + t
             eps = epsilon_at(step_no)
             keys = jax.random.split(kt, rl.n_envs + 2)
-            new_states, stored, r, _ = jax.vmap(
+            new_states, stored, r, actions = jax.vmap(
                 lambda kk, st, pod, dt: _transition(
                     kk, c.params, st, pod, dt, env_cfg, rl, eps, reward_fn)
             )(keys[: rl.n_envs], env_states, pod_t, dt_row)
@@ -155,7 +158,10 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int):
                 )(new_states, pod_next_t)
                 targets = r + jnp.where(t + 1 < rl.pods_per_episode, bonus, 0.0)
 
-            buf = replay_add(c.buffer, stored, targets)
+            # dropped arrivals (all-infeasible burst) store with weight 0:
+            # their features/reward describe a placement that never happened
+            buf = replay_add(c.buffer, stored, targets,
+                             (actions >= 0).astype(jnp.float32))
             feats_b, targets_b, w = replay_sample(buf, keys[-1], rl.batch_size)
             params_, opt_, loss, _ = dqn.train_step(c.params, c.opt_state, feats_b, targets_b, w)
 
@@ -302,19 +308,23 @@ def train_supervised_scorer(
             kt = jax.random.split(jax.random.fold_in(key_ep, 1000 + t), n_envs)
 
             def one(k, st):
-                ok = kenv.feasible(st, pod, env_cfg)
                 a = baselines.kube_select(k, st, pod, env_cfg)
                 before = kenv.features(st, env_cfg)
                 after_all = kenv.hypothetical_place(st, pod, env_cfg)
                 st2 = kenv.place(st, a, pod, env_cfg)
-                r = rewards.sdqn_reward(kenv.features(st2, env_cfg), a, exp_pods=st2.exp_pods,
+                # a == NO_NODE: clamp the gathers (negative index wraps) and
+                # zero-weight the sample — a drop has no realized afterstate
+                a_safe = jnp.maximum(a, 0)
+                r = rewards.sdqn_reward(kenv.features(st2, env_cfg), a_safe,
+                                        exp_pods=st2.exp_pods,
                                         efficiency_weight=efficiency_weight,
                                         before_feats=before) * REWARD_SCALE
                 st2 = kenv.tick(st2, env_cfg, env_cfg.schedule_dt_s)
-                return st2, kenv.normalize_features(after_all[a]), r
+                return (st2, kenv.normalize_features(after_all[a_safe]), r,
+                        (a >= 0).astype(jnp.float32))
 
-            env_states, feats, targs = jax.vmap(one)(kt, env_states)
-            params, opt_state, loss = step_fn(params, opt_state, feats, targs)
+            env_states, feats, targs, valid = jax.vmap(one)(kt, env_states)
+            params, opt_state, loss = step_fn(params, opt_state, feats, targs, valid)
             return ((params, opt_state), env_states), loss
 
         ((params, opt_state), _), losses = jax.lax.scan(
@@ -344,18 +354,24 @@ def train_and_select(
 ):
     """Train `n_seeds` independent policies, return the one with the lowest
     average-CPU metric on validation episodes (seeds disjoint from the
-    benchmark trials, which use PRNGKey(100+))."""
+    benchmark trials, which use PRNGKey(100+)).
+
+    Validation runs through the batched eval engine: the trial dimension is
+    vmapped and the evaluator closes over a selector *factory*, so all
+    ``val_trials`` episodes are one XLA launch and all seeds share a single
+    compilation (the old path re-jitted and re-dispatched per seed x trial).
+    """
     from repro.core import schedulers
+    from repro.eval import engine as eval_engine
 
     best_params, best_metric = None, jnp.inf
     train_fn = jax.jit(lambda k: train(k, train_cfg, rl))
+    evaluator = eval_engine.make_param_evaluator(
+        eval_cfg, lambda p: schedulers.make_sdqn_selector(p, eval_cfg), val_pods)
+    val_keys = eval_engine.fixed_trial_keys(5000, val_trials)
     for s in range(n_seeds):
         params, _ = train_fn(jax.random.fold_in(key, s))
-        select = schedulers.make_sdqn_selector(params, eval_cfg)
-        ep = jax.jit(lambda kk: kenv.run_episode(kk, eval_cfg, select, val_pods)[2])
-        metric = jnp.mean(jnp.stack([
-            ep(jax.random.PRNGKey(5000 + t)) for t in range(val_trials)
-        ]))
+        metric = jnp.mean(evaluator(params, val_keys).metric)
         if metric < best_metric:
             best_params, best_metric = params, metric
     return best_params, float(best_metric)

@@ -1,0 +1,20 @@
+"""Batched scheduler evaluation (vmapped trials, jit once per cell)."""
+from repro.eval.engine import (  # noqa: F401
+    TrialResults,
+    evaluate,
+    fixed_trial_keys,
+    make_batch_episode,
+    make_param_evaluator,
+    summarize,
+    trial_keys,
+)
+
+__all__ = [
+    "TrialResults",
+    "evaluate",
+    "fixed_trial_keys",
+    "make_batch_episode",
+    "make_param_evaluator",
+    "summarize",
+    "trial_keys",
+]

@@ -16,6 +16,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
@@ -77,3 +78,74 @@ def sdqn_score(feats, params, *, mode: Optional[str] = None, block_n: int = 1024
     if mode == "interpret":
         return _ss.sdqn_score(feats, w1, b1, w2, b2, block_n=block_n, interpret=True)
     return ref.sdqn_score_ref(feats, w1, b1, w2, b2)
+
+
+def sdqn_score_afterstate(state, pod, cfg, params, *, mode: Optional[str] = None,
+                          block_n: int = 1024):
+    """Q-values (N,) of every candidate afterstate, features fused in-kernel.
+
+    Accepts the raw ``ClusterState`` columns plus the pod's placement delta
+    and mirrors ``env.hypothetical_place``'s O(N) arithmetic inside the
+    scoring kernel, so the (N, 6) afterstate feature matrix is never
+    materialized in HBM.  ``mode``: ``pallas`` (TPU) / ``interpret`` /
+    ``xla`` (fused jnp twin, default off-TPU) / ``ref`` (unfused oracle:
+    ``hypothetical_place`` + ``dqn.qvalues``).
+    """
+    from repro.core import env as kenv
+
+    mode = mode or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    if mode == "ref":
+        from repro.core import dqn
+
+        after = kenv.hypothetical_place(state, pod, cfg)
+        return dqn.qvalues(params, kenv.normalize_features(after))
+
+    cols = (
+        state.base_cpu, state.pods_cpu, state.startup_cpu,
+        state.num_pods, state.exp_pods, state.mem_used,
+        state.image_cached, state.healthy, state.uptime_hours,
+        state.cpu_capacity, state.mem_capacity, state.max_pods,
+    )
+    scalars = jnp.zeros((_ss._N_SCALARS,), jnp.float32)
+    scalars = scalars.at[_ss._S_CPU_DEMAND].set(pod.cpu_demand)
+    scalars = scalars.at[_ss._S_MEM_DEMAND].set(pod.mem_demand)
+    scalars = scalars.at[_ss._S_PULL].set(kenv.pull_cost_now(state, cfg))
+    scalars = scalars.at[_ss._S_WARM].set(cfg.warm_start_cost)
+    scalars = scalars.at[_ss._S_OVERHEAD].set(cfg.node_active_overhead)
+    scalars = scalars.at[_ss._S_CROWD_KNEE].set(cfg.crowd_knee)
+    scalars = scalars.at[_ss._S_CROWD_COEFF].set(cfg.crowd_coeff)
+    scalars = scalars.at[_ss._S_CONT_KNEE].set(cfg.contention_knee)
+    scalars = scalars.at[_ss._S_CONT_COEFF].set(cfg.contention_coeff)
+    scalars = scalars.at[_ss._S_UPTIME_SCALE].set(kenv.FEATURE_SCALE[4])
+    scalars = scalars.at[_ss._S_EXP_SCALE].set(kenv.FEATURE_SCALE[5])
+    scalars = scalars.at[_ss._S_B2].set(jnp.reshape(params["b2"], ()))
+
+    if mode == "xla":
+        return _ss.sdqn_score_afterstate_xla(cols, scalars, params["w1"],
+                                             params["b1"], params["w2"])
+    return _ss.sdqn_score_afterstate(cols, scalars, params["w1"], params["b1"],
+                                     params["w2"], block_n=block_n,
+                                     interpret=(mode == "interpret"))
+
+
+def sdqn_score_delta(cols, deltas, params, *, mode: Optional[str] = None,
+                     block_n: int = 1024):
+    """Q((cols + deltas) / FEATURE_SCALE) for column-structured fleets.
+
+    The serving-path scorer (``sched.placement``): six raw feature columns
+    plus the job's afterstate delta, assembled and scored in one fused pass
+    (Pallas on TPU, fused XLA twin elsewhere, ``ref`` = stack + qvalues).
+    """
+    from repro.core import env as kenv
+
+    mode = mode or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
+    if mode == "ref":
+        feats = (jnp.stack(cols, axis=-1) + deltas[None, :]) / kenv.FEATURE_SCALE
+        return ref.sdqn_score_ref(feats, w1, b1, w2, b2)
+    if mode == "xla":
+        return _ss.sdqn_score_cols_xla(tuple(cols), deltas, kenv.FEATURE_SCALE,
+                                       w1, b1, w2, b2)
+    return _ss.sdqn_score_cols(tuple(cols), deltas, kenv.FEATURE_SCALE, w1, b1,
+                               w2, b2, block_n=block_n,
+                               interpret=(mode == "interpret"))

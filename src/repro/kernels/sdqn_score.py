@@ -1,11 +1,29 @@
-"""Pallas TPU fused SDQN node-scoring kernel.
+"""Pallas TPU fused SDQN node-scoring kernels.
 
 The paper's hot loop at fleet scale: score N candidate nodes through the
-6->32->1 Q-network (Table 4).  Both matmuls and the ReLU are fused in one
-VMEM pass over the node-feature matrix — at N ~ 10^5-10^6 nodes the layer
-is memory-bound and the fusion removes two HBM round-trips of the (N, 32)
-intermediate.  Feature/hidden dims are zero-padded to lane width by the
-wrapper; weights stay resident in VMEM across the whole grid.
+6->32->1 Q-network (Table 4).  Three entry points:
+
+* ``sdqn_score`` — score a pre-built (N, 6) feature matrix.  Both matmuls
+  and the ReLU are fused in one VMEM pass; at N ~ 10^5-10^6 nodes the layer
+  is memory-bound and the fusion removes two HBM round-trips of the (N, 32)
+  intermediate.
+* ``sdqn_score_afterstate`` — the full afterstate scorer: takes the *raw*
+  per-node ``ClusterState`` columns plus the pod's placement delta and
+  computes the Table-2 afterstate features (mirroring the O(N)
+  ``env.hypothetical_place`` arithmetic: startup transient, CFS crowding,
+  contention knee), normalizes them, and applies the Q-net — all inside the
+  kernel.  The (N, 6) afterstate matrix never touches HBM, which is the
+  dominant traffic of the scoring path in both training and serving.
+* ``sdqn_score_cols`` — afterstate scoring for column-structured fleets
+  (``sched.placement``): six raw feature columns plus a per-feature
+  afterstate delta, features assembled and scored in-kernel.
+
+Each kernel has a ``*_xla`` twin with identical arithmetic (broadcast
+multiply-accumulate, no (N, 6) stack, no GEMM) used as the fused fallback on
+CPU/GPU backends and as the reference for the interpret-mode sweeps.
+Per-node columns are viewed as (N // block_n, block_n) so each grid step
+streams ``block_n`` nodes through the lane dimension; weights and the
+scalar pack stay resident in VMEM/SMEM across the whole grid.
 """
 from __future__ import annotations
 
@@ -64,3 +82,217 @@ def sdqn_score(
         interpret=interpret,
     )(feats, w1, b1.reshape(1, h), w2, b2.reshape(1, 1))
     return out[:n, 0]
+
+
+# ---------------------------------------------------------------------------
+# fused afterstate scoring: raw state columns + placement delta -> Q, with
+# the Table-2 afterstate features computed in-kernel (no (N, 6) in HBM)
+# ---------------------------------------------------------------------------
+
+# scalar-pack layout shared by the afterstate kernel and its XLA twin
+_S_CPU_DEMAND, _S_MEM_DEMAND, _S_PULL, _S_WARM, _S_OVERHEAD = 0, 1, 2, 3, 4
+_S_CROWD_KNEE, _S_CROWD_COEFF, _S_CONT_KNEE, _S_CONT_COEFF = 5, 6, 7, 8
+_S_UPTIME_SCALE, _S_EXP_SCALE, _S_B2 = 9, 10, 11
+_N_SCALARS = 16  # padded pack width
+
+
+def _afterstate_norm_features(base_cpu, pods_cpu, startup_cpu, num_pods,
+                              exp_pods, mem_used, cached, healthy, uptime,
+                              cap, mem_cap, max_pods, s):
+    """Normalized Table-2 afterstate features, elementwise on any shape.
+
+    ``s(i)`` reads scalar ``i`` of the pack.  Mirrors the placement delta of
+    ``env.hypothetical_place`` + ``env._node_cpu_used`` + normalization
+    exactly: one definition shared by the Pallas kernel body (operating on
+    (1, block_n) tiles) and the fused XLA twin (operating on (N,) columns).
+    """
+    start_cost = jnp.where(cached > 0.5, s(_S_WARM), s(_S_PULL))
+    num_pods1 = num_pods + 1.0
+    exp_pods1 = exp_pods + 1.0
+    crowd = jnp.maximum(num_pods1 - s(_S_CROWD_KNEE), 0.0)
+    # the placed node is always active, so the overhead term is unconditional
+    raw = (base_cpu + s(_S_OVERHEAD) + pods_cpu + s(_S_CPU_DEMAND)
+           + startup_cpu + start_cost + s(_S_CROWD_COEFF) * crowd * crowd)
+    util = raw / cap
+    over = jnp.maximum(util - s(_S_CONT_KNEE), 0.0)
+    used = jnp.minimum(raw + s(_S_CONT_COEFF) * over * over * cap, cap)
+    return (
+        used / cap,                                  # 100 * used/cap, /100
+        (mem_used + s(_S_MEM_DEMAND)) / mem_cap,     # 100 * mem/cap, /100
+        num_pods1 / max_pods,                        # 100 * pods/max, /100
+        healthy,
+        uptime / s(_S_UPTIME_SCALE),
+        exp_pods1 / s(_S_EXP_SCALE),
+    )
+
+
+def _afterstate_kernel(base_ref, pcpu_ref, scpu_ref, npod_ref, epod_ref,
+                       mem_ref, cached_ref, health_ref, up_ref, cap_ref,
+                       mcap_ref, mpod_ref, scal_ref, w1t_ref, b1_ref, w2_ref,
+                       o_ref):
+    def s(i):
+        return scal_ref[0, i]
+
+    feats = _afterstate_norm_features(
+        base_ref[...], pcpu_ref[...], scpu_ref[...], npod_ref[...],
+        epod_ref[...], mem_ref[...], cached_ref[...], health_ref[...],
+        up_ref[...], cap_ref[...], mcap_ref[...], mpod_ref[...], s,
+    )  # six (1, bn) rows
+    w1t = w1t_ref[...]                               # (H, 6)
+    h = b1_ref[...]                                  # (H, 1) broadcasts
+    for f in range(6):
+        h = h + w1t[:, f:f + 1] * feats[f]           # (H, 1) * (1, bn)
+    q = jnp.sum(jnp.maximum(h, 0.0) * w2_ref[...], axis=0, keepdims=True)
+    o_ref[...] = q + s(_S_B2)
+
+
+def _grid_cols(cols, n, block_n, pad_value=0.0):
+    """Pad each (N,) column to a block multiple and view as (G, block_n)."""
+    pad_n = (-n) % block_n
+    out = []
+    for c in cols:
+        c = c.astype(jnp.float32)
+        if pad_n:
+            c = jnp.pad(c, (0, pad_n), constant_values=pad_value)
+        out.append(c.reshape(-1, block_n))
+    return out
+
+
+def _scalar_spec():
+    if pltpu is not None:
+        return pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.BlockSpec((1, _N_SCALARS), lambda i: (0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sdqn_score_afterstate(
+    node_cols: tuple,    # 12 x (N,): base_cpu, pods_cpu, startup_cpu,
+    #                      num_pods, exp_pods, mem_used, image_cached,
+    #                      healthy, uptime_hours, cpu_capacity,
+    #                      mem_capacity, max_pods
+    scalars: jnp.ndarray,  # (_N_SCALARS,) pack, see _S_* layout
+    w1: jnp.ndarray,     # (F, H)
+    b1: jnp.ndarray,     # (H,)
+    w2: jnp.ndarray,     # (H, 1)
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Q-values (N,) for every candidate afterstate, features fused in-kernel."""
+    n = node_cols[0].shape[0]
+    h = w1.shape[1]
+    # capacities pad with 1 so padded lanes stay finite (they are sliced off)
+    grids = _grid_cols(node_cols[:9], n, block_n) + _grid_cols(
+        node_cols[9:], n, block_n, pad_value=1.0)
+    g = grids[0].shape[0]
+    col_spec = pl.BlockSpec((1, block_n), lambda i: (i, 0))
+
+    out = pl.pallas_call(
+        _afterstate_kernel,
+        grid=(g,),
+        in_specs=[col_spec] * 12 + [
+            _scalar_spec(),
+            pl.BlockSpec((h, 6), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, block_n), jnp.float32),
+        interpret=interpret,
+    )(*grids, scalars.reshape(1, _N_SCALARS), w1.T, b1.reshape(h, 1), w2)
+    return out.reshape(-1)[:n]
+
+
+@jax.jit
+def sdqn_score_afterstate_xla(node_cols: tuple, scalars: jnp.ndarray,
+                              w1: jnp.ndarray, b1: jnp.ndarray,
+                              w2: jnp.ndarray) -> jnp.ndarray:
+    """Fused XLA twin of the afterstate kernel (CPU/GPU fallback).
+
+    Same arithmetic, expressed as broadcast multiply-accumulates over the
+    raw columns so XLA fuses the whole scorer into one elementwise loop —
+    no (N, 6) feature stack, no GEMM dispatch, no (N, H) round-trip.
+    """
+    cols = [c.astype(jnp.float32) for c in node_cols]
+
+    def s(i):
+        return scalars[i]
+
+    feats = _afterstate_norm_features(*cols, s)
+    hid = b1[None, :]                                # (1, H)
+    for f in range(6):
+        hid = hid + feats[f][:, None] * w1[f][None, :]
+    return jnp.sum(jnp.maximum(hid, 0.0) * w2[:, 0][None, :], axis=-1) + s(_S_B2)
+
+
+# ---------------------------------------------------------------------------
+# fused column scoring for feature-structured fleets (sched.placement):
+# six raw feature columns + per-feature afterstate delta -> Q in one pass
+# ---------------------------------------------------------------------------
+
+
+def _cols_kernel(c0, c1, c2, c3, c4, c5, scal_ref, w1t_ref, b1_ref, w2_ref,
+                 o_ref):
+    cols = (c0, c1, c2, c3, c4, c5)
+    w1t = w1t_ref[...]                               # (H, 6), scale pre-folded
+    h = b1_ref[...]                                  # (H, 1)
+    for f in range(6):
+        h = h + w1t[:, f:f + 1] * (cols[f][...] + scal_ref[0, f])
+    q = jnp.sum(jnp.maximum(h, 0.0) * w2_ref[...], axis=0, keepdims=True)
+    o_ref[...] = q + scal_ref[0, 6]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sdqn_score_cols(
+    cols: tuple,          # 6 x (N,) raw feature columns
+    deltas: jnp.ndarray,  # (6,) afterstate delta per feature (raw units)
+    scale: jnp.ndarray,   # (6,) feature normalization (env.FEATURE_SCALE)
+    w1: jnp.ndarray,      # (F, H)
+    b1: jnp.ndarray,      # (H,)
+    w2: jnp.ndarray,      # (H, 1)
+    b2: jnp.ndarray,      # (1,)
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Q((cols + deltas) / scale) without materializing the (N, 6) matrix.
+
+    Normalization folds into the first-layer weights (w1[f] / scale[f]), so
+    the kernel streams the six raw columns straight into the MAC.
+    """
+    n = cols[0].shape[0]
+    h = w1.shape[1]
+    grids = _grid_cols(cols, n, block_n)
+    g = grids[0].shape[0]
+    col_spec = pl.BlockSpec((1, block_n), lambda i: (i, 0))
+    scal = jnp.zeros((_N_SCALARS,), jnp.float32)
+    scal = scal.at[:6].set(deltas.astype(jnp.float32))
+    scal = scal.at[6].set(jnp.reshape(b2, ()))
+    w1n = w1 / scale[:, None]
+
+    out = pl.pallas_call(
+        _cols_kernel,
+        grid=(g,),
+        in_specs=[col_spec] * 6 + [
+            _scalar_spec(),
+            pl.BlockSpec((h, 6), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, block_n), jnp.float32),
+        interpret=interpret,
+    )(*grids, scal.reshape(1, _N_SCALARS), w1n.T, b1.reshape(h, 1), w2)
+    return out.reshape(-1)[:n]
+
+
+@jax.jit
+def sdqn_score_cols_xla(cols: tuple, deltas: jnp.ndarray, scale: jnp.ndarray,
+                        w1: jnp.ndarray, b1: jnp.ndarray, w2: jnp.ndarray,
+                        b2: jnp.ndarray) -> jnp.ndarray:
+    """Fused XLA twin of ``sdqn_score_cols`` (CPU/GPU fallback)."""
+    w1n = w1 / scale[:, None]
+    hid = b1[None, :]
+    for f in range(6):
+        hid = hid + (cols[f].astype(jnp.float32) + deltas[f])[:, None] * w1n[f][None, :]
+    return jnp.sum(jnp.maximum(hid, 0.0) * w2[:, 0][None, :], axis=-1) + b2[0]

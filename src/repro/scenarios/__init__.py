@@ -6,7 +6,7 @@ tests run; ``catalog`` holds the reusable building blocks; ``engine`` turns a
 scenario + policy into episode metrics.
 """
 from repro.scenarios.catalog import NODE_CLASSES, POD_TYPES
-from repro.scenarios.engine import evaluate_scenario, scenario_episode
+from repro.scenarios.engine import batch_episode, evaluate_scenario, scenario_episode
 from repro.scenarios.registry import (
     SCENARIOS,
     get_scenario,
@@ -19,6 +19,7 @@ __all__ = [
     "NODE_CLASSES",
     "POD_TYPES",
     "SCENARIOS",
+    "batch_episode",
     "evaluate_scenario",
     "get_scenario",
     "make_env",

@@ -1,13 +1,18 @@
-"""Run scenarios against scheduler policies and collect episode metrics."""
+"""Run scenarios against scheduler policies and collect episode metrics.
+
+Trial evaluation is delegated to the batched eval engine
+(``repro.eval.engine``): all trials of a (scenario, scheduler) cell run as
+one vmapped, jitted XLA launch instead of a Python loop of dispatches.
+"""
 from __future__ import annotations
 
 from typing import Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.core import env as kenv
 from repro.core.types import EnvConfig
+from repro.eval import engine as eval_engine
 
 
 def default_n_pods(env_cfg: EnvConfig, n_pods: Optional[int] = None) -> int:
@@ -18,9 +23,15 @@ def default_n_pods(env_cfg: EnvConfig, n_pods: Optional[int] = None) -> int:
 
 def scenario_episode(env_cfg: EnvConfig, select: Callable,
                      n_pods: Optional[int] = None) -> Callable:
-    """Jitted ``key -> (final_state, distribution, metric)`` for one scenario."""
+    """Jitted ``key -> (final_state, distribution, metric, dropped)``."""
     n = default_n_pods(env_cfg, n_pods)
     return jax.jit(lambda k: kenv.run_episode(k, env_cfg, select, n))
+
+
+def batch_episode(env_cfg: EnvConfig, select: Callable,
+                  n_pods: Optional[int] = None) -> Callable:
+    """Jitted ``keys (T, ...) -> TrialResults`` — the batched trial runner."""
+    return eval_engine.make_batch_episode(env_cfg, select, n_pods)
 
 
 def evaluate_scenario(
@@ -33,21 +44,11 @@ def evaluate_scenario(
 ) -> Dict[str, float]:
     """Average the paper's metric (cluster-average CPU%) over `trials` episodes.
 
-    Pass a prebuilt (already warmed) ``episode`` fn to keep jit compilation
-    out of a caller's timing window — each ``scenario_episode`` call returns
-    a fresh closure, so re-calling it would recompile.
+    Pass a prebuilt (already warmed) ``episode`` fn — now the *batched*
+    runner from ``batch_episode`` — to keep jit compilation out of a
+    caller's timing window.  Per-trial keys are ``fold_in(key, t)``, the
+    same ladder the old per-trial loop used.
     """
-    ep = episode if episode is not None else scenario_episode(env_cfg, select, n_pods)
-    mets, placed = [], []
-    for t in range(trials):
-        state, _, met = ep(jax.random.fold_in(key, t))
-        mets.append(float(met))
-        placed.append(int(np.asarray(state.exp_pods).sum()))
-    return {
-        "metric_mean": float(np.mean(mets)),
-        "metric_std": float(np.std(mets)),
-        "pods_placed_mean": float(np.mean(placed)),
-        "trials": float(trials),
-        "n_pods": float(default_n_pods(env_cfg, n_pods)),
-        "n_nodes": float(env_cfg.n_nodes),
-    }
+    out = eval_engine.evaluate(key, env_cfg, select, trials=trials,
+                               n_pods=n_pods, batch=episode)
+    return out

@@ -14,7 +14,8 @@ from typing import List
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sched.placement import FleetState, JobSpec, PlacementEngine
+from repro.sched.placement import (JOB_UTIL_DELTA_PCT, FleetState, JobSpec,
+                                   PlacementEngine)
 
 
 @dataclasses.dataclass
@@ -64,6 +65,7 @@ def consolidation_plan(engine: PlacementEngine, fleet: FleetState,
             trial = trial._replace(
                 cpu_pct=trial.cpu_pct - onehot * job.cpu_pct_demand * jobs_here,
                 mem_pct=trial.mem_pct - onehot * job.mem_pct_demand * jobs_here,
+                job_util_pct=trial.job_util_pct - onehot * JOB_UTIL_DELTA_PCT * jobs_here,
                 num_jobs=trial.num_jobs - (onehot * jobs_here).astype(jnp.int32),
                 healthy=cur.healthy,  # restore health flag
             )

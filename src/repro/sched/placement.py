@@ -19,6 +19,15 @@ import numpy as np
 from repro.core import env as kenv
 from repro.kernels import ops
 
+# Job-slot ceiling per host: the Table-2 "pod utilization" analogue for the
+# fleet.  ``job_util_pct`` advances by JOB_UTIL_DELTA_PCT per bound job, and
+# ``select`` assumes the same delta when scoring afterstates, so the third
+# feature stays consistent with ``num_jobs`` across a placement session.
+MAX_JOBS_PER_HOST = 25.0
+JOB_UTIL_DELTA_PCT = 100.0 / MAX_JOBS_PER_HOST
+
+NO_HOST = -1  # select() sentinel: no feasible host, the job is not bound
+
 
 class FleetState(NamedTuple):
     """Host fleet, vectorized (same layout as the cluster env)."""
@@ -68,16 +77,35 @@ class PlacementEngine:
             (fleet.healthy > 0.5)
             & (fleet.cpu_pct + job.cpu_pct_demand <= self.max_host_cpu_pct)
             & (fleet.mem_pct + job.mem_pct_demand <= 95.0)
+            # job-slot ceiling: keeps job_util_pct <= 100 (the k8s max-pods
+            # analogue), so the third feature stays in the trained range
+            & (fleet.job_util_pct + JOB_UTIL_DELTA_PCT <= 100.0 + 1e-6)
         )
 
     def select(self, fleet: FleetState, job: JobSpec) -> Tuple[int, jnp.ndarray]:
-        """Pick the host for one job. Returns (host index, scores)."""
-        f = fleet.features()
-        delta = jnp.array([job.cpu_pct_demand, job.mem_pct_demand, 0.0, 0.0, 0.0, 1.0])
-        after = f + delta[None, :]      # afterstate of *each* host receiving the job
-        scores = self._score(after)
+        """Pick the host for one job. Returns (host index, scores).
+
+        Afterstate scoring streams the six fleet columns through the fused
+        column kernel (``ops.sdqn_score_delta``): features + job delta +
+        normalization + Q-net in one pass, never materializing the (N, 6)
+        feature matrix in HBM.  The delta matches ``place`` exactly —
+        including the ``job_util_pct`` advance of JOB_UTIL_DELTA_PCT, which
+        previously stayed stale at its reset value.
+        """
+        cols = (fleet.cpu_pct, fleet.mem_pct, fleet.job_util_pct,
+                fleet.healthy.astype(jnp.float32), fleet.uptime_hours,
+                fleet.num_jobs.astype(jnp.float32))
+        delta = jnp.array([job.cpu_pct_demand, job.mem_pct_demand,
+                           JOB_UTIL_DELTA_PCT, 0.0, 0.0, 1.0])
+        mode = None if self.use_kernel is None else (
+            "interpret" if self.use_kernel else "ref")
+        scores = ops.sdqn_score_delta(cols, delta, self.qparams, mode=mode)
         ok = self.feasible(fleet, job)
         scores = jnp.where(ok, scores, -jnp.inf)
+        # all-infeasible fleet: argmax over all -inf would bind host 0 —
+        # return the NO_HOST sentinel instead (place() ignores it)
+        if not bool(jnp.any(ok)):
+            return NO_HOST, scores
         return int(jnp.argmax(scores)), scores
 
     def place(self, fleet: FleetState, host: int, job: JobSpec) -> FleetState:
@@ -85,6 +113,9 @@ class PlacementEngine:
         return fleet._replace(
             cpu_pct=fleet.cpu_pct + onehot * job.cpu_pct_demand,
             mem_pct=fleet.mem_pct + onehot * job.mem_pct_demand,
+            # keep the third Table-2 feature live: without this the serving
+            # path scores every post-first-binding afterstate on stale data
+            job_util_pct=fleet.job_util_pct + onehot * JOB_UTIL_DELTA_PCT,
             num_jobs=fleet.num_jobs + onehot.astype(jnp.int32),
         )
 

@@ -13,7 +13,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.sched.placement import FleetState, JobSpec, PlacementEngine
+from repro.sched.placement import (JOB_UTIL_DELTA_PCT, FleetState, JobSpec,
+                                   PlacementEngine)
 
 
 class StragglerMonitor:
@@ -53,6 +54,7 @@ class StragglerMonitor:
             fleet = fleet._replace(
                 cpu_pct=fleet.cpu_pct - onehot * job.cpu_pct_demand * n_jobs,
                 mem_pct=fleet.mem_pct - onehot * job.mem_pct_demand * n_jobs,
+                job_util_pct=fleet.job_util_pct - onehot * JOB_UTIL_DELTA_PCT * n_jobs,
                 num_jobs=fleet.num_jobs - (onehot * n_jobs).astype(np.int32),
             )
         return fleet, migrations

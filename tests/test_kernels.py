@@ -80,6 +80,54 @@ def test_sdqn_score_sweep(n):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
+# N < block_n (64 -> padded to one block), N not a multiple of block_n
+# (padding path), and exact multiples
+@pytest.mark.parametrize("n", [1, 37, 64, 100, 1000])
+@pytest.mark.parametrize("mode", ["interpret", "xla"])
+def test_sdqn_score_afterstate_sweep(n, mode):
+    """In-kernel afterstate scoring == hypothetical_place + qvalues (<=1e-5).
+
+    The fused path recomputes the Table-2 afterstate features (startup
+    transient, crowding, contention knee) inside the scorer from the raw
+    state columns; any drift from ``env.hypothetical_place``'s arithmetic
+    shows up here.
+    """
+    import dataclasses
+
+    from repro.core import env as kenv
+    from repro.core.types import fleet_cluster
+
+    # unhealthy_prob > 0 exercises the healthy feature column
+    cfg = dataclasses.replace(fleet_cluster(n), unhealthy_prob=0.2,
+                              randomize_workload=True)
+    state = kenv.reset(jax.random.PRNGKey(5), cfg)
+    pod = kenv.default_pod(cfg)
+    params = dqn.init_qnet(jax.random.PRNGKey(6))
+    want = dqn.qvalues(params, kenv.normalize_features(
+        kenv.hypothetical_place(state, pod, cfg)))
+    got = ops.sdqn_score_afterstate(state, pod, cfg, params, mode=mode,
+                                    block_n=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [3, 64, 129])
+def test_sdqn_score_cols_sweep(n):
+    """Fused column scorer (serving path) vs stack + normalize + qvalues."""
+    from repro.core import env as kenv
+
+    params = dqn.init_qnet(jax.random.PRNGKey(7))
+    ks = jax.random.split(jax.random.PRNGKey(8), 6)
+    cols = tuple(jax.random.uniform(k, (n,), minval=0.0, maxval=80.0) for k in ks)
+    deltas = jnp.array([5.0, 2.0, 4.0, 0.0, 0.0, 1.0])
+    want = dqn.qvalues(params, (jnp.stack(cols, axis=-1) + deltas[None, :])
+                       / kenv.FEATURE_SCALE)
+    for mode in ("interpret", "xla"):
+        got = ops.sdqn_score_delta(cols, deltas, params, mode=mode, block_n=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
 class TestXlaPathsMatchOracles:
     """The jnp fallbacks used on CPU/dry-run must agree with the oracles too."""
 

@@ -28,7 +28,8 @@ class TestKubeScheduler:
 
     def test_episode_runs(self):
         sel = schedulers.make_kube_selector(CFG)
-        _, dist, metric = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        _, dist, metric, dropped = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        assert int(dropped) == 0
         assert int(dist.sum()) >= 50  # includes tenant pods
         assert 5.0 < float(metric) < 60.0
 
@@ -81,7 +82,7 @@ class TestSelectors:
     def test_sdqn_selector_runs_episode(self):
         qp = dqn.init_qnet(jax.random.PRNGKey(0))
         sel = schedulers.make_sdqn_selector(qp, CFG)
-        _, dist, metric = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        _, dist, metric, _ = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
         assert float(metric) > 0
 
     def test_unhealthy_node_never_selected(self):
@@ -92,6 +93,107 @@ class TestSelectors:
         sel = schedulers.make_sdqn_selector(qp, CFG)
         for s in range(8):
             assert int(sel(jax.random.PRNGKey(s), state, pod)) != 2
+
+
+class TestInfeasibleBurst:
+    """When filtering leaves no candidate, both selectors must emit the
+    NO_NODE sentinel (not node 0 / a random node) and the episode must
+    surface the drop instead of binding to a full/unhealthy node."""
+
+    def _saturated(self):
+        state = kenv.reset(jax.random.PRNGKey(0), CFG)
+        return state._replace(healthy=jnp.zeros(CFG.n_nodes, bool))
+
+    def test_masked_argmax_all_infeasible_returns_sentinel(self):
+        scores = jnp.array([5.0, 10.0, 1.0, 0.0])
+        ok = jnp.zeros(4, bool)
+        for s in range(6):
+            for eps in (0.0, 1.0):
+                a = schedulers.masked_argmax(jax.random.PRNGKey(s), scores, ok, eps)
+                assert int(a) == kenv.NO_NODE
+
+    def test_kube_select_all_infeasible_returns_sentinel(self):
+        state = self._saturated()
+        pod = kenv.default_pod(CFG)
+        for s in range(6):
+            a = baselines.kube_select(jax.random.PRNGKey(s), state, pod, CFG)
+            assert int(a) == kenv.NO_NODE
+
+    def test_sdqn_select_all_infeasible_returns_sentinel(self):
+        qp = dqn.init_qnet(jax.random.PRNGKey(0))
+        sel = schedulers.make_sdqn_selector(qp, CFG)
+        state = self._saturated()
+        pod = kenv.default_pod(CFG)
+        assert int(sel(jax.random.PRNGKey(1), state, pod)) == kenv.NO_NODE
+
+    def test_place_sentinel_is_noop(self):
+        state = kenv.reset(jax.random.PRNGKey(0), CFG)
+        pod = kenv.default_pod(CFG)
+        placed = kenv.place(state, jnp.int32(kenv.NO_NODE), pod, CFG)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(placed)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_episode_surfaces_drops(self):
+        import dataclasses
+
+        # a cluster whose slots saturate mid-burst: every node takes 3 pods
+        tiny = dataclasses.replace(CFG, max_pods=3, requested_frac_profile=(0.0,),
+                                   requested_frac_jitter=0.0)
+        for sel in (schedulers.make_kube_selector(tiny),
+                    schedulers.make_sdqn_selector(
+                        dqn.init_qnet(jax.random.PRNGKey(0)), tiny)):
+            state, dist, _, dropped = kenv.run_episode(
+                jax.random.PRNGKey(0), tiny, sel, 20)
+            assert int(dropped) > 0
+            assert int(state.exp_pods.sum()) + int(dropped) == 20
+            assert int(state.num_pods.max()) <= 3
+
+    def test_training_survives_saturating_cluster(self):
+        """RL training on a cluster that saturates mid-burst: dropped
+        transitions are stored with weight 0 (not as fabricated last-node
+        placements) and the loss stays finite."""
+        import dataclasses
+
+        from repro.core import train_rl
+
+        tiny = dataclasses.replace(CFG, max_pods=3,
+                                   requested_frac_profile=(0.0,),
+                                   requested_frac_jitter=0.0,
+                                   randomize_workload=True)
+        rl = train_rl.RLConfig(variant="sdqn", episodes=4, pods_per_episode=20,
+                               n_envs=2, buffer_capacity=128, batch_size=16)
+        params, metrics = jax.jit(
+            lambda k: train_rl.train(k, tiny, rl))(jax.random.PRNGKey(0))
+        assert np.isfinite(float(metrics["loss"][-1]))
+        for leaf in jax.tree.leaves(params):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+    def test_eval_engine_surfaces_drops(self):
+        import dataclasses
+
+        from repro.eval import engine as eval_engine
+
+        tiny = dataclasses.replace(CFG, max_pods=3, requested_frac_profile=(0.0,),
+                                   requested_frac_jitter=0.0)
+        sel = schedulers.make_kube_selector(tiny)
+        res = eval_engine.evaluate(jax.random.PRNGKey(0), tiny, sel,
+                                   trials=3, n_pods=20)
+        assert res["dropped_mean"] > 0.0
+        assert res["dropped_max"] >= res["dropped_mean"]
+
+
+class TestFusedScoringRoute:
+    def test_score_afterstates_fused_threshold_matches(self, monkeypatch):
+        """Above FUSED_SCORE_MIN_NODES the fused path must agree with the
+        plain jnp path to <=1e-5 (threshold lowered so the test stays small)."""
+        qp = dqn.init_qnet(jax.random.PRNGKey(0))
+        state = kenv.reset(jax.random.PRNGKey(1), CFG)
+        pod = kenv.default_pod(CFG)
+        plain = schedulers.score_afterstates(qp, state, pod, CFG)
+        monkeypatch.setattr(schedulers, "FUSED_SCORE_MIN_NODES", 1)
+        fused = schedulers.score_afterstates(qp, state, pod, CFG)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(plain),
+                                   rtol=1e-5, atol=1e-5)
 
 
 class TestNeuralBaselines:

@@ -113,6 +113,33 @@ class TestReplay:
         for adds in ([3], [7, 7, 7], [1, 2, 3, 4, 5, 6], [5] * 12):
             self.check_size_and_ptr(adds)
 
+    def test_partial_buffer_weights_all_draws(self):
+        """Regression: a batch of 128 from a 64-entry buffer must train on
+        all 128 draws.  The old mask tested batch *positions*
+        (arange(batch) < size), zero-weighting the tail of every batch
+        while the buffer was smaller than the batch."""
+        buf = replay_init(256)
+        buf = replay_add(buf, jnp.ones((64, 6)), jnp.ones((64,)))
+        _, _, w = replay_sample(buf, jax.random.PRNGKey(0), 128)
+        assert w.shape == (128,)
+        np.testing.assert_array_equal(np.asarray(w), np.ones(128, np.float32))
+
+    def test_empty_buffer_weights_zero(self):
+        buf = replay_init(256)
+        _, _, w = replay_sample(buf, jax.random.PRNGKey(0), 32)
+        np.testing.assert_array_equal(np.asarray(w), np.zeros(32, np.float32))
+
+    def test_zero_weight_entries_stay_masked(self):
+        """Dropped transitions (stored with weight 0) never train: their
+        sampled weight is 0 while normally-stored entries weigh 1."""
+        buf = replay_init(8)
+        buf = replay_add(buf, jnp.ones((4, 6)), jnp.full((4,), 7.0),
+                         jnp.array([1.0, 0.0, 1.0, 0.0]))
+        f, t, w = replay_sample(buf, jax.random.PRNGKey(1), 64)
+        assert set(np.asarray(w).tolist()) <= {0.0, 1.0}
+        assert 0.0 in np.asarray(w).tolist()  # masked draws do occur
+        assert 1.0 in np.asarray(w).tolist()
+
 
 # property-based variant only when the [test] extra (hypothesis) is present
 try:
@@ -146,6 +173,61 @@ class TestSchedLayer:
         fleet, hosts = eng.place_batch(fleet, 12, JobSpec(cpu_pct_demand=5.0))
         assert int(fleet.num_jobs.sum()) == 12
         assert len(hosts) == 12
+
+    def test_job_util_tracks_num_jobs(self):
+        """Regression: job_util_pct must advance with each binding (it stayed
+        at its reset value, so the third Table-2 feature went stale after
+        the first placement) and must match select's afterstate delta."""
+        from repro.sched.placement import JOB_UTIL_DELTA_PCT
+
+        eng = self._engine()
+        fleet = fresh_fleet(4)
+        fleet, _ = eng.place_batch(fleet, 9, JobSpec(cpu_pct_demand=3.0))
+        np.testing.assert_allclose(
+            np.asarray(fleet.job_util_pct),
+            np.asarray(fleet.num_jobs, np.float32) * JOB_UTIL_DELTA_PCT,
+            rtol=1e-6)
+        assert float(fleet.job_util_pct.sum()) > 0.0
+
+    def test_select_all_infeasible_returns_no_host(self):
+        """An all-infeasible fleet must yield the NO_HOST sentinel (argmax
+        over all--inf scores used to bind host 0) and place() must no-op."""
+        from repro.sched.placement import NO_HOST
+
+        eng = self._engine()
+        fleet = fresh_fleet(4)._replace(healthy=jnp.zeros(4))
+        host, scores = eng.select(fleet, JobSpec())
+        assert host == NO_HOST
+        assert not np.isfinite(np.asarray(scores)).any()
+        placed = eng.place(fleet, host, JobSpec())
+        for a, b in zip(fleet, placed):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_feasible_enforces_job_slot_ceiling(self):
+        eng = self._engine()
+        fleet = fresh_fleet(4)._replace(
+            job_util_pct=jnp.array([100.0, 100.0, 50.0, 100.0]))
+        ok = np.asarray(eng.feasible(fleet, JobSpec()))
+        np.testing.assert_array_equal(ok, [False, False, True, False])
+
+    def test_fused_serving_scores_match_stacked(self):
+        """The fused column scorer (serving path) == stack + delta + qvalues."""
+        from repro.core import env as kenv
+        from repro.kernels import ops
+        from repro.sched.placement import JOB_UTIL_DELTA_PCT
+
+        params = dqn.init_qnet(jax.random.PRNGKey(0))
+        fleet = fresh_fleet(37, jax.random.PRNGKey(3))
+        delta = jnp.array([5.0, 2.0, JOB_UTIL_DELTA_PCT, 0.0, 0.0, 1.0])
+        cols = (fleet.cpu_pct, fleet.mem_pct, fleet.job_util_pct,
+                fleet.healthy.astype(jnp.float32), fleet.uptime_hours,
+                fleet.num_jobs.astype(jnp.float32))
+        want = dqn.qvalues(params, kenv.normalize_features(
+            fleet.features() + delta[None, :]))
+        for mode in ("xla", "interpret", "ref"):
+            got = ops.sdqn_score_delta(cols, delta, params, mode=mode, block_n=16)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
 
     def test_consolidation_frees_hosts(self):
         eng = self._engine()
