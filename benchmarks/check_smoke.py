@@ -2,6 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.check_smoke bench-smoke.json \
         benchmarks/baseline_smoke.json [--tolerance 0.10]
+    PYTHONPATH=src python -m benchmarks.check_smoke BENCH_sched_scale.json \
+        benchmarks/baseline_sched_scale.json \
+        --throughput-row sdqn_train_ondevice [--throughput-tolerance 0.25]
 
 For every scenario present in both runs, compares the sdqn/kube ratio of the
 avg-CPU metric (``derived`` column of the ``scenario_<name>_<policy>`` rows).
@@ -9,7 +12,14 @@ The ratio — not the absolute percentage — is gated, so container-speed noise
 and calibration drift cancel out; what must not regress is *how much better
 than the default scheduler* the learned policy stays.  A current ratio more
 than ``tolerance`` (default 10%) above the committed baseline ratio fails.
-Timing columns are informational only (CI machines vary too much to gate).
+
+``--throughput-row NAME`` (repeatable) additionally gates that row's
+``derived`` column (a rate: transitions/s, nodes/s, ...) against the same
+row in the baseline: current below ``baseline * (1 - throughput_tolerance)``
+fails.  The committed throughput baselines are deliberately conservative
+floors — the gate exists to catch order-of-magnitude regressions (a de-jitted
+hot loop, a silent fallback to per-step dispatch), not CI-machine jitter.
+Other timing columns stay informational only.
 """
 from __future__ import annotations
 
@@ -39,14 +49,20 @@ def scenario_ratios(rows) -> Dict[str, Tuple[float, float, float]]:
     return out
 
 
-def compare(current: dict, baseline: dict, tolerance: float) -> int:
+def _row_map(rows) -> Dict[str, float]:
+    return {row["name"]: float(row["derived"]) for row in rows}
+
+
+def compare(current: dict, baseline: dict, tolerance: float,
+            throughput_rows=(), throughput_tolerance: float = 0.25) -> int:
     cur = scenario_ratios(current["rows"])
     base = scenario_ratios(baseline["rows"])
-    if not base:
+    if not base and not throughput_rows:
         print("check_smoke: baseline has no scenario rows", file=sys.stderr)
         return 2
     failures = []
-    print(f"{'scenario':20s} {'base sdqn/kube':>14s} {'cur sdqn/kube':>14s}  verdict")
+    if base:
+        print(f"{'scenario':20s} {'base sdqn/kube':>14s} {'cur sdqn/kube':>14s}  verdict")
     for scenario, (_, _, base_ratio) in sorted(base.items()):
         if scenario not in cur:
             failures.append(f"{scenario}: missing from current run")
@@ -60,12 +76,42 @@ def compare(current: dict, baseline: dict, tolerance: float) -> int:
             failures.append(
                 f"{scenario}: sdqn/kube {ratio:.3f} vs baseline "
                 f"{base_ratio:.3f} (> +{tolerance:.0%})")
+
+    if throughput_rows:
+        cur_rows, base_rows = _row_map(current["rows"]), _row_map(baseline["rows"])
+        # %g keeps small ratios readable (seed_parallel_speedup ~ 0.9-4) and
+        # large rates compact (transitions/s ~ 1e5) in the same column
+        print(f"{'throughput row':28s} {'baseline':>12s} {'current':>12s}  verdict")
+        for name in throughput_rows:
+            if name not in base_rows:
+                failures.append(f"{name}: missing from committed baseline")
+                print(f"{name:28s} {'MISSING':>12s} {'-':>12s}  FAIL")
+                continue
+            if name not in cur_rows:
+                failures.append(f"{name}: missing from current run")
+                print(f"{name:28s} {base_rows[name]:12g} {'MISSING':>12s}  FAIL")
+                continue
+            floor = base_rows[name] * (1.0 - throughput_tolerance)
+            ok = cur_rows[name] >= floor
+            print(f"{name:28s} {base_rows[name]:12g} {cur_rows[name]:12.6g}  "
+                  f"{'ok' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"{name}: {cur_rows[name]:g} vs baseline "
+                    f"{base_rows[name]:g} (> -{throughput_tolerance:.0%})")
+
     if failures:
         print("\nREGRESSIONS:", file=sys.stderr)
         for f in failures:
             print(f"  {f}", file=sys.stderr)
         return 1
-    print(f"\nall {len(base)} scenario ratios within +{tolerance:.0%} of baseline")
+    gated = []
+    if base:
+        gated.append(f"{len(base)} scenario ratios within +{tolerance:.0%}")
+    if throughput_rows:
+        gated.append(f"{len(throughput_rows)} throughput rows within "
+                     f"-{throughput_tolerance:.0%}")
+    print(f"\nall {' and '.join(gated)} of baseline")
     return 0
 
 
@@ -75,12 +121,20 @@ def main(argv=None) -> int:
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative regression of sdqn/kube (default 0.10)")
+    ap.add_argument("--throughput-row", action="append", default=[],
+                    metavar="NAME",
+                    help="also gate this row's derived rate against the "
+                         "baseline (repeatable), e.g. sdqn_train_ondevice")
+    ap.add_argument("--throughput-tolerance", type=float, default=0.25,
+                    help="allowed relative throughput regression (default 0.25)")
     args = ap.parse_args(argv)
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    return compare(current, baseline, args.tolerance)
+    return compare(current, baseline, args.tolerance,
+                   throughput_rows=args.throughput_row,
+                   throughput_tolerance=args.throughput_tolerance)
 
 
 if __name__ == "__main__":

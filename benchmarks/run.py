@@ -39,6 +39,9 @@ def main() -> None:
                       help="print the scenario registry and exit")
     mode.add_argument("--smoke", action="store_true",
                       help="CI-sized run: scenario sweep + hot-path benches, tiny configs")
+    mode.add_argument("--sched-scale", action="store_true",
+                      help="CI-sized benchmarks/sched_scale.py sweep (training "
+                           "throughput + seed-parallel engine speedup included)")
     ap.add_argument("--trials", type=int, default=None,
                     help="episodes per measurement (default: 3, or 1 with --smoke)")
     ap.add_argument("--pods", type=int, default=None,
@@ -91,6 +94,10 @@ def main() -> None:
         rows += sched_scale.scoring_throughput()
         rows += sched_scale.fused_scoring()
         rows += sched_scale.eval_engine_speedup(trials=16)
+    elif args.sched_scale:
+        from benchmarks import sched_scale
+
+        rows += sched_scale.ci_rows()
     else:
         from benchmarks import roofline_report, sched_scale
 

@@ -395,6 +395,36 @@ def hypothetical_place(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp
                           state.mem_capacity)
 
 
+def hypothetical_place_one(state: ClusterState, pod: PodSpec, cfg: EnvConfig,
+                           node: jnp.ndarray) -> jnp.ndarray:
+    """Afterstate features of a single candidate node: one (6,) row.
+
+    Row ``node`` of ``hypothetical_place`` without building the (N, 6)
+    matrix — the training loop scores through the fused kernel dispatch and
+    only ever *stores* the one afterstate it actually bound, so the full
+    matrix is never needed on the replay path.  (Still O(N) *time*:
+    ``pull_cost_now`` scans the in-flight startup transients; what this
+    saves is the (N, 6) materialization and HBM round-trip.)  ``node`` must
+    be a valid index (callers clamp the ``NO_NODE`` sentinel and zero-weight
+    the sample).  Same elementwise arithmetic as ``hypothetical_place``,
+    applied to the gathered columns, so the row matches bit-for-bit.
+    """
+    start_cost = jnp.where(jnp.logical_not(state.image_cached[node]),
+                           pull_cost_now(state, cfg), cfg.warm_start_cost)
+    num_pods = state.num_pods[node] + 1
+    exp_pods = state.exp_pods[node] + 1
+    pods_cpu = state.pods_cpu[node] + 1.0 * pod.cpu_demand
+    mem_used = state.mem_used[node] + 1.0 * pod.mem_demand
+    startup_cpu = state.startup_cpu[node] + start_cost
+
+    used = _node_cpu_used(state.base_cpu[node], exp_pods > 0, pods_cpu,
+                          startup_cpu, num_pods, state.cpu_capacity[node], cfg)
+    return _feature_stack(used, mem_used, num_pods, state.max_pods[node],
+                          state.healthy[node], state.uptime_hours[node],
+                          exp_pods, state.cpu_capacity[node],
+                          state.mem_capacity[node])
+
+
 def hypothetical_place_reference(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
     """Reference afterstate scorer: vmap of the full transition (O(N^2)).
 

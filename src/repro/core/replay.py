@@ -56,8 +56,10 @@ def replay_sample(
     is non-empty, so validity is the scalar ``size > 0`` broadcast over the
     batch — NOT a per-position ``arange(batch) < size`` mask, which would
     silently zero-weight the tail of every batch while ``size < batch``.
+
+    ``size <= cap`` always (``replay_add`` clamps), so the draws are already
+    in-range and index the live prefix directly — no ``% cap`` re-wrap.
     """
-    cap = buf.feats.shape[0]
     idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
-    valid = buf.weights[idx % cap] * (buf.size > 0)
-    return buf.feats[idx % cap], buf.targets[idx % cap], valid
+    valid = buf.weights[idx] * (buf.size > 0)
+    return buf.feats[idx], buf.targets[idx], valid

@@ -4,10 +4,28 @@ LSTM/Transformer baselines).
 The whole loop — environment stepping, afterstate scoring, epsilon-greedy
 action selection, reward shaping (Tables 3/5), replay, and the Adam/MSE
 learner (Table 4) — is one XLA program: ``lax.scan`` over pod arrivals inside
-``lax.scan`` over episodes, ``vmap``-ed over parallel simulated clusters.
-Sharding the environment batch over the mesh ``data`` axis turns this into
-the Anakin/Podracer pattern: the TPU-native form of the paper's training
-loop (DESIGN.md §2).
+``lax.scan`` over episodes, ``vmap``-ed over ``n_envs`` parallel simulated
+clusters.  The actual sharded topology (the Anakin/Podracer pattern):
+
+  * ``train(..., mesh=...)`` pins the ``n_envs`` environment batch to the
+    mesh ``data`` axis with ``NamedSharding`` constraints — each device
+    steps its slice of the clusters, the replay write and the (replicated)
+    learner update are the only cross-device points, and XLA inserts the
+    one all-gather they need.  ``mesh=None`` (or an ``n_envs`` that does
+    not divide the ``data`` axis) falls back to the single-device program
+    unchanged, so CPU tests and the 1-device container run the same code.
+  * ``repro.train.engine.train_seeds`` vmaps this whole program over the
+    seed ladder (``fold_in(key, seed)``), so ``train_and_select``'s
+    candidates compile once and run as ONE launch; on a mesh the *seed*
+    axis shards over ``data`` instead (whole replicas per device).
+  * In-loop afterstate scoring routes through
+    ``schedulers.score_afterstates`` — the same fused-kernel dispatch the
+    serving path uses (Pallas on TPU at fleet scale, where the (N, 6)
+    feature matrix never hits HBM); the replay stores the single realized
+    (6,) afterstate via ``env.hypothetical_place_one``.
+  * The ``TrainCarry`` (replay buffer of cap x 6 floats, Adam moments,
+    params) is donated across ``train_mixture`` segments: buffers are
+    updated in place at scenario hand-offs, not copied.
 
 The default is full DQN semantics (the paper builds SDQN "on the Deep
 Q-Network framework"): targets r + γ·max Q_target(s′) with a periodically
@@ -17,14 +35,13 @@ refreshed target network.  ``bootstrap=False`` recovers the literal Table-4
 from __future__ import annotations
 
 import dataclasses
-import functools
 import itertools
 from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dqn, env as kenv, rewards
+from repro.core import dqn, env as kenv, rewards, schedulers
 from repro.core.replay import Replay, replay_add, replay_init, replay_sample
 from repro.core.schedulers import masked_argmax
 from repro.core.types import EnvConfig
@@ -66,28 +83,49 @@ class TrainCarry(NamedTuple):
     learn_step: jnp.ndarray
 
 
-def _transition(key, qparams, env_state, pod, dt_s, env_cfg: EnvConfig, rl: RLConfig,
-                epsilon, reward_fn):
-    """One pod arrival in one env: act, step, shape reward.
+def transition_step(key, select, env_state, pod, dt_s, env_cfg: EnvConfig,
+                    reward_fn):
+    """One pod arrival in one env, shared by the RL and supervised loops:
+    act via ``select``, bind, shape the reward, advance wall-clock.
 
-    Returns (new_env_state, stored_feats (6,), target (,), reward).
+    Returns (new_env_state, stored_feats (6,), scaled reward, action).
+    ``select(key, state, pod) -> node`` is any episode-compatible selector
+    (epsilon-greedy SDQN for RL, ``kube_select`` for behavior cloning);
+    ``reward_fn`` follows the ``rewards.make_reward_fn`` interface.
+
+    action == NO_NODE (drop): there is no realized afterstate — the gather
+    is clamped (a negative index would wrap to the LAST node's features) and
+    the caller must zero-weight the stored transition.
     """
     before_feats = kenv.features(env_state, env_cfg)
     ok = kenv.feasible(env_state, pod, env_cfg)
-    after_all = kenv.hypothetical_place(env_state, pod, env_cfg)  # (N, 6)
-    q = dqn.qvalues(qparams, kenv.normalize_features(after_all))
-    action = masked_argmax(key, q, ok, epsilon)
+    action = select(key, env_state, pod)
 
     new_state = kenv.place(env_state, action, pod, env_cfg)
     after_feats = kenv.features(new_state, env_cfg)
     r = reward_fn(after_feats, before_feats, ok, action,
                   env_state.exp_pods, new_state.exp_pods)
+    # only the realized afterstate is stored: a single row, never the (N, 6)
+    # matrix (the scoring pass inside `select` goes through the fused kernel
+    # dispatch and does not materialize it either)
+    stored = kenv.normalize_features(
+        kenv.hypothetical_place_one(env_state, pod, env_cfg,
+                                    jnp.maximum(action, 0)))
     new_state = kenv.tick(new_state, env_cfg, dt_s)
-    # action == NO_NODE (drop): there is no realized afterstate — clamp the
-    # gather (a negative index would wrap to the LAST node's features) and
-    # let the caller zero-weight the stored transition in the replay buffer.
-    stored = kenv.normalize_features(after_all[jnp.maximum(action, 0)])
     return new_state, stored, r * REWARD_SCALE, action
+
+
+def _transition(key, qparams, env_state, pod, dt_s, env_cfg: EnvConfig,
+                epsilon, reward_fn):
+    """One RL pod arrival: epsilon-greedy over ``schedulers.score_afterstates``
+    (the shared fused-kernel dispatch) + the common transition body."""
+
+    def select(k, st, p):
+        ok = kenv.feasible(st, p, env_cfg)
+        q = schedulers.score_afterstates(qparams, st, p, env_cfg)
+        return masked_argmax(k, q, ok, epsilon)
+
+    return transition_step(key, select, env_state, pod, dt_s, env_cfg, reward_fn)
 
 
 def _bootstrap_bonus(online_params, target_params, env_state, pod, env_cfg, rl: RLConfig):
@@ -96,27 +134,54 @@ def _bootstrap_bonus(online_params, target_params, env_state, pod, env_cfg, rl: 
     0 when s' has no feasible action (terminal for this workload burst).
     Double-DQN (action chosen by the online net, valued by the target net)
     avoids the max-operator over-estimation of rarely-visited states — e.g.
-    cold-pull afterstates that look mid-band attractive.
+    cold-pull afterstates that look mid-band attractive.  Scoring goes
+    through the fused dispatch; only the argmax afterstate is gathered for
+    the target net (one (6,) row, not the (N, 6) matrix).
     """
     ok = kenv.feasible(env_state, pod, env_cfg)
-    after_all = kenv.normalize_features(kenv.hypothetical_place(env_state, pod, env_cfg))
-    q_online = dqn.qvalues(online_params, after_all)
+    q_online = schedulers.score_afterstates(online_params, env_state, pod, env_cfg)
     a_star = jnp.argmax(jnp.where(ok, q_online, -jnp.inf))
-    q_tgt = dqn.qvalues(target_params, after_all[a_star])
+    after_star = kenv.normalize_features(
+        kenv.hypothetical_place_one(env_state, pod, env_cfg, a_star))
+    q_tgt = dqn.qvalues(target_params, after_star)
     return jnp.where(jnp.any(ok), rl.gamma * q_tgt, 0.0)
 
 
-def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int):
+def _env_constraint(mesh, n_envs: int):
+    """Sharding-constraint applier for env-batched pytrees, or identity.
+
+    With a mesh whose ``data`` axis divides ``n_envs``, pins the environment
+    batch dimension to ``data`` (``NamedSharding``); the learner stays
+    replicated, which is exactly the Anakin/Podracer layout.  Any other case
+    (``mesh=None``, no ``data`` axis, indivisible batch) returns identity so
+    the single-device program is untouched.
+    """
+    if (mesh is None or "data" not in mesh.axis_names
+            or n_envs % mesh.shape["data"] != 0):
+        return lambda tree, time_leading=False: tree
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def constrain(tree, time_leading=False):
+        spec = P(None, "data") if time_leading else P("data")
+        return jax.lax.with_sharding_constraint(tree, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
+                     mesh=None):
     """Episode body for ``lax.scan``: (TrainCarry, global episode idx) -> carry.
 
     Per-arrival ``PodSpec``s come from the scenario's pod table (the
     homogeneous default pod when ``env_cfg.scenario`` is None), so the same
     Q-net trains across heterogeneous workload mixtures.  ``n_steps_total``
     anchors the epsilon schedule, which lets scenario-mixture training thread
-    one schedule through interleaved per-scenario segments.
+    one schedule through interleaved per-scenario segments.  ``mesh`` shards
+    the ``n_envs`` batch over the ``data`` axis (see ``_env_constraint``).
     """
     reward_fn = rewards.make_reward_fn(rl.variant, rl.consolidation_n,
                                        rl.efficiency_weight)
+    shard = _env_constraint(mesh, rl.n_envs)
 
     def epsilon_at(step):
         frac = step.astype(jnp.float32) / max(n_steps_total, 1)
@@ -125,15 +190,16 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int):
     def episode(carry: TrainCarry, ep_idx):
         key_ep = jax.random.fold_in(carry.key, ep_idx)
         k_reset, k_pods, k_steps = jax.random.split(key_ep, 3)
-        env_states = jax.vmap(lambda k: kenv.reset(k, env_cfg))(
+        env_states = shard(jax.vmap(lambda k: kenv.reset(k, env_cfg))(
             jax.random.split(k_reset, rl.n_envs)
-        )
+        ))
         # pre-sample each env's arrival stream; scan wants leading dim = time
         tables = jax.vmap(
             lambda k: kenv.sample_pod_table(k, env_cfg, rl.pods_per_episode)
         )(jax.random.split(k_pods, rl.n_envs))
-        pods_t = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), tables.specs)
-        dt_t = jnp.swapaxes(tables.dt_s, 0, 1)
+        pods_t = shard(jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), tables.specs),
+                       time_leading=True)
+        dt_t = shard(jnp.swapaxes(tables.dt_s, 0, 1), time_leading=True)
         # the arrival after this one, for bootstrapped Q(s') scoring (the last
         # row wraps, but its bonus is masked out below)
         pods_next_t = jax.tree.map(lambda x: jnp.roll(x, -1, axis=0), pods_t)
@@ -147,8 +213,9 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int):
             keys = jax.random.split(kt, rl.n_envs + 2)
             new_states, stored, r, actions = jax.vmap(
                 lambda kk, st, pod, dt: _transition(
-                    kk, c.params, st, pod, dt, env_cfg, rl, eps, reward_fn)
+                    kk, c.params, st, pod, dt, env_cfg, eps, reward_fn)
             )(keys[: rl.n_envs], env_states, pod_t, dt_row)
+            new_states = shard(new_states)
 
             targets = r
             if rl.bootstrap:
@@ -194,7 +261,11 @@ def _init_carry(key: jax.Array, rl: RLConfig) -> TrainCarry:
     k_init, k_train = jax.random.split(key)
     params, opt_state = dqn.init_train_state(k_init)
     buffer = replay_init(rl.buffer_capacity)
-    return TrainCarry(params, opt_state, params, buffer, k_train,
+    # the target net starts equal to the online net but must own its buffers:
+    # the TrainCarry is donated across jitted segments, and XLA refuses to
+    # donate the same buffer twice
+    target = jax.tree.map(jnp.copy, params)
+    return TrainCarry(params, opt_state, target, buffer, k_train,
                       jnp.zeros((), jnp.int32))
 
 
@@ -202,15 +273,24 @@ def train(
     key: jax.Array,
     env_cfg: EnvConfig,
     rl: RLConfig,
+    mesh=None,
 ) -> Tuple[dict, dict]:
-    """Train SDQN/SDQN-n. Returns (qparams, metrics dict of per-episode arrays)."""
+    """Train SDQN/SDQN-n. Returns (qparams, metrics dict of per-episode arrays).
+
+    ``mesh`` (e.g. ``launch.mesh.make_train_mesh()``) shards the ``n_envs``
+    environment batch over the ``data`` axis; ``None`` or a 1-device mesh
+    runs the identical single-device program.  For multi-candidate training
+    prefer ``repro.train.engine.train_seeds``, which vmaps this whole
+    function over the seed ladder in one launch.
+    """
     carry = _init_carry(key, rl)
-    episode = _make_episode_fn(env_cfg, rl, rl.episodes * rl.pods_per_episode)
+    episode = _make_episode_fn(env_cfg, rl, rl.episodes * rl.pods_per_episode,
+                               mesh)
     carry, metrics = jax.lax.scan(episode, carry, jnp.arange(rl.episodes))
     return carry.params, metrics
 
 
-train_jit = jax.jit(train, static_argnames=("env_cfg", "rl"))
+train_jit = jax.jit(train, static_argnames=("env_cfg", "rl", "mesh"))
 
 
 def train_mixture(
@@ -218,6 +298,7 @@ def train_mixture(
     env_cfgs,
     rl: RLConfig,
     rounds: int = 4,
+    mesh=None,
 ) -> Tuple[dict, dict]:
     """Train ONE Q-net across a scenario mixture.
 
@@ -250,14 +331,15 @@ def train_mixture(
     for cfg in env_cfgs:
         if cfg in segments:
             continue
-        ep_fn = _make_episode_fn(cfg, rl, n_steps_total)
-        segments[cfg] = jax.jit(
-            functools.partial(
-                lambda episode, carry, ep0: jax.lax.scan(
-                    episode, carry, ep0 + jnp.arange(chunk)),
-                ep_fn,
-            )
-        )
+        ep_fn = _make_episode_fn(cfg, rl, n_steps_total, mesh)
+
+        def _segment(carry, ep0, _episode=ep_fn):
+            return jax.lax.scan(_episode, carry, ep0 + jnp.arange(chunk))
+
+        # the TrainCarry is donated: the replay buffer (cap x 6 floats), the
+        # Adam moments and both parameter sets are updated in place at every
+        # scenario hand-off instead of being copied per segment
+        segments[cfg] = jax.jit(_segment, donate_argnums=(0,))
 
     carry = _init_carry(key, rl)
     per_ep = []
@@ -289,12 +371,20 @@ def train_supervised_scorer(
 ) -> dict:
     """Train a scorer by regression onto Table-3 rewards along kube-scheduler
     trajectories (the paper trains its LSTM/Transformer on the same reward
-    signal; they are behavior-cloning value estimators, not RL agents)."""
+    signal; they are behavior-cloning value estimators, not RL agents).
+
+    The act/place/reward/clamp body is the same ``transition_step`` the RL
+    loop scans — only the selector (``kube_select``) and the learner (MSE
+    regression instead of Q-learning) differ.  Dropped arrivals
+    (``action == NO_NODE``) zero-weight their sample exactly as in RL.
+    """
     from repro.core import baselines
 
     params, opt_state = baselines.init_regression_state(init_fn, key)
     step_fn = baselines.make_regression_trainer(score_fn)
     pod = kenv.default_pod(env_cfg)
+    select = schedulers.make_kube_selector(env_cfg)
+    reward_fn = rewards.make_reward_fn("sdqn", efficiency_weight=efficiency_weight)
 
     def episode(carry, ep_idx):
         params, opt_state = carry
@@ -306,24 +396,12 @@ def train_supervised_scorer(
         def pod_step(inner, t):
             (params, opt_state), env_states = inner
             kt = jax.random.split(jax.random.fold_in(key_ep, 1000 + t), n_envs)
-
-            def one(k, st):
-                a = baselines.kube_select(k, st, pod, env_cfg)
-                before = kenv.features(st, env_cfg)
-                after_all = kenv.hypothetical_place(st, pod, env_cfg)
-                st2 = kenv.place(st, a, pod, env_cfg)
-                # a == NO_NODE: clamp the gathers (negative index wraps) and
-                # zero-weight the sample — a drop has no realized afterstate
-                a_safe = jnp.maximum(a, 0)
-                r = rewards.sdqn_reward(kenv.features(st2, env_cfg), a_safe,
-                                        exp_pods=st2.exp_pods,
-                                        efficiency_weight=efficiency_weight,
-                                        before_feats=before) * REWARD_SCALE
-                st2 = kenv.tick(st2, env_cfg, env_cfg.schedule_dt_s)
-                return (st2, kenv.normalize_features(after_all[a_safe]), r,
-                        (a >= 0).astype(jnp.float32))
-
-            env_states, feats, targs, valid = jax.vmap(one)(kt, env_states)
+            env_states, feats, targs, actions = jax.vmap(
+                lambda k, st: transition_step(k, select, st, pod,
+                                              env_cfg.schedule_dt_s, env_cfg,
+                                              reward_fn)
+            )(kt, env_states)
+            valid = (actions >= 0).astype(jnp.float32)
             params, opt_state, loss = step_fn(params, opt_state, feats, targs, valid)
             return ((params, opt_state), env_states), loss
 
@@ -351,27 +429,23 @@ def train_and_select(
     n_seeds: int = 4,
     val_trials: int = 12,
     val_pods: int = 50,
+    mesh=None,
 ):
     """Train `n_seeds` independent policies, return the one with the lowest
     average-CPU metric on validation episodes (seeds disjoint from the
     benchmark trials, which use PRNGKey(100+)).
 
-    Validation runs through the batched eval engine: the trial dimension is
-    vmapped and the evaluator closes over a selector *factory*, so all
-    ``val_trials`` episodes are one XLA launch and all seeds share a single
-    compilation (the old path re-jitted and re-dispatched per seed x trial).
+    Delegates to ``repro.train.engine``: the seed dimension is vmapped over
+    the whole training scan (one compilation, ONE launch for all candidates
+    — the old path dispatched ``train`` per seed from Python), validation
+    runs all (seed, trial) episodes batched, and the winner is a NaN-guarded
+    on-device argmin (an all-NaN validation falls back to seed 0 instead of
+    returning ``(None, inf)``).  The seed ladder is ``fold_in(key, s)``,
+    identical to the sequential path, so the same candidate wins selection
+    (per-seed params agree to float-reassociation tolerance, ~1e-9/step).
     """
-    from repro.core import schedulers
-    from repro.eval import engine as eval_engine
+    from repro.train import engine
 
-    best_params, best_metric = None, jnp.inf
-    train_fn = jax.jit(lambda k: train(k, train_cfg, rl))
-    evaluator = eval_engine.make_param_evaluator(
-        eval_cfg, lambda p: schedulers.make_sdqn_selector(p, eval_cfg), val_pods)
-    val_keys = eval_engine.fixed_trial_keys(5000, val_trials)
-    for s in range(n_seeds):
-        params, _ = train_fn(jax.random.fold_in(key, s))
-        metric = jnp.mean(evaluator(params, val_keys).metric)
-        if metric < best_metric:
-            best_params, best_metric = params, metric
-    return best_params, float(best_metric)
+    return engine.train_and_select(key, train_cfg, eval_cfg, rl,
+                                   n_seeds=n_seeds, val_trials=val_trials,
+                                   val_pods=val_pods, mesh=mesh)

@@ -56,14 +56,8 @@ def _default_n_pods(env_cfg: EnvConfig, n_pods: Optional[int]) -> int:
     return env_cfg.scenario.n_pods if env_cfg.scenario is not None else 50
 
 
-def make_batch_episode(env_cfg: EnvConfig, select: Callable,
-                       n_pods: Optional[int] = None) -> Callable:
-    """Jitted ``(T, key) -> TrialResults``: all trials in one XLA launch.
-
-    Compiles once per (env_cfg, select, n_pods, T) — hold on to the returned
-    callable across measurement rounds to keep jit out of timing windows.
-    """
-    n = _default_n_pods(env_cfg, n_pods)
+def _trial_fn(env_cfg: EnvConfig, select: Callable, n: int) -> Callable:
+    """The shared per-trial body: ``key -> TrialResults`` for one episode."""
 
     def one(k):
         state, dist, metric, dropped = kenv.run_episode(k, env_cfg, select, n)
@@ -75,7 +69,18 @@ def make_batch_episode(env_cfg: EnvConfig, select: Callable,
             placed=jnp.sum(state.exp_pods).astype(jnp.int32),
         )
 
-    return jax.jit(jax.vmap(one))
+    return one
+
+
+def make_batch_episode(env_cfg: EnvConfig, select: Callable,
+                       n_pods: Optional[int] = None) -> Callable:
+    """Jitted ``(T, key) -> TrialResults``: all trials in one XLA launch.
+
+    Compiles once per (env_cfg, select, n_pods, T) — hold on to the returned
+    callable across measurement rounds to keep jit out of timing windows.
+    """
+    n = _default_n_pods(env_cfg, n_pods)
+    return jax.jit(jax.vmap(_trial_fn(env_cfg, select, n)))
 
 
 def make_param_evaluator(env_cfg: EnvConfig, selector_factory: Callable,
@@ -91,14 +96,29 @@ def make_param_evaluator(env_cfg: EnvConfig, selector_factory: Callable,
 
     @jax.jit
     def run(params, keys):
-        select = selector_factory(params)
+        return jax.vmap(_trial_fn(env_cfg, selector_factory(params), n))(keys)
 
-        def one(k):
-            state, dist, metric, dropped = kenv.run_episode(k, env_cfg, select, n)
-            return TrialResults(metric, dist, state.exp_pods, dropped,
-                                jnp.sum(state.exp_pods).astype(jnp.int32))
+    return run
 
-        return jax.vmap(one)(keys)
+
+def make_multi_param_evaluator(env_cfg: EnvConfig, selector_factory: Callable,
+                               n_pods: Optional[int] = None) -> Callable:
+    """Jitted ``(stacked_params, keys) -> TrialResults`` with (S, T) leading
+    dims: every (candidate, trial) episode of a seed-selection round in one
+    XLA launch.
+
+    ``stacked_params`` carries a leading seed dimension on every leaf (the
+    output of ``repro.train.engine.train_seeds``); ``keys`` is shared across
+    candidates so they are validated on identical bursts.
+    """
+    n = _default_n_pods(env_cfg, n_pods)
+
+    @jax.jit
+    def run(stacked_params, keys):
+        def per_candidate(params):
+            return jax.vmap(_trial_fn(env_cfg, selector_factory(params), n))(keys)
+
+        return jax.vmap(per_candidate)(stacked_params)
 
     return run
 

@@ -19,3 +19,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """A 1-device mesh with the same axis names (CPU tests / examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_train_mesh(n_data: int | None = None):
+    """Data-only mesh over the local devices for Anakin-style RL training.
+
+    The training engine shards seed/env batches over ``data`` and keeps the
+    tiny Table-4 learner replicated, so ``model`` stays 1.  Defaults to all
+    visible devices; on the 1-device CPU container this is the host mesh.
+    """
+    n = n_data if n_data is not None else len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,7 @@
+"""Seed-parallel, mesh-sharded training engine (see ``repro.train.engine``)."""
+from repro.train.engine import (  # noqa: F401
+    seed_fold_keys,
+    select_best,
+    train_and_select,
+    train_seeds,
+)
