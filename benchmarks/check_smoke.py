@@ -1,10 +1,13 @@
-"""CI gate: fail when a scheduler-vs-kube avg-CPU row regresses vs baseline.
+"""CI gate: fail when a scheduler-vs-kube benchmark row regresses vs baseline.
 
     PYTHONPATH=src python -m benchmarks.check_smoke bench-smoke.json \
         benchmarks/baseline_smoke.json [--tolerance 0.10]
     PYTHONPATH=src python -m benchmarks.check_smoke BENCH_sched_scale.json \
         benchmarks/baseline_sched_scale.json \
         --throughput-row sdqn_train_ondevice [--throughput-tolerance 0.25]
+    PYTHONPATH=src python -m benchmarks.check_smoke BENCH_lifecycle.json \
+        benchmarks/baseline_lifecycle.json --lifecycle \
+        --throughput-row lifecycle_episode_throughput
 
 For every scenario present in both runs, compares the sdqn/kube ratio of the
 avg-CPU metric (``derived`` column of the ``scenario_<name>_<policy>`` rows).
@@ -13,92 +16,135 @@ and calibration drift cancel out; what must not regress is *how much better
 than the default scheduler* the learned policy stays.  A current ratio more
 than ``tolerance`` (default 10%) above the committed baseline ratio fails.
 
+``--lifecycle`` additionally gates the green-consolidation story: for every
+``lifecycle_<scenario>_<policy>`` headline row (``derived`` = time-averaged
+active nodes), the sdqnn/kube ratio must stay within ``tolerance`` of the
+committed baseline ratio — SDQN-n keeping fewer nodes awake than the default
+scheduler is the paper's §6 claim, and this is its regression gate.
+
 ``--throughput-row NAME`` (repeatable) additionally gates that row's
-``derived`` column (a rate: transitions/s, nodes/s, ...) against the same
+``derived`` column (a rate: transitions/s, episodes/s, ...) against the same
 row in the baseline: current below ``baseline * (1 - throughput_tolerance)``
 fails.  The committed throughput baselines are deliberately conservative
 floors — the gate exists to catch order-of-magnitude regressions (a de-jitted
 hot loop, a silent fallback to per-step dispatch), not CI-machine jitter.
 Other timing columns stay informational only.
+
+Every gated row prints measured vs baseline vs the allowed threshold, pass or
+fail, so a red CI log is diagnosable without downloading the artifacts.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
+
+LIFECYCLE_POLICIES = ("kube", "sdqn", "sdqnn")
 
 
-def scenario_ratios(rows) -> Dict[str, Tuple[float, float, float]]:
-    """{scenario: (kube_cpu, sdqn_cpu, sdqn/kube)} from benchmark rows."""
+def _policy_ratios(rows, prefix: str, baseline_policy: str,
+                   policy: str, policies) -> Dict[str, Tuple[float, float, float]]:
+    """{scenario: (baseline_policy_val, policy_val, ratio)} from bench rows."""
     metric: Dict[Tuple[str, str], float] = {}
     for row in rows:
         name = row["name"]
-        if not name.startswith("scenario_"):
+        if not name.startswith(prefix):
             continue
-        scenario, _, policy = name[len("scenario_"):].rpartition("_")
-        metric[(scenario, policy)] = float(row["derived"])
+        scenario, _, pol = name[len(prefix):].rpartition("_")
+        if pol not in policies:
+            continue  # companion rows (_energy_wh, _avg_cpu, ...) and others
+        metric[(scenario, pol)] = float(row["derived"])
     out = {}
-    for (scenario, policy), kube_cpu in metric.items():
-        if policy != "kube":
+    for (scenario, pol), denom in metric.items():
+        if pol != baseline_policy:
             continue
-        sdqn_cpu = metric.get((scenario, "sdqn"))
-        if sdqn_cpu is None or kube_cpu <= 0.0:
+        num = metric.get((scenario, policy))
+        if num is None or denom <= 0.0:
             continue
-        out[scenario] = (kube_cpu, sdqn_cpu, sdqn_cpu / kube_cpu)
+        out[scenario] = (denom, num, num / denom)
     return out
+
+
+def scenario_ratios(rows) -> Dict[str, Tuple[float, float, float]]:
+    """{scenario: (kube_cpu, sdqn_cpu, sdqn/kube)} from smoke benchmark rows."""
+    return _policy_ratios(rows, "scenario_", "kube", "sdqn", ("kube", "sdqn"))
+
+
+def lifecycle_ratios(rows) -> Dict[str, Tuple[float, float, float]]:
+    """{scenario: (kube_nodes_active, sdqnn_nodes_active, ratio)}."""
+    return _policy_ratios(rows, "lifecycle_", "kube", "sdqnn", LIFECYCLE_POLICIES)
 
 
 def _row_map(rows) -> Dict[str, float]:
     return {row["name"]: float(row["derived"]) for row in rows}
 
 
-def compare(current: dict, baseline: dict, tolerance: float,
-            throughput_rows=(), throughput_tolerance: float = 0.25) -> int:
-    cur = scenario_ratios(current["rows"])
-    base = scenario_ratios(baseline["rows"])
-    if not base and not throughput_rows:
-        print("check_smoke: baseline has no scenario rows", file=sys.stderr)
-        return 2
-    failures = []
-    if base:
-        print(f"{'scenario':20s} {'base sdqn/kube':>14s} {'cur sdqn/kube':>14s}  verdict")
+def _gate_ratios(label: str, cur: dict, base: dict, tolerance: float,
+                 failures: List[str]) -> None:
+    """Print the per-scenario ratio table (measured vs baseline vs allowed)."""
+    print(f"{label:24s} {'baseline':>10s} {'current':>10s} {'allowed':>10s}  verdict")
     for scenario, (_, _, base_ratio) in sorted(base.items()):
+        allowed = base_ratio * (1.0 + tolerance)
         if scenario not in cur:
-            failures.append(f"{scenario}: missing from current run")
-            print(f"{scenario:20s} {base_ratio:14.3f} {'MISSING':>14s}  FAIL")
+            failures.append(f"{label} {scenario}: missing from current run")
+            print(f"{scenario:24s} {base_ratio:10.3f} {'MISSING':>10s} "
+                  f"{allowed:10.3f}  FAIL")
             continue
         ratio = cur[scenario][2]
-        ok = ratio <= base_ratio * (1.0 + tolerance)
-        print(f"{scenario:20s} {base_ratio:14.3f} {ratio:14.3f}  "
+        ok = ratio <= allowed
+        print(f"{scenario:24s} {base_ratio:10.3f} {ratio:10.3f} {allowed:10.3f}  "
               f"{'ok' if ok else 'FAIL'}")
         if not ok:
             failures.append(
-                f"{scenario}: sdqn/kube {ratio:.3f} vs baseline "
-                f"{base_ratio:.3f} (> +{tolerance:.0%})")
+                f"{label} {scenario}: ratio {ratio:.3f} vs baseline "
+                f"{base_ratio:.3f} (allowed <= {allowed:.3f})")
+
+
+def compare(current: dict, baseline: dict, tolerance: float,
+            throughput_rows=(), throughput_tolerance: float = 0.25,
+            lifecycle: bool = False) -> int:
+    cur = scenario_ratios(current["rows"])
+    base = scenario_ratios(baseline["rows"])
+    cur_life = lifecycle_ratios(current["rows"]) if lifecycle else {}
+    base_life = lifecycle_ratios(baseline["rows"]) if lifecycle else {}
+    if not base and not throughput_rows and not base_life:
+        print("check_smoke: baseline has no gated rows", file=sys.stderr)
+        return 2
+    failures: List[str] = []
+    if base:
+        _gate_ratios("sdqn/kube avg-CPU", cur, base, tolerance, failures)
+    if lifecycle:
+        if not base_life:
+            failures.append("lifecycle: baseline has no lifecycle rows")
+        else:
+            _gate_ratios("sdqnn/kube nodes-active", cur_life, base_life,
+                         tolerance, failures)
 
     if throughput_rows:
         cur_rows, base_rows = _row_map(current["rows"]), _row_map(baseline["rows"])
         # %g keeps small ratios readable (seed_parallel_speedup ~ 0.9-4) and
         # large rates compact (transitions/s ~ 1e5) in the same column
-        print(f"{'throughput row':28s} {'baseline':>12s} {'current':>12s}  verdict")
+        print(f"{'throughput row':28s} {'baseline':>12s} {'current':>12s} "
+              f"{'floor':>12s}  verdict")
         for name in throughput_rows:
             if name not in base_rows:
                 failures.append(f"{name}: missing from committed baseline")
-                print(f"{name:28s} {'MISSING':>12s} {'-':>12s}  FAIL")
-                continue
-            if name not in cur_rows:
-                failures.append(f"{name}: missing from current run")
-                print(f"{name:28s} {base_rows[name]:12g} {'MISSING':>12s}  FAIL")
+                print(f"{name:28s} {'MISSING':>12s} {'-':>12s} {'-':>12s}  FAIL")
                 continue
             floor = base_rows[name] * (1.0 - throughput_tolerance)
+            if name not in cur_rows:
+                failures.append(f"{name}: missing from current run")
+                print(f"{name:28s} {base_rows[name]:12g} {'MISSING':>12s} "
+                      f"{floor:12.6g}  FAIL")
+                continue
             ok = cur_rows[name] >= floor
-            print(f"{name:28s} {base_rows[name]:12g} {cur_rows[name]:12.6g}  "
-                  f"{'ok' if ok else 'FAIL'}")
+            print(f"{name:28s} {base_rows[name]:12g} {cur_rows[name]:12.6g} "
+                  f"{floor:12.6g}  {'ok' if ok else 'FAIL'}")
             if not ok:
                 failures.append(
                     f"{name}: {cur_rows[name]:g} vs baseline "
-                    f"{base_rows[name]:g} (> -{throughput_tolerance:.0%})")
+                    f"{base_rows[name]:g} (floor {floor:g})")
 
     if failures:
         print("\nREGRESSIONS:", file=sys.stderr)
@@ -108,6 +154,9 @@ def compare(current: dict, baseline: dict, tolerance: float,
     gated = []
     if base:
         gated.append(f"{len(base)} scenario ratios within +{tolerance:.0%}")
+    if lifecycle and base_life:
+        gated.append(f"{len(base_life)} lifecycle nodes-active ratios within "
+                     f"+{tolerance:.0%}")
     if throughput_rows:
         gated.append(f"{len(throughput_rows)} throughput rows within "
                      f"-{throughput_tolerance:.0%}")
@@ -120,7 +169,11 @@ def main(argv=None) -> int:
     ap.add_argument("current", help="JSON from benchmarks.run --smoke --json")
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--tolerance", type=float, default=0.10,
-                    help="allowed relative regression of sdqn/kube (default 0.10)")
+                    help="allowed relative regression of gated ratios "
+                         "(default 0.10)")
+    ap.add_argument("--lifecycle", action="store_true",
+                    help="also gate the lifecycle sdqnn/kube nodes-active "
+                         "ratios (BENCH_lifecycle.json runs)")
     ap.add_argument("--throughput-row", action="append", default=[],
                     metavar="NAME",
                     help="also gate this row's derived rate against the "
@@ -134,7 +187,8 @@ def main(argv=None) -> int:
         baseline = json.load(f)
     return compare(current, baseline, args.tolerance,
                    throughput_rows=args.throughput_row,
-                   throughput_tolerance=args.throughput_tolerance)
+                   throughput_tolerance=args.throughput_tolerance,
+                   lifecycle=args.lifecycle)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Lifecycle benchmark: the paper's green-consolidation story, over time.
+
+Runs the churn scenarios (finite pod lifetimes) under the default
+kube-scheduler, a churn-mixture-trained SDQN, and SDQN-n with the in-episode
+consolidation pass, and reports the time-resolved metrics the static bursts
+cannot measure: time-averaged active nodes, node-seconds, and energy billed
+to the workload.  SDQN-n consolidating onto fewer nodes — so idle nodes
+appear and can be powered down — is the paper's §1 contribution 2 / §6
+claim; ``BENCH_lifecycle.json`` is its regression record.
+
+    PYTHONPATH=src python -m benchmarks.run --lifecycle          # full
+    PYTHONPATH=src python -m benchmarks.run --lifecycle-smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro import scenarios
+from repro.core import presets, schedulers, train_rl
+from repro.eval import engine as eval_engine
+from repro.sched import elastic
+
+LIFECYCLE_SCENARIOS = presets.LIFECYCLE_MIX_NAMES
+CONSOLIDATE_EVERY_S = 30.0
+POLICIES = ("kube", "sdqn", "sdqnn")
+
+
+@functools.lru_cache(maxsize=None)
+def lifecycle_policies(train_episodes: int = 120):
+    """(sdqn, sdqn_n) Q-nets trained across the churn mixture (cached).
+
+    SDQN-n trains with the Table-5 consolidation reward plus the
+    energy/node-count term — the policy the consolidation pass reuses.
+    """
+    cfgs = scenarios.training_mixture(presets.LIFECYCLE_MIX_NAMES)
+    rl = dataclasses.replace(presets.SDQN_LIFECYCLE_PRESET, episodes=train_episodes)
+    rln = dataclasses.replace(presets.SDQN_N_LIFECYCLE_PRESET, episodes=train_episodes)
+    qp, _ = train_rl.train_mixture(jax.random.PRNGKey(42), cfgs, rl)
+    qpn, _ = train_rl.train_mixture(jax.random.PRNGKey(43), cfgs, rln)
+    return qp, qpn
+
+
+def bench_lifecycle_scenario(
+    name: str,
+    trials: int = 3,
+    n_pods: Optional[int] = None,
+    train_episodes: int = 120,
+) -> List[Tuple[str, float, float]]:
+    """Rows for one churn scenario under every policy.
+
+    The headline ``lifecycle_<scenario>_<policy>`` row carries the
+    time-averaged active-node count in ``derived`` (what ``check_smoke
+    --lifecycle`` gates as the sdqnn/kube ratio); the ``_energy_wh`` /
+    ``_avg_cpu`` / ``_retired`` companions are informational.
+    """
+    env_cfg = scenarios.make_env(name)
+    qp, qpn = lifecycle_policies(train_episodes)
+    n = n_pods or env_cfg.scenario.n_pods
+    rows = []
+    for policy in POLICIES:
+        cfg, consolidate = env_cfg, None
+        if policy == "kube":
+            sel = schedulers.make_kube_selector(cfg)
+        elif policy == "sdqn":
+            sel = schedulers.make_sdqn_selector(qp, cfg)
+        else:  # sdqnn: consolidation-trained net + the in-episode green pass
+            cfg = dataclasses.replace(env_cfg,
+                                      consolidate_every_s=CONSOLIDATE_EVERY_S)
+            sel = schedulers.make_sdqn_selector(qpn, cfg)
+            consolidate = elastic.make_consolidator(qpn, cfg)
+        ep = eval_engine.make_batch_episode(cfg, sel, n, consolidate)
+        keys = eval_engine.trial_keys(jax.random.PRNGKey(100), trials)
+        jax.block_until_ready(ep(keys))  # compile outside the timing window
+        t0 = time.time()
+        res = jax.block_until_ready(ep(keys))
+        us = (time.time() - t0) / trials * 1e6
+        s = eval_engine.summarize(res)
+        rows += [
+            (f"lifecycle_{name}_{policy}", us, s["nodes_active_mean"]),
+            (f"lifecycle_{name}_{policy}_energy_wh", 0.0, s["energy_wh_mean"]),
+            (f"lifecycle_{name}_{policy}_avg_cpu", 0.0, s["metric_mean"]),
+            (f"lifecycle_{name}_{policy}_retired", 0.0, s["retired_mean"]),
+        ]
+        print(f"  {name:22s} {policy:5s}  nodes_active={s['nodes_active_mean']:5.2f}"
+              f"  energy={s['energy_wh_mean']:7.2f}Wh"
+              f"  avg_cpu={s['metric_mean']:6.2f}%"
+              f"  retired={s['retired_mean']:.0f}  dropped={s['dropped_mean']:.1f}")
+    return rows
+
+
+def episode_throughput(trials: int = 16) -> List[Tuple[str, float, float]]:
+    """Lifecycle-episode throughput: batched churn episodes per second.
+
+    The ledger scatter-adds run inside the scanned loop, so this row guards
+    against the lifecycle machinery de-optimizing the episode hot path
+    (gated as a conservative floor by ``check_smoke --throughput-row``).
+    """
+    cfg = scenarios.make_env("short-job-burst")
+    sel = schedulers.make_kube_selector(cfg)
+    n = cfg.scenario.n_pods
+    ep = eval_engine.make_batch_episode(cfg, sel, n)
+    keys = eval_engine.trial_keys(jax.random.PRNGKey(0), trials)
+    jax.block_until_ready(ep(keys))
+    t0 = time.time()
+    for _ in range(3):
+        out = ep(keys)
+    jax.block_until_ready(out)
+    dt = (time.time() - t0) / 3
+    return [("lifecycle_episode_throughput", dt / trials * 1e6, trials / dt)]
+
+
+def rows(
+    trials: int = 3,
+    n_pods: Optional[int] = None,
+    train_episodes: int = 120,
+) -> List[Tuple[str, float, float]]:
+    """The full lifecycle sweep: every churn scenario + the throughput row."""
+    out = []
+    print("\n--- lifecycle sweep (time-averaged active nodes, lower = greener) ---")
+    for name in LIFECYCLE_SCENARIOS:
+        out += bench_lifecycle_scenario(name, trials=trials, n_pods=n_pods,
+                                        train_episodes=train_episodes)
+    out += episode_throughput()
+    return out
+
+
+def smoke_rows(
+    trials: int = 2,
+    n_pods: int = 40,
+    train_episodes: int = 16,
+) -> List[Tuple[str, float, float]]:
+    """CI-sized lifecycle bench — the sizing ``baseline_lifecycle.json`` was
+    committed with; keep the two in sync or the gate compares apples to
+    oranges."""
+    return rows(trials=trials, n_pods=n_pods, train_episodes=train_episodes)

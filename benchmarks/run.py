@@ -42,6 +42,15 @@ def main() -> None:
     mode.add_argument("--sched-scale", action="store_true",
                       help="CI-sized benchmarks/sched_scale.py sweep (training "
                            "throughput + seed-parallel engine speedup included)")
+    mode.add_argument("--sweep", action="store_true",
+                      help="full (non-smoke) scenario sweep over the whole "
+                           "registry — the nightly CI lane")
+    mode.add_argument("--lifecycle", action="store_true",
+                      help="pod-lifecycle / green-consolidation benchmark "
+                           "(SDQN vs SDQN-n vs kube on churn scenarios)")
+    mode.add_argument("--lifecycle-smoke", action="store_true",
+                      help="CI-sized lifecycle benchmark (the sizing "
+                           "benchmarks/baseline_lifecycle.json is gated at)")
     ap.add_argument("--trials", type=int, default=None,
                     help="episodes per measurement (default: 3, or 1 with --smoke)")
     ap.add_argument("--pods", type=int, default=None,
@@ -98,6 +107,22 @@ def main() -> None:
         from benchmarks import sched_scale
 
         rows += sched_scale.ci_rows()
+    elif args.sweep:
+        from benchmarks import scenario_bench
+
+        rows += scenario_bench.sweep(
+            trials=args.trials or 3, n_pods=args.pods,
+            train_episodes=args.train_episodes or 120)
+    elif args.lifecycle:
+        from benchmarks import lifecycle_bench
+
+        rows += lifecycle_bench.rows(
+            trials=args.trials or 3, n_pods=args.pods,
+            train_episodes=args.train_episodes or 120)
+    elif args.lifecycle_smoke:
+        from benchmarks import lifecycle_bench
+
+        rows += lifecycle_bench.smoke_rows()
     else:
         from benchmarks import roofline_report, sched_scale
 

@@ -27,7 +27,7 @@ def evaluate(select, trials=5, n_pods=50, cfg=None):
     mets, dists = [], []
     ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, select, n_pods))
     for t in range(trials):
-        _, dist, met, _ = ep(jax.random.PRNGKey(100 + t))
+        _, dist, met, _, _ = ep(jax.random.PRNGKey(100 + t))
         mets.append(float(met))
         dists.append(np.asarray(dist))
     return float(np.mean(mets)), dists

@@ -16,7 +16,7 @@ def evaluate(name, select, trials=5, n_pods=50):
     dists, mets = [], []
     for t in range(trials):
         k = jax.random.PRNGKey(100 + t)
-        _, dist, met, _ = jax.jit(
+        _, dist, met, _, _ = jax.jit(
             lambda kk: kenv.run_episode(kk, cfg, select, n_pods)
         )(k)
         dists.append([int(x) for x in dist])

@@ -12,7 +12,7 @@ def evaluate(name, select, trials=5, n_pods=50):
     mets, dists = [], []
     ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, select, n_pods))
     for t in range(trials):
-        st, dist, met, _ = ep(jax.random.PRNGKey(100 + t))
+        st, dist, met, _, _ = ep(jax.random.PRNGKey(100 + t))
         mets.append(float(met))
         dists.append([int(x) for x in st.exp_pods])
     avg = sum(mets) / len(mets)

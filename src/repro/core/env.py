@@ -19,13 +19,14 @@ explanation for why consolidation saves CPU.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import ClusterState, EnvConfig, PodSpec, PodTable
+from repro.core.types import (ClusterState, EnvConfig, EpisodeStats, PodLedger,
+                              PodSpec, PodTable)
 
 # ---------------------------------------------------------------------------
 # construction
@@ -59,7 +60,18 @@ def _scenario_pool(scn) -> dict:
         "base_hi": col(lambda c: c.base_cpu_frac[1]),
         "req_lo": col(lambda c: c.requested_frac[0]),
         "req_hi": col(lambda c: c.requested_frac[1]),
+        "idle_watts": col(lambda c: c.idle_watts),
+        "peak_watts": col(lambda c: c.peak_watts),
     }
+
+
+def node_watts(cfg: EnvConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Static per-node (idle_watts, peak_watts) arrays for the energy model."""
+    if cfg.scenario is None:
+        return (jnp.full((cfg.n_nodes,), cfg.idle_watts, jnp.float32),
+                jnp.full((cfg.n_nodes,), cfg.peak_watts, jnp.float32))
+    pool = _scenario_pool(cfg.scenario)
+    return jnp.asarray(pool["idle_watts"]), jnp.asarray(pool["peak_watts"])
 
 
 def reset(key: jax.Array, cfg: EnvConfig) -> ClusterState:
@@ -208,20 +220,45 @@ def _arrival_gaps(key: jax.Array, cfg: EnvConfig, n_pods: int) -> jnp.ndarray:
     return dts
 
 
+def _sample_lifetimes(key: jax.Array, scn, type_idx: jnp.ndarray,
+                      n_pods: int) -> jnp.ndarray:
+    """Per-arrival running durations from each ``PodType``'s distribution.
+
+    Lognormal with the type's mean and coefficient of variation (``cv=0``
+    degenerates to the deterministic mean; ``mean=inf`` pods never finish).
+    The lognormal's heavy tail is the empirically observed shape of container
+    job durations (a few stragglers dominate the drain window).
+    """
+    if scn is None:
+        return jnp.full((n_pods,), jnp.inf, jnp.float32)
+    mean = jnp.asarray([p.lifetime_mean_s for p in scn.pod_types], jnp.float32)
+    cv = jnp.asarray([p.lifetime_cv for p in scn.pod_types], jnp.float32)
+    sigma2 = jnp.log1p(cv * cv)
+    # mean = exp(mu + sigma^2/2)  =>  mu = log(mean) - sigma^2/2; inf means
+    # propagate: log(inf) = inf, exp(inf) = inf — the pod runs forever.
+    mu = jnp.log(mean) - 0.5 * sigma2
+    z = jax.random.normal(key, (n_pods,), jnp.float32)
+    return jnp.exp(mu[type_idx] + jnp.sqrt(sigma2)[type_idx] * z)
+
+
 def sample_pod_table(key: jax.Array, cfg: EnvConfig, n_pods: int) -> PodTable:
     """Draw the episode's arrival stream from the scenario (jittable).
 
     Without a scenario this is the paper's homogeneous burst: `n_pods` copies
-    of the default pod every `schedule_dt_s` seconds.
+    of the default pod every `schedule_dt_s` seconds, all running forever.
+    Lifetimes draw from a dedicated ``fold_in(key, 3)`` stream so the
+    type/gap draws stay identical to the pre-lifecycle tables.
     """
     k_type, k_dt = jax.random.split(key)
+    k_life = jax.random.fold_in(key, 3)
     scn = cfg.scenario
     if scn is None:
         specs = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n_pods,)), default_pod(cfg)
         )
         return PodTable(specs=specs, dt_s=_arrival_gaps(k_dt, cfg, n_pods),
-                        type_idx=jnp.zeros((n_pods,), jnp.int32))
+                        type_idx=jnp.zeros((n_pods,), jnp.int32),
+                        lifetime_s=jnp.full((n_pods,), jnp.inf, jnp.float32))
     w = jnp.asarray([p.weight for p in scn.pod_types], jnp.float32)
     type_idx = jax.random.categorical(k_type, jnp.log(w), shape=(n_pods,))
     by_type = PodSpec(
@@ -232,7 +269,8 @@ def sample_pod_table(key: jax.Array, cfg: EnvConfig, n_pods: int) -> PodTable:
     )
     specs = jax.tree.map(lambda col: col[type_idx], by_type)
     return PodTable(specs=specs, dt_s=_arrival_gaps(k_dt, cfg, n_pods),
-                    type_idx=type_idx.astype(jnp.int32))
+                    type_idx=type_idx.astype(jnp.int32),
+                    lifetime_s=_sample_lifetimes(k_life, scn, type_idx, n_pods))
 
 
 # ---------------------------------------------------------------------------
@@ -439,6 +477,118 @@ def hypothetical_place_reference(state: ClusterState, pod: PodSpec, cfg: EnvConf
     return jax.vmap(one)(jnp.arange(n))
 
 
+def remove_pod(state: ClusterState, node: jnp.ndarray, pod: PodSpec,
+               count: jnp.ndarray | int = 1) -> ClusterState:
+    """Unbind ``count`` pods of spec ``pod`` from ``node``: the exact inverse
+    of ``place``'s resource accounting (startup transients and the cached
+    image stay — pulling is not undone by a pod finishing or migrating)."""
+    c = jnp.asarray(count, jnp.float32)
+    onehot = jax.nn.one_hot(node, state.n_nodes, dtype=jnp.float32) * c
+    onehot_i = onehot.astype(jnp.int32)
+    return state._replace(
+        num_pods=state.num_pods - onehot_i,
+        exp_pods=state.exp_pods - onehot_i,
+        cpu_requested=state.cpu_requested - onehot * pod.cpu_request,
+        mem_requested=state.mem_requested - onehot * pod.mem_request,
+        pods_cpu=state.pods_cpu - onehot * pod.cpu_demand,
+        mem_used=state.mem_used - onehot * pod.mem_demand,
+    )
+
+
+# ---------------------------------------------------------------------------
+# pod lifecycle: fixed-shape expiry ledger, retirement, energy accounting
+# ---------------------------------------------------------------------------
+
+
+def ledger_init(n_slots: int) -> PodLedger:
+    """Empty expiry ledger with one slot per episode arrival (static shape)."""
+    z = jnp.zeros((n_slots,), jnp.float32)
+    return PodLedger(
+        node=jnp.full((n_slots,), -1, jnp.int32),
+        expiry_s=jnp.full((n_slots,), jnp.inf, jnp.float32),
+        spec=PodSpec(cpu_request=z, cpu_demand=z, mem_request=z, mem_demand=z),
+    )
+
+
+def ledger_record(ledger: PodLedger, slot, action, expiry_s, pod: PodSpec) -> PodLedger:
+    """Write arrival ``slot``: where the pod went and when it completes.
+
+    Dropped arrivals (``action == NO_NODE``) record as empty slots, so they
+    are never retired (no resources were ever acquired).
+    """
+    action = jnp.asarray(action, jnp.int32)
+    return PodLedger(
+        node=ledger.node.at[slot].set(action),
+        expiry_s=ledger.expiry_s.at[slot].set(
+            jnp.where(action >= 0, jnp.asarray(expiry_s, jnp.float32), jnp.inf)),
+        spec=jax.tree.map(lambda col, v: col.at[slot].set(v), ledger.spec, pod),
+    )
+
+
+def retire_expired(state: ClusterState, ledger: PodLedger
+                   ) -> Tuple[ClusterState, PodLedger, jnp.ndarray]:
+    """Retire every ledger pod whose expiry has passed: release its CPU/mem
+    requests, compute demand, and pod slots on its node, and free the slot.
+
+    One fused scatter-add (``segment_sum`` over the ledger's node column) per
+    resource column — O(K + N) with static shapes, so the scanned episode
+    loop and the vmapped eval/train engines batch over lifecycle episodes
+    unchanged.  With all-``inf`` lifetimes every mask is false and the state
+    passes through bit-for-bit (the static-table parity case).
+    """
+    n = state.n_nodes
+    done = (ledger.node >= 0) & (ledger.expiry_s <= state.time_s)
+    seg = jnp.clip(ledger.node, 0, n - 1)
+    w = done.astype(jnp.float32)
+
+    def released(col):
+        return jax.ops.segment_sum(w * col, seg, num_segments=n)
+
+    cnt = jax.ops.segment_sum(done.astype(jnp.int32), seg, num_segments=n)
+    state = state._replace(
+        num_pods=state.num_pods - cnt,
+        exp_pods=state.exp_pods - cnt,
+        cpu_requested=state.cpu_requested - released(ledger.spec.cpu_request),
+        mem_requested=state.mem_requested - released(ledger.spec.mem_request),
+        pods_cpu=state.pods_cpu - released(ledger.spec.cpu_demand),
+        mem_used=state.mem_used - released(ledger.spec.mem_demand),
+    )
+    ledger = ledger._replace(node=jnp.where(done, -1, ledger.node))
+    return state, ledger, jnp.sum(done).astype(jnp.int32)
+
+
+def has_lifecycle(cfg: EnvConfig) -> bool:
+    """True when the scenario's catalog contains any finite-lifetime pod.
+
+    A *static* (trace-time) property: scenarios are hashable jit statics, so
+    episodes over purely-immortal workloads skip the ledger bookkeeping
+    entirely — the hot training loop pays for retirement scatters only when
+    pods can actually retire.
+    """
+    scn = cfg.scenario
+    return scn is not None and any(
+        np.isfinite(p.lifetime_mean_s) for p in scn.pod_types)
+
+
+def nodes_active(state: ClusterState) -> jnp.ndarray:
+    """Nodes hosting >= 1 experiment pod — the nodes our workload keeps up."""
+    return jnp.sum(state.exp_pods > 0).astype(jnp.int32)
+
+
+def fleet_power_w(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
+    """Instantaneous power draw (watts) billed to the experiment workload.
+
+    Each node hosting our pods draws ``idle + (peak - idle) * cpu_util``;
+    nodes without experiment pods are releasable (a green autoscaler could
+    power them down), so they bill nothing — consolidation savings show up
+    directly in the integral of this quantity.
+    """
+    idle, peak = node_watts(cfg)
+    util = cpu_used(state, cfg) / state.cpu_capacity
+    return jnp.sum(jnp.where(state.exp_pods > 0,
+                             idle + (peak - idle) * util, 0.0))
+
+
 def tick(state: ClusterState, cfg: EnvConfig, dt_s) -> ClusterState:
     """Advance wall-clock: decay startup transients, accrue uptime.
 
@@ -465,56 +615,132 @@ def average_cpu_utilization(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
     return jnp.mean(cpu_pct(state, cfg))
 
 
+class _EpisodeAcc(NamedTuple):
+    """Scan-carried accumulators of the dt-weighted episode integrals."""
+
+    metric: jnp.ndarray        # sum of avg-CPU% * dt
+    dt: jnp.ndarray            # total integrated wall-clock
+    node_seconds: jnp.ndarray  # sum of nodes_active * dt
+    energy_j: jnp.ndarray      # sum of fleet power * dt (joules)
+    peak_active: jnp.ndarray   # max nodes_active seen
+    retired: jnp.ndarray       # int32 pods completed + released
+
+
+def _acc_init() -> _EpisodeAcc:
+    z = jnp.float32(0.0)
+    return _EpisodeAcc(z, z, z, z, z, jnp.int32(0))
+
+
 def run_episode(
     key: jax.Array,
     cfg: EnvConfig,
     select_action,  # (key, state, pod) -> int32 node index
     n_pods: int,
     pod_table: Optional[PodTable] = None,
-) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Schedule `n_pods` arrivals with `select_action`, then settle.
+    consolidate: Optional[Callable] = None,
+) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray, jnp.ndarray, EpisodeStats]:
+    """Schedule `n_pods` arrivals with `select_action`, settle, retire.
 
     Arrivals come from `pod_table` when given, otherwise they are sampled
     from `cfg.scenario` (homogeneous fixed burst when no scenario is set).
     The reset / arrival-stream / per-step action keys are split up front so
     the initial cluster layout is independent of the exploration noise.
 
-    Returns (final_state, pod_distribution (N,), metric = time-averaged
-    cluster-average CPU% over the measurement window, dropped = number of
-    arrivals for which the selector returned the ``NO_NODE`` sentinel, i.e.
-    the filtering phase left no feasible candidate and the pod was dropped).
+    The cluster is *dynamic*: every placement records its sampled lifetime in
+    a fixed-shape ``PodLedger`` and ``retire_expired`` releases completed
+    pods' CPU/mem/slots inside the scanned loop, so idle nodes appear over
+    time and the SDQN-n consolidation/energy story becomes measurable.  With
+    all-``inf`` lifetimes (the default pod, any catalog entry without a
+    duration) retirement is the identity and episodes reproduce the
+    pre-lifecycle static-table trajectories bit-for-bit.
+
+    ``consolidate`` (see ``sched.elastic.make_consolidator``) runs every
+    ``cfg.consolidate_every_s`` seconds of episode time: a jit-safe SDQN-n
+    pass that migrates pods off nearly-idle nodes through the fused
+    ``score_afterstates`` dispatch.
+
+    Returns ``(final_state, pod_distribution (N,), metric, dropped, stats)``
+    where ``metric`` is the dt-weighted cluster-average CPU% (the paper's
+    objective), ``dropped`` counts ``NO_NODE`` arrivals, and ``stats`` is an
+    ``EpisodeStats`` of the time-resolved lifecycle metrics (active nodes,
+    node-seconds, energy, retirements).
     """
     k_reset, k_pods, k_act = jax.random.split(key, 3)
     state = reset(k_reset, cfg)
+    # ledger bookkeeping is skipped at trace time when nothing can ever
+    # retire: the scenario's catalog is all-inf AND no caller-supplied table
+    # (whose lifetimes are runtime values) or consolidation pass needs slots
+    do_consolidate = consolidate is not None and cfg.consolidate_every_s > 0.0
+    use_ledger = (pod_table is not None or has_lifecycle(cfg) or do_consolidate)
     if pod_table is None:
         pod_table = sample_pod_table(k_pods, cfg, n_pods)
 
     # the metric integrates cluster-average CPU% over wall-clock (dt-weighted),
     # so bursty arrival phases don't over-weight the average under Poisson /
     # diurnal streams; with constant gaps this reduces to the plain mean.
+    def advance(st, ledger, dt, acc: _EpisodeAcc):
+        """Shared post-placement body: tick, retire, consolidate, integrate."""
+        t_before = st.time_s
+        st = tick(st, cfg, dt)
+        if use_ledger:
+            st, ledger, n_ret = retire_expired(st, ledger)
+        else:
+            n_ret = jnp.int32(0)
+        if do_consolidate:
+            period = cfg.consolidate_every_s
+            crossed = jnp.floor(st.time_s / period) > jnp.floor(t_before / period)
+            st, ledger = jax.lax.cond(
+                crossed,
+                lambda args: consolidate(args[0], args[1])[:2],
+                lambda args: args,
+                (st, ledger),
+            )
+        m = average_cpu_utilization(st, cfg)
+        na = nodes_active(st).astype(jnp.float32)
+        acc = _EpisodeAcc(
+            metric=acc.metric + m * dt,
+            dt=acc.dt + dt,
+            node_seconds=acc.node_seconds + na * dt,
+            energy_j=acc.energy_j + fleet_power_w(st, cfg) * dt,
+            peak_active=jnp.maximum(acc.peak_active, na),
+            retired=acc.retired + n_ret,
+        )
+        return st, ledger, acc
+
     def sched_step(carry, xs):
-        st, acc, cnt = carry
-        k, pod, dt = xs
+        st, ledger, acc = carry
+        t, k, pod, dt, lifetime = xs
         a = select_action(k, st, pod)
         st = place(st, a, pod, cfg)
-        st = tick(st, cfg, dt)
-        m = average_cpu_utilization(st, cfg)
-        return (st, acc + m * dt, cnt + dt), a
+        if use_ledger:
+            ledger = ledger_record(ledger, t, a, st.time_s + lifetime, pod)
+        st, ledger, acc = advance(st, ledger, dt, acc)
+        return (st, ledger, acc), a
 
     keys = jax.random.split(k_act, n_pods)
-    (state, acc, cnt), actions = jax.lax.scan(
-        sched_step, (state, 0.0, 0.0), (keys, pod_table.specs, pod_table.dt_s)
+    (state, ledger, acc), actions = jax.lax.scan(
+        sched_step, (state, ledger_init(n_pods if use_ledger else 1),
+                     _acc_init()),
+        (jnp.arange(n_pods), keys, pod_table.specs, pod_table.dt_s,
+         pod_table.lifetime_s),
     )
 
     def settle_step(carry, _):
-        st, acc, cnt = carry
-        st = tick(st, cfg, cfg.schedule_dt_s)
-        m = average_cpu_utilization(st, cfg)
-        return (st, acc + m * cfg.schedule_dt_s, cnt + cfg.schedule_dt_s), None
+        st, ledger, acc = carry
+        st, ledger, acc = advance(st, ledger, cfg.schedule_dt_s, acc)
+        return (st, ledger, acc), None
 
-    (state, acc, cnt), _ = jax.lax.scan(
-        settle_step, (state, acc, cnt), None, length=cfg.settle_steps
+    (state, ledger, acc), _ = jax.lax.scan(
+        settle_step, (state, ledger, acc), None, length=cfg.settle_steps
     )
     distribution = state.num_pods
     dropped = jnp.sum(actions < 0).astype(jnp.int32)
-    return state, distribution, acc / cnt, dropped
+    stats = EpisodeStats(
+        nodes_active_mean=acc.node_seconds / acc.dt,
+        nodes_active_final=nodes_active(state),
+        nodes_active_peak=acc.peak_active.astype(jnp.int32),
+        node_seconds=acc.node_seconds,
+        energy_wh=acc.energy_j / 3600.0,
+        retired=acc.retired,
+    )
+    return state, distribution, acc.metric / acc.dt, dropped, stats

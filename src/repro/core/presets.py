@@ -75,3 +75,40 @@ SDQN_SCENARIO_MIX_PRESET = RLConfig(
     batch_size=256,
     efficiency_weight=5.0,
 )
+
+# ---------------------------------------------------------------------------
+# lifecycle / churn training (finite pod lifetimes, green consolidation)
+# ---------------------------------------------------------------------------
+
+# Churn scenarios the lifecycle policies train across: pods finish and
+# release nodes mid-episode, so the consolidation signal actually exists.
+LIFECYCLE_MIX_NAMES = (
+    "short-job-burst",
+    "longrun-train-mix",
+    "diurnal-churn",
+    "consolidation-stress",
+)
+
+# Generalist SDQN over the churn mixture (for the lifecycle benchmark's
+# spread-style RL row; no node-count shaping).
+SDQN_LIFECYCLE_PRESET = RLConfig(
+    variant="sdqn",
+    episodes=720,
+    n_envs=16,
+    eps_end=0.05,
+    batch_size=256,
+    efficiency_weight=5.0,
+)
+
+# SDQN-n over the churn mixture: Table-5 consolidation + efficiency shaping
+# + the energy/node-count term (rewards.energy_term), producing the paper's
+# green packing *over time* — few active nodes, low node-seconds/energy.
+SDQN_N_LIFECYCLE_PRESET = RLConfig(
+    variant="sdqn_n",
+    episodes=720,
+    n_envs=16,
+    eps_end=0.05,
+    batch_size=256,
+    efficiency_weight=10.0,
+    energy_weight=15.0,
+)

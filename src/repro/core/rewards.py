@@ -102,8 +102,23 @@ def sdqn_n_reward(
     return pts
 
 
+def energy_term(exp_pods_before: jnp.ndarray, exp_pods_after: jnp.ndarray) -> jnp.ndarray:
+    """Active-node delta of one placement: +1 when it woke an idle node.
+
+    Potential-based shaping on the count of nodes hosting experiment pods —
+    the quantity ``env.EpisodeStats.node_seconds`` integrates and the green
+    consolidation story (paper §1 contribution 2, §6) minimizes.  Telescopes
+    over an episode to (final - initial) active nodes, so it cannot change
+    the optimal policy ordering, only sharpen the consolidation gradient.
+    """
+    before = jnp.sum(exp_pods_before > 0).astype(jnp.float32)
+    after = jnp.sum(exp_pods_after > 0).astype(jnp.float32)
+    return after - before
+
+
 def make_reward_fn(variant: str = "sdqn", consolidation_n: int = 2,
-                   efficiency_weight: float = 0.0):
+                   efficiency_weight: float = 0.0,
+                   energy_weight: float = 0.0):
     """Uniform reward interface for the training loop (and scenario mixtures):
 
         fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after)
@@ -111,21 +126,36 @@ def make_reward_fn(variant: str = "sdqn", consolidation_n: int = 2,
     Both variants see the same arguments so one transition function can train
     either head across any scenario; the features already carry the
     heterogeneity (percentages are relative to each node's own capacity).
+
+    ``energy_weight`` > 0 adds the green-consolidation term: each placement
+    pays ``energy_weight`` points per node it newly activates (see
+    ``energy_term``), so packing onto already-active nodes is rewarded over
+    waking idle ones — the node-count analogue of the avg-CPU efficiency
+    shaping.
     """
     if variant == "sdqn":
 
-        def fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):
+        def base_fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):
             return sdqn_reward(after_feats, action, exp_pods=exp_pods_after,
                                efficiency_weight=efficiency_weight,
                                before_feats=before_feats)
 
     elif variant == "sdqn_n":
 
-        def fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):
+        def base_fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):
             return sdqn_n_reward(after_feats, before_feats, ok, action,
                                  consolidation_n, exp_pods_before=exp_pods_before,
                                  efficiency_weight=efficiency_weight)
 
     else:
         raise ValueError(f"unknown reward variant: {variant!r}")
+
+    if not energy_weight:
+        return base_fn
+
+    def fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):
+        pts = base_fn(after_feats, before_feats, ok, action,
+                      exp_pods_before, exp_pods_after)
+        return pts - energy_weight * energy_term(exp_pods_before, exp_pods_after)
+
     return fn

@@ -72,6 +72,10 @@ class RLConfig:
     # reward mode: efficiency_weight > 0 adds the paper's objective (minimize
     # cluster-average CPU) as a shaping term; 0 = literal Table 3/5 ablation.
     efficiency_weight: float = 10.0
+    # green-consolidation shaping: points paid per node a placement newly
+    # activates (rewards.energy_term); 0 = off.  Pair with churn scenarios so
+    # the policy sees nodes actually emptying out over an episode.
+    energy_weight: float = 0.0
 
 
 class TrainCarry(NamedTuple):
@@ -180,7 +184,7 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
     the ``n_envs`` batch over the ``data`` axis (see ``_env_constraint``).
     """
     reward_fn = rewards.make_reward_fn(rl.variant, rl.consolidation_n,
-                                       rl.efficiency_weight)
+                                       rl.efficiency_weight, rl.energy_weight)
     shard = _env_constraint(mesh, rl.n_envs)
 
     def epsilon_at(step):
@@ -200,21 +204,38 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
         pods_t = shard(jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), tables.specs),
                        time_leading=True)
         dt_t = shard(jnp.swapaxes(tables.dt_s, 0, 1), time_leading=True)
+        life_t = shard(jnp.swapaxes(tables.lifetime_s, 0, 1), time_leading=True)
         # the arrival after this one, for bootstrapped Q(s') scoring (the last
         # row wraps, but its bonus is masked out below)
         pods_next_t = jax.tree.map(lambda x: jnp.roll(x, -1, axis=0), pods_t)
+        # per-env expiry ledgers: the training envs churn exactly like eval
+        # episodes — placed pods retire mid-episode and release resources, so
+        # the Q-net learns on clusters where idle nodes actually appear.
+        # Skipped at trace time for all-immortal catalogs (has_lifecycle is a
+        # static property): the hot loop pays for retirement scatters only
+        # on churn scenarios.
+        use_ledger = kenv.has_lifecycle(env_cfg)
+        ledgers = jax.vmap(lambda _: kenv.ledger_init(
+            rl.pods_per_episode if use_ledger else 1))(jnp.arange(rl.n_envs))
 
         def pod_step(inner, xs):
-            t, pod_t, pod_next_t, dt_row = xs
-            c, env_states = inner
+            t, pod_t, pod_next_t, dt_row, life_row = xs
+            c, env_states, ledgers = inner
             kt = jax.random.fold_in(k_steps, t)
             step_no = ep_idx * rl.pods_per_episode + t
             eps = epsilon_at(step_no)
             keys = jax.random.split(kt, rl.n_envs + 2)
+            expiry = env_states.time_s + life_row  # pods start at bind time
             new_states, stored, r, actions = jax.vmap(
                 lambda kk, st, pod, dt: _transition(
                     kk, c.params, st, pod, dt, env_cfg, eps, reward_fn)
             )(keys[: rl.n_envs], env_states, pod_t, dt_row)
+            if use_ledger:
+                ledgers = jax.vmap(
+                    lambda led, a, e, pod: kenv.ledger_record(led, t, a, e, pod)
+                )(ledgers, actions, expiry, pod_t)
+                new_states, ledgers, _ = jax.vmap(kenv.retire_expired)(
+                    new_states, ledgers)
             new_states = shard(new_states)
 
             targets = r
@@ -241,11 +262,11 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
                 c.target_params,
             )
             c = TrainCarry(params_, opt_, tgt, buf, c.key, learn_step)
-            return (c, new_states), (loss, jnp.mean(r))
+            return (c, new_states, ledgers), (loss, jnp.mean(r))
 
-        (carry2, env_states), (losses, rews) = jax.lax.scan(
-            pod_step, (carry, env_states),
-            (jnp.arange(rl.pods_per_episode), pods_t, pods_next_t, dt_t),
+        (carry2, env_states, _), (losses, rews) = jax.lax.scan(
+            pod_step, (carry, env_states, ledgers),
+            (jnp.arange(rl.pods_per_episode), pods_t, pods_next_t, dt_t, life_t),
         )
         metric = jax.vmap(lambda st: kenv.average_cpu_utilization(st, env_cfg))(env_states)
         return carry2, {

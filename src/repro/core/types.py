@@ -58,6 +58,11 @@ class NodeClass:
     ``base_cpu_frac`` / ``requested_frac`` are uniform ranges *as fractions of
     this class's capacity*, so a big node and a small node with the same
     fraction carry proportionate pre-existing load.
+
+    ``idle_watts`` / ``peak_watts`` parameterize the energy model: a node the
+    experiment workload keeps alive draws ``idle + (peak - idle) * cpu_util``
+    watts; nodes hosting none of our pods are releasable (could be powered
+    down), so they bill nothing to the workload.
     """
 
     name: str
@@ -69,11 +74,19 @@ class NodeClass:
     base_cpu_frac: tuple = (0.02, 0.2)
     requested_frac: tuple = (0.05, 0.5)
     image_cached_prob: float = 0.0    # chance the experiment image is pre-pulled
+    idle_watts: float = 120.0         # draw of a powered-on but idle node
+    peak_watts: float = 350.0         # draw at 100% CPU utilization
 
 
 @dataclasses.dataclass(frozen=True)
 class PodType:
-    """One entry of the workload catalog (mixture component of the stream)."""
+    """One entry of the workload catalog (mixture component of the stream).
+
+    ``lifetime_mean_s`` / ``lifetime_cv`` give the pod's running-duration
+    distribution (lognormal with that mean and coefficient of variation;
+    ``cv=0`` is deterministic).  The default ``inf`` never completes, which
+    reproduces the static-table episodes exactly (see ``env.retire_expired``).
+    """
 
     name: str
     weight: float                     # mixture weight in the arrival stream
@@ -81,6 +94,8 @@ class PodType:
     cpu_demand: float                 # millicores actually burned
     mem_request: float                # MiB
     mem_demand: float                 # MiB
+    lifetime_mean_s: float = float("inf")  # mean running duration; inf = forever
+    lifetime_cv: float = 0.0          # lognormal coefficient of variation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +128,9 @@ class ScenarioConfig:
     pod_types: tuple                  # tuple[PodType, ...]
     arrival: ArrivalConfig = ArrivalConfig()
     n_pods: int = 50                  # default arrivals per episode
+    settle_steps: Optional[int] = None  # post-arrival drain window override
+    #   (churn scenarios need a longer settle so pods actually finish and
+    #   the consolidation/energy story becomes measurable)
 
     @property
     def n_nodes(self) -> int:
@@ -124,12 +142,48 @@ class PodTable(NamedTuple):
 
     ``specs`` holds one ``PodSpec`` per arrival (leading dim n_pods);
     ``dt_s`` is the wall-clock gap *after* each placement; ``type_idx``
-    indexes the scenario's pod catalog (for logging / per-type metrics).
+    indexes the scenario's pod catalog (for logging / per-type metrics);
+    ``lifetime_s`` is each pod's sampled running duration (``inf`` = the
+    pod never completes — the pre-lifecycle static table).
     """
 
     specs: PodSpec                    # each field (n_pods,)
     dt_s: jnp.ndarray                 # (n_pods,) float32
     type_idx: jnp.ndarray             # (n_pods,) int32
+    lifetime_s: jnp.ndarray           # (n_pods,) float32, inf = runs forever
+
+
+class PodLedger(NamedTuple):
+    """Fixed-shape expiry ledger: one slot per episode arrival.
+
+    The jit/vmap-safe lifecycle bookkeeping: slot ``t`` is written when
+    arrival ``t`` binds (``node`` = chosen node, ``expiry_s`` = absolute
+    episode time the pod completes, ``spec`` = the exact resources to hand
+    back), and ``env.retire_expired`` scatter-releases every due slot per
+    step.  ``node == -1`` marks empty, dropped, or already-retired slots.
+    All arrays have leading dim K = arrivals per episode (a static shape),
+    so episodes batch under ``vmap`` / ``lax.scan`` unchanged.
+    """
+
+    node: jnp.ndarray                 # (K,) int32; -1 = empty / retired
+    expiry_s: jnp.ndarray             # (K,) float32 absolute completion time
+    spec: PodSpec                     # each field (K,): resources to release
+
+
+class EpisodeStats(NamedTuple):
+    """Time-resolved lifecycle metrics of one episode (all scalars).
+
+    ``nodes_active`` counts nodes hosting >= 1 experiment pod — the nodes the
+    workload prevents from being drained/powered down (the paper's SDQN-n
+    green-consolidation objective, §1 contribution 2 / §6).
+    """
+
+    nodes_active_mean: jnp.ndarray    # time-averaged active-node count
+    nodes_active_final: jnp.ndarray   # int32, active nodes at episode end
+    nodes_active_peak: jnp.ndarray    # int32, max active nodes over the episode
+    node_seconds: jnp.ndarray         # integral of nodes_active over wall-clock
+    energy_wh: jnp.ndarray            # integral of active-node power draw
+    retired: jnp.ndarray              # int32, pods that completed + released
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +219,13 @@ class EnvConfig:
     # episode
     schedule_dt_s: float = 2.0            # seconds between pod arrivals
     settle_steps: int = 20                # post-placement steps in the metric window
+    # energy model (homogeneous pools; scenario node classes override per class)
+    idle_watts: float = 120.0             # powered-on idle draw per node
+    peak_watts: float = 350.0             # draw at 100% CPU utilization
+    # in-episode SDQN-n consolidation cadence: every `consolidate_every_s`
+    # seconds of episode time, run the jit-safe consolidation pass (see
+    # sched.elastic.make_consolidator) passed to env.run_episode.  0 = off.
+    consolidate_every_s: float = 0.0
     # initial conditions.  Per-trial, the per-node *usage* profile and the
     # per-node *requests* profile are independently permuted + jittered: the
     # cluster-wide totals stay stable (paper CVs are 1.6–5.4%) while which
@@ -212,6 +273,8 @@ def fleet_cluster(n_nodes: int = 1024) -> EnvConfig:
 def scenario_env(scn: ScenarioConfig, randomize: bool = False, **overrides) -> EnvConfig:
     """EnvConfig for a scenario: n_nodes tracks the node pool; capacity and
     pod fields become per-class / per-arrival at reset/episode time."""
+    if scn.settle_steps is not None:
+        overrides.setdefault("settle_steps", scn.settle_steps)
     return dataclasses.replace(
         paper_cluster(),
         n_nodes=scn.n_nodes,

@@ -38,6 +38,11 @@ class TrialResults(NamedTuple):
     exp_pods: jnp.ndarray      # (T, N) final experiment pods per node
     dropped: jnp.ndarray       # (T,) int32 arrivals with no feasible node
     placed: jnp.ndarray        # (T,) int32 experiment pods actually bound
+    nodes_active: jnp.ndarray  # (T,) time-averaged active-node count
+    nodes_active_final: jnp.ndarray  # (T,) int32 active nodes at episode end
+    node_seconds: jnp.ndarray  # (T,) integral of active nodes over wall-clock
+    energy_wh: jnp.ndarray     # (T,) energy billed to the workload
+    retired: jnp.ndarray       # (T,) int32 pods completed + released
 
 
 def trial_keys(key: jax.Array, trials: int) -> jax.Array:
@@ -56,31 +61,43 @@ def _default_n_pods(env_cfg: EnvConfig, n_pods: Optional[int]) -> int:
     return env_cfg.scenario.n_pods if env_cfg.scenario is not None else 50
 
 
-def _trial_fn(env_cfg: EnvConfig, select: Callable, n: int) -> Callable:
+def _trial_fn(env_cfg: EnvConfig, select: Callable, n: int,
+              consolidate: Optional[Callable] = None) -> Callable:
     """The shared per-trial body: ``key -> TrialResults`` for one episode."""
 
     def one(k):
-        state, dist, metric, dropped = kenv.run_episode(k, env_cfg, select, n)
+        state, dist, metric, dropped, stats = kenv.run_episode(
+            k, env_cfg, select, n, consolidate=consolidate)
         return TrialResults(
             metric=metric,
             distribution=dist,
             exp_pods=state.exp_pods,
             dropped=dropped,
-            placed=jnp.sum(state.exp_pods).astype(jnp.int32),
+            # bound = arrivals the filter phase admitted; on churn scenarios
+            # the final exp_pods undercounts it (retired pods left already)
+            placed=jnp.int32(n) - dropped,
+            nodes_active=stats.nodes_active_mean,
+            nodes_active_final=stats.nodes_active_final,
+            node_seconds=stats.node_seconds,
+            energy_wh=stats.energy_wh,
+            retired=stats.retired,
         )
 
     return one
 
 
 def make_batch_episode(env_cfg: EnvConfig, select: Callable,
-                       n_pods: Optional[int] = None) -> Callable:
+                       n_pods: Optional[int] = None,
+                       consolidate: Optional[Callable] = None) -> Callable:
     """Jitted ``(T, key) -> TrialResults``: all trials in one XLA launch.
 
     Compiles once per (env_cfg, select, n_pods, T) — hold on to the returned
     callable across measurement rounds to keep jit out of timing windows.
+    ``consolidate`` threads the in-episode SDQN-n consolidation pass through
+    to ``run_episode`` (active when ``env_cfg.consolidate_every_s > 0``).
     """
     n = _default_n_pods(env_cfg, n_pods)
-    return jax.jit(jax.vmap(_trial_fn(env_cfg, select, n)))
+    return jax.jit(jax.vmap(_trial_fn(env_cfg, select, n, consolidate)))
 
 
 def make_param_evaluator(env_cfg: EnvConfig, selector_factory: Callable,
@@ -124,7 +141,8 @@ def make_multi_param_evaluator(env_cfg: EnvConfig, selector_factory: Callable,
 
 
 def summarize(trials: TrialResults) -> Dict[str, float]:
-    """Mean / std / 95% CI of the paper metric, plus drop and placement stats."""
+    """Mean / std / 95% CI of the paper metric, plus drop/placement stats and
+    the lifecycle consolidation metrics (active nodes, node-seconds, energy)."""
     mets = np.asarray(trials.metric, np.float64)
     dropped = np.asarray(trials.dropped, np.float64)
     t = mets.shape[0]
@@ -136,19 +154,32 @@ def summarize(trials: TrialResults) -> Dict[str, float]:
         "dropped_mean": float(dropped.mean()),
         "dropped_max": float(dropped.max()),
         "pods_placed_mean": float(np.asarray(trials.placed, np.float64).mean()),
+        "nodes_active_mean": float(np.asarray(trials.nodes_active, np.float64).mean()),
+        "nodes_active_final_mean": float(
+            np.asarray(trials.nodes_active_final, np.float64).mean()),
+        "node_seconds_mean": float(np.asarray(trials.node_seconds, np.float64).mean()),
+        "energy_wh_mean": float(np.asarray(trials.energy_wh, np.float64).mean()),
+        "retired_mean": float(np.asarray(trials.retired, np.float64).mean()),
         "trials": float(t),
     }
 
 
 def evaluate(key: jax.Array, env_cfg: EnvConfig, select: Callable,
              trials: int = 3, n_pods: Optional[int] = None,
-             batch: Optional[Callable] = None) -> Dict[str, float]:
+             batch: Optional[Callable] = None,
+             consolidate: Optional[Callable] = None) -> Dict[str, float]:
     """One-call evaluation: batched trials + summary dict.
 
     Pass a prebuilt ``batch`` (from ``make_batch_episode``) to amortize
-    compilation across measurement rounds.
+    compilation across measurement rounds — a prebuilt batch already baked
+    its consolidation pass in, so combining it with ``consolidate`` here
+    would silently drop the pass.
     """
-    ep = batch if batch is not None else make_batch_episode(env_cfg, select, n_pods)
+    if batch is not None and consolidate is not None:
+        raise ValueError("pass consolidate to make_batch_episode, not to "
+                         "evaluate, when supplying a prebuilt batch")
+    ep = batch if batch is not None else make_batch_episode(
+        env_cfg, select, n_pods, consolidate)
     res = ep(trial_keys(key, trials))
     out = summarize(res)
     out["n_pods"] = float(_default_n_pods(env_cfg, n_pods))

@@ -81,9 +81,48 @@ MEM_CACHE = PodType(
     cpu_request=100.0, cpu_demand=40.0, mem_request=4096.0, mem_demand=3900.0,
 )
 
+# ---------------------------------------------------------------------------
+# finite-lifetime pod types (churn / consolidation scenarios).  Durations are
+# lognormal (mean, cv) — see env._sample_lifetimes; the catalog entries above
+# keep the default lifetime of inf (they never finish), which is exactly the
+# paper's static-burst experiment.
+# ---------------------------------------------------------------------------
+
+# short CI-style job: arrives in waves, burns hard, gone in under a minute
+SHORT_JOB = PodType(
+    name="short-job", weight=1.0,
+    cpu_request=300.0, cpu_demand=350.0, mem_request=384.0, mem_demand=300.0,
+    lifetime_mean_s=45.0, lifetime_cv=0.4,
+)
+
+# long-running training replica: outlives the episode's arrival wave but
+# does finish — draining its node is worth planning for
+LONG_TRAIN = PodType(
+    name="long-train", weight=1.0,
+    cpu_request=900.0, cpu_demand=780.0, mem_request=2048.0, mem_demand=1800.0,
+    lifetime_mean_s=600.0, lifetime_cv=0.25,
+)
+
+# autoscaled serving replica: scaled up for a traffic wave, reaped after it
+SERVE_CHURN = PodType(
+    name="serve-churn", weight=1.0,
+    cpu_request=120.0, cpu_demand=60.0, mem_request=256.0, mem_demand=180.0,
+    lifetime_mean_s=90.0, lifetime_cv=0.6,
+)
+
+# medium-lived batch shard with a heavy straggler tail (cv ~ 1): a few
+# stragglers pin otherwise-idle nodes — the consolidation pass's bread and
+# butter
+BATCH_STRAGGLER = PodType(
+    name="batch-straggler", weight=1.0,
+    cpu_request=250.0, cpu_demand=220.0, mem_request=512.0, mem_demand=400.0,
+    lifetime_mean_s=150.0, lifetime_cv=1.0,
+)
+
 POD_TYPES = {
     p.name: p
-    for p in (NOOP_PAPER, TRAIN_HEAVY, SERVE_LIGHT, BATCH_BURST, MEM_CACHE)
+    for p in (NOOP_PAPER, TRAIN_HEAVY, SERVE_LIGHT, BATCH_BURST, MEM_CACHE,
+              SHORT_JOB, LONG_TRAIN, SERVE_CHURN, BATCH_STRAGGLER)
 }
 
 
@@ -92,3 +131,10 @@ def weighted(pod: PodType, weight: float) -> PodType:
     import dataclasses
 
     return dataclasses.replace(pod, weight=weight)
+
+
+def with_lifetime(pod: PodType, mean_s: float, cv: float = 0.3) -> PodType:
+    """Catalog pod type with a scenario-specific duration distribution."""
+    import dataclasses
+
+    return dataclasses.replace(pod, lifetime_mean_s=mean_s, lifetime_cv=cv)

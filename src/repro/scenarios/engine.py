@@ -22,16 +22,23 @@ def default_n_pods(env_cfg: EnvConfig, n_pods: Optional[int] = None) -> int:
 
 
 def scenario_episode(env_cfg: EnvConfig, select: Callable,
-                     n_pods: Optional[int] = None) -> Callable:
-    """Jitted ``key -> (final_state, distribution, metric, dropped)``."""
+                     n_pods: Optional[int] = None,
+                     consolidate: Optional[Callable] = None) -> Callable:
+    """Jitted ``key -> (final_state, distribution, metric, dropped, stats)``.
+
+    ``stats`` is the ``EpisodeStats`` of time-resolved lifecycle metrics;
+    ``consolidate`` threads the in-episode SDQN-n pass through.
+    """
     n = default_n_pods(env_cfg, n_pods)
-    return jax.jit(lambda k: kenv.run_episode(k, env_cfg, select, n))
+    return jax.jit(lambda k: kenv.run_episode(k, env_cfg, select, n,
+                                              consolidate=consolidate))
 
 
 def batch_episode(env_cfg: EnvConfig, select: Callable,
-                  n_pods: Optional[int] = None) -> Callable:
+                  n_pods: Optional[int] = None,
+                  consolidate: Optional[Callable] = None) -> Callable:
     """Jitted ``keys (T, ...) -> TrialResults`` — the batched trial runner."""
-    return eval_engine.make_batch_episode(env_cfg, select, n_pods)
+    return eval_engine.make_batch_episode(env_cfg, select, n_pods, consolidate)
 
 
 def evaluate_scenario(

@@ -96,6 +96,56 @@ BATCH_STORM = _register(ScenarioConfig(
     n_pods=80,
 ))
 
+# --- churn scenarios (finite pod lifetimes: the consolidation/energy story
+# is only measurable when pods finish and release their nodes) --------------
+
+# 9. short-job burst: a CI-style wave of sub-minute jobs on a widened paper
+#    pool.  The arrival wave saturates the pool, then the whole wave dies —
+#    nodes_active must fall back toward zero through the settle window.
+SHORT_JOB_BURST = _register(ScenarioConfig(
+    name="short-job-burst",
+    node_classes=(_c(cat.PAPER_SLAVE, count=8),),
+    pod_types=(cat.SHORT_JOB,),
+    arrival=ArrivalConfig(kind="burst"),
+    n_pods=60,
+    settle_steps=60,
+))
+
+# 10. long-running training mix: training replicas that outlive the arrival
+#     wave next to quickly-reaped serving churn, on a big/small pool.
+LONGRUN_TRAIN_MIX = _register(ScenarioConfig(
+    name="longrun-train-mix",
+    node_classes=(cat.BIG_CPU, cat.PAPER_SLAVE),
+    pod_types=(cat.weighted(cat.LONG_TRAIN, 0.3), cat.weighted(cat.SERVE_CHURN, 0.7)),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=0.5),
+    n_pods=60,
+    settle_steps=60,
+))
+
+# 11. diurnal churn: autoscaled serving replicas arriving on a daily wave and
+#     being reaped ~90s later — load rises and falls, nodes empty in the
+#     trough.
+DIURNAL_CHURN = _register(ScenarioConfig(
+    name="diurnal-churn",
+    node_classes=(cat.WARM_POOL, cat.PAPER_SLAVE),
+    pod_types=(cat.SERVE_CHURN,),
+    arrival=ArrivalConfig(kind="diurnal", rate_per_s=0.8, period_s=600.0, depth=0.9),
+    n_pods=100,
+    settle_steps=45,
+))
+
+# 12. consolidation stress: medium-lived batch shards with a heavy straggler
+#     tail (cv ~ 1) on a wide pool — a few stragglers pin otherwise-idle
+#     nodes, exactly what the in-episode SDQN-n consolidation pass drains.
+CONSOLIDATION_STRESS = _register(ScenarioConfig(
+    name="consolidation-stress",
+    node_classes=(_c(cat.PAPER_SLAVE, count=10),),
+    pod_types=(cat.weighted(cat.BATCH_STRAGGLER, 0.7), cat.weighted(cat.SHORT_JOB, 0.3)),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=0.6),
+    n_pods=80,
+    settle_steps=75,
+))
+
 # 8. fleet-scale heterogeneous pool for the scaling benchmarks.
 FLEET_HETERO = _register(ScenarioConfig(
     name="fleet-hetero",

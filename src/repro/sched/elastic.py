@@ -9,11 +9,14 @@ projected fleet-average utilization becomes.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Callable, List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import env as kenv, schedulers
+from repro.core.types import ClusterState, EnvConfig, PodLedger
 from repro.sched.placement import (JOB_UTIL_DELTA_PCT, FleetState, JobSpec,
                                    PlacementEngine)
 
@@ -26,6 +29,79 @@ class ConsolidationPlan:
     projected_avg_cpu_before: float
     projected_avg_cpu_after: float
     hosts_freed: int
+
+
+def make_consolidator(
+    qparams: dict,
+    cfg: EnvConfig,
+    max_migrations: int = 4,
+    idle_threshold: int = 2,
+    score_fn: Callable = None,
+) -> Callable:
+    """Jit-safe in-episode consolidation: the SDQN-n green pass, on-device.
+
+    ``consolidation_plan`` above proposes drains from Python; this is the
+    same policy as a fixed-shape kernel ``(state, ledger) -> (state, ledger,
+    moved)`` that ``env.run_episode`` invokes every
+    ``cfg.consolidate_every_s`` seconds inside the scanned loop.  Each of the
+    ``max_migrations`` sub-steps:
+
+      1. picks the drain source — the node with the fewest (but > 0)
+         experiment pods, at most ``idle_threshold`` of them;
+      2. picks the longest-remaining pod on it from the expiry ledger
+         (migrating a pod about to finish anyway buys nothing);
+      3. scores every candidate target through the shared fused
+         ``schedulers.score_afterstates`` dispatch and migrates to the
+         argmax-Q node among feasible nodes that are at least as loaded as
+         the source (packing is monotone, so the pass cannot ping-pong);
+      4. re-binds the pod (warm/cold start costs apply on the target) and
+         rewrites its ledger row, keeping its expiry — migration does not
+         restart the job's clock.
+
+    A sub-step with no valid source, pod, or target is the identity, so the
+    pass is a no-op on already-consolidated or saturated clusters.  All
+    shapes are static: the pass scans under jit/vmap in both the eval and
+    seed-parallel train engines unchanged.
+    """
+
+    def migrate_once(carry, _):
+        st, led, moved = carry
+        exp = st.exp_pods
+        n = st.n_nodes
+        drainable = st.healthy & (exp > 0) & (exp <= idle_threshold)
+        src = jnp.argmin(jnp.where(drainable, exp, jnp.iinfo(jnp.int32).max))
+        src = src.astype(jnp.int32)
+        # the live ledger pod on src with the most remaining runtime
+        on_src = led.node == src
+        row = jnp.argmax(jnp.where(on_src, led.expiry_s, -jnp.inf)).astype(jnp.int32)
+        pod = jax.tree.map(lambda c: c[row], led.spec)
+
+        st_rm = kenv.remove_pod(st, src, pod)
+        ok = kenv.feasible(st_rm, pod, cfg)
+        ok = ok & (jnp.arange(n) != src)
+        # consolidate monotonically: only onto nodes at least as loaded as
+        # the source was BEFORE the pod came off it — the busiest node count
+        # strictly grows (or the source empties), so the pass terminates,
+        # never ping-pongs, and a lone pod on an otherwise-idle cluster
+        # (already maximally packed) stays put instead of hopping between
+        # empty nodes paying pull costs
+        ok = ok & (st_rm.exp_pods >= st.exp_pods[src])
+        q = schedulers.score_afterstates(qparams, st_rm, pod, cfg, score_fn)
+        tgt = jnp.argmax(jnp.where(ok, q, -jnp.inf)).astype(jnp.int32)
+
+        do = jnp.any(drainable) & jnp.any(on_src) & jnp.any(ok)
+        st_new = kenv.place(st_rm, tgt, pod, cfg)
+        st = jax.tree.map(lambda a, b: jnp.where(do, b, a), st, st_new)
+        led = led._replace(node=led.node.at[row].set(jnp.where(do, tgt, led.node[row])))
+        return (st, led, moved + do.astype(jnp.int32)), None
+
+    def consolidate(state: ClusterState, ledger: PodLedger):
+        (state, ledger, moved), _ = jax.lax.scan(
+            migrate_once, (state, ledger, jnp.int32(0)), None,
+            length=max_migrations)
+        return state, ledger, moved
+
+    return consolidate
 
 
 def consolidation_plan(engine: PlacementEngine, fleet: FleetState,

@@ -22,7 +22,7 @@ class TestBatchEpisode:
         res = batch(keys)
         ep = jax.jit(lambda k: kenv.run_episode(k, CFG, sel, 30))
         for t in range(trials):
-            state, dist, met, dropped = ep(jax.random.fold_in(jax.random.PRNGKey(7), t))
+            state, dist, met, dropped, _ = ep(jax.random.fold_in(jax.random.PRNGKey(7), t))
             assert float(res.metric[t]) == float(met)
             np.testing.assert_array_equal(np.asarray(res.distribution[t]),
                                           np.asarray(dist))
@@ -39,6 +39,9 @@ class TestBatchEpisode:
         assert res.exp_pods.shape == (5, CFG.n_nodes)
         assert res.dropped.shape == (5,)
         assert res.placed.shape == (5,)
+        for field in ("nodes_active", "nodes_active_final", "node_seconds",
+                      "energy_wh", "retired"):
+            assert getattr(res, field).shape == (5,), field
 
     def test_fixed_trial_keys_match_prng_ladder(self):
         keys = eval_engine.fixed_trial_keys(100, 3)
@@ -64,12 +67,17 @@ class TestSummarize:
         assert out["pods_placed_mean"] == 20.0
 
     def test_ci_shrinks_with_trials(self):
+        def tr(metric):
+            t = metric.shape[0]
+            z = jnp.zeros((t,), jnp.int32)
+            f = jnp.zeros((t,))
+            return eval_engine.TrialResults(
+                metric, jnp.zeros((t, 2)), jnp.zeros((t, 2)), z, z,
+                f, z, f, f, z)
+
         m = jnp.array([20.0, 30.0] * 8)  # same spread at every length
-        z = jnp.zeros((16,), jnp.int32)
-        few = eval_engine.summarize(eval_engine.TrialResults(
-            m[:4], jnp.zeros((4, 2)), jnp.zeros((4, 2)), z[:4], z[:4]))
-        many = eval_engine.summarize(eval_engine.TrialResults(
-            m, jnp.zeros((16, 2)), jnp.zeros((16, 2)), z, z))
+        few = eval_engine.summarize(tr(m[:4]))
+        many = eval_engine.summarize(tr(m))
         assert many["metric_std"] == few["metric_std"]
         assert many["metric_ci95"] == few["metric_ci95"] / 2.0
 

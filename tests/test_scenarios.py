@@ -98,11 +98,11 @@ class TestEpisodes:
             env_cfg = scenarios.make_env(name)
             sel = schedulers.make_kube_selector(env_cfg)
             ep = scenarios.scenario_episode(env_cfg, sel)
-            s1, d1, m1, _ = ep(jax.random.PRNGKey(5))
-            s2, d2, m2, _ = ep(jax.random.PRNGKey(5))
+            s1, d1, m1, _, _ = ep(jax.random.PRNGKey(5))
+            s2, d2, m2, _, _ = ep(jax.random.PRNGKey(5))
             assert float(m1) == float(m2)
             np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
-            s3, _, m3, _ = ep(jax.random.PRNGKey(6))
+            s3, _, m3, _, _ = ep(jax.random.PRNGKey(6))
             assert not np.array_equal(np.asarray(s1.base_cpu), np.asarray(s3.base_cpu))
 
     def test_reset_key_disjoint_from_action_keys(self):
@@ -111,7 +111,7 @@ class TestEpisodes:
         cfg = paper_cluster()
         key = jax.random.PRNGKey(9)
         sel = schedulers.make_kube_selector(cfg)
-        final, _, _, _ = kenv.run_episode(key, cfg, sel, 10)
+        final, _, _, _, _ = kenv.run_episode(key, cfg, sel, 10)
         expected = kenv.reset(jax.random.split(key, 3)[0], cfg)
         # base_cpu is invariant through placements/ticks: the episode's
         # initial layout must be exactly reset(first split), not reset(key)
@@ -126,7 +126,7 @@ class TestEpisodes:
         sel = schedulers.make_kube_selector(env_cfg)
         ep = scenarios.scenario_episode(env_cfg, sel, n_pods=30)
         for seed in (0, 1):
-            state, _, metric, _ = ep(jax.random.PRNGKey(seed))
+            state, _, metric, _, _ = ep(jax.random.PRNGKey(seed))
             cap = np.asarray(state.cpu_capacity)
             assert bool(np.all(np.asarray(state.cpu_requested) <= cap + 1e-3))
             assert bool(np.all(np.asarray(state.mem_requested)

@@ -28,7 +28,7 @@ class TestKubeScheduler:
 
     def test_episode_runs(self):
         sel = schedulers.make_kube_selector(CFG)
-        _, dist, metric, dropped = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        _, dist, metric, dropped, _ = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
         assert int(dropped) == 0
         assert int(dist.sum()) >= 50  # includes tenant pods
         assert 5.0 < float(metric) < 60.0
@@ -82,7 +82,7 @@ class TestSelectors:
     def test_sdqn_selector_runs_episode(self):
         qp = dqn.init_qnet(jax.random.PRNGKey(0))
         sel = schedulers.make_sdqn_selector(qp, CFG)
-        _, dist, metric, _ = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        _, dist, metric, _, _ = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
         assert float(metric) > 0
 
     def test_unhealthy_node_never_selected(self):
@@ -142,7 +142,7 @@ class TestInfeasibleBurst:
         for sel in (schedulers.make_kube_selector(tiny),
                     schedulers.make_sdqn_selector(
                         dqn.init_qnet(jax.random.PRNGKey(0)), tiny)):
-            state, dist, _, dropped = kenv.run_episode(
+            state, dist, _, dropped, _ = kenv.run_episode(
                 jax.random.PRNGKey(0), tiny, sel, 20)
             assert int(dropped) > 0
             assert int(state.exp_pods.sum()) + int(dropped) == 20
