@@ -19,6 +19,13 @@
    ``min(cpu_count, n_seeds)`` devices so the engine's seed-axis sharding
    is actually exercised on CPU; on a real accelerator mesh the same code
    shards over the ``data`` axis.
+8. Joint seed×env sharding: the 2-D ``("seed", "data")`` layout vs pure
+   seed sharding at ``n_seeds < n_devices`` (a force-split 4-device host,
+   where seed-only sharding's ceiling is 2 busy devices at n_seeds=2 and
+   the joint planner runs a (2, 2) grid over all 4).
+9. Replay marginal cost: the fused-ring add + one-gather sample exactly as
+   the training loop drives them — the residual per-seed cost the
+   struct-of-arrays rework targets.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ import time
 from typing import List, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import dqn, env as kenv, schedulers, train_rl
 from repro.core.types import fleet_cluster, paper_cluster, training_cluster
@@ -249,12 +257,120 @@ def seed_parallel_speedup(n_seeds: int = 4, episodes: int = 20) -> List[Tuple[st
     return [tuple(r) for r in json.loads(out.stdout.strip().splitlines()[-1])]
 
 
+def _joint_sharding_measurements(n_seeds: int, episodes: int) -> List[Tuple[str, float, float]]:
+    """Measure seed-only vs joint seed×env sharding in THIS process (child of
+    ``joint_sharding_speedup``, which forces a 4-device host platform).
+
+    Seed-only sharding at ``n_seeds=2`` can occupy at most 2 devices however
+    many exist (its ceiling: one whole replica per device); the joint layout
+    splits the remaining factor across the env axis — here a (2, 2) grid
+    over all 4.  Both run through ``engine.train_seeds``; only the mesh
+    handed to the planner differs.
+
+    The workload is a 256-node fleet, not the 4-node paper cluster: env-axis
+    sharding splits the per-step environment work (O(N) afterstate scoring,
+    feature stacks) but pays fixed per-step partition/collective overhead
+    (the replay add all-gathers one (n_envs, 8) row into the replicated
+    ring, and every env-batched op forks across devices), so it is only
+    profitable when the sharded env work dominates the replicated learner —
+    on the 4-node cluster the overhead measures ~7x *slower*, at 256 nodes
+    env stepping dominates and the layout wins.  That threshold is a
+    property of the program, not the host: callers should hand
+    ``train_seeds`` a multi-device mesh for fleet-scale configs and leave
+    ``mesh=None`` for toy ones.
+    """
+    from repro.launch import mesh as meshmod
+    from repro.train import engine
+
+    tcfg = fleet_cluster(256)
+    rl = train_rl.RLConfig(variant="sdqn", episodes=episodes, n_envs=16,
+                           batch_size=256)
+    key = jax.random.PRNGKey(0)
+    n_dev = len(jax.devices())
+    n_seed_dev = min(n_seeds, n_dev)
+
+    def seed_only(k):
+        return engine.train_seeds(k, tcfg, rl, n_seeds,
+                                  mesh=meshmod.make_train_mesh(n_seed_dev))
+
+    def joint(k):
+        return engine.train_seeds(k, tcfg, rl, n_seeds,
+                                  mesh=meshmod.make_train_mesh(n_dev))
+
+    dt_seed = _time(seed_only, key, iters=3, warmup=1)
+    dt_joint = _time(joint, key, iters=3, warmup=1)
+    per_seed = rl.episodes * rl.pods_per_episode * rl.n_envs
+    return [
+        (f"seedonly_s{n_seeds}_d{n_seed_dev}", dt_seed * 1e6,
+         n_seeds * per_seed / dt_seed),
+        (f"joint_s{n_seeds}_d{n_dev}", dt_joint * 1e6,
+         n_seeds * per_seed / dt_joint),
+        ("joint_sharding_speedup", 0.0, dt_seed / dt_joint),
+    ]
+
+
+def joint_sharding_speedup(n_seeds: int = 2, episodes: int = 20,
+                           devices: int = 4) -> List[Tuple[str, float, float]]:
+    """Joint seed×env layout vs pure seed sharding on a force-split host.
+
+    Spawns a child with ``--xla_force_host_platform_device_count=4``
+    regardless of the physical core count: the *layout* question is how many
+    devices the program keeps busy, and forcing 4 exposes it on any host.
+    The measured speedup only materializes with >= 4 physical cores backing
+    the 4 devices (CI runners; any real multi-core/TPU host) — on a 2-core
+    container both programs time-share the same 2 cores and the ratio sits
+    near 1x, which is why the committed gate floor is conservative.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}").strip()
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sched_scale",
+         "--joint-sharding-child", str(n_seeds), str(episodes)],
+        env=env, capture_output=True, text=True)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"joint-sharding child failed ({out.returncode}):\n{out.stderr}")
+    return [tuple(r) for r in json.loads(out.stdout.strip().splitlines()[-1])]
+
+
+def replay_marginal_cost(lane: int = 16, batch: int = 256, steps: int = 512,
+                         cap: int = 4096) -> List[Tuple[str, float, float]]:
+    """The replay slice of the training step, exactly as the loop drives it:
+    one lane-wide ``replay_add`` + one ``replay_sample`` per scanned step.
+
+    This is the residual per-seed marginal cost the fused ring targets (one
+    contiguous slot write + one gather per step, vs three scatters + three
+    gathers in the per-column layout).  ``derived`` is stored transitions/s.
+    """
+    from repro.core.replay import replay_add, replay_init, replay_sample
+
+    key = jax.random.PRNGKey(0)
+
+    def run(k):
+        def step(buf, t):
+            tf = t.astype(jnp.float32)
+            feats = jnp.broadcast_to(tf, (lane, 6))
+            targets = jnp.broadcast_to(tf, (lane,))
+            weights = (jnp.arange(lane) % 7 != 0).astype(jnp.float32)
+            buf = replay_add(buf, feats, targets, weights)
+            f, tg, w = replay_sample(buf, jax.random.fold_in(k, t), batch)
+            return buf, f.sum() + tg.sum() + w.sum()
+        _, acc = jax.lax.scan(step, replay_init(cap, lane=lane),
+                              jnp.arange(steps))
+        return acc.sum()
+
+    dt = _time(jax.jit(run), key, iters=5, warmup=2)
+    return [("replay_marginal_cost", dt * 1e6, steps * lane / dt)]
+
+
 def ci_rows() -> List[Tuple[str, float, float]]:
     """The CI-sized sweep behind ``benchmarks.run --sched-scale``: only the
     training rows (the hot-path benches already run — and are archived — in
     the ``--smoke`` job; re-timing the 131072-node sweeps per push would buy
     nothing but wall-clock)."""
-    return training_throughput(smoke=True) + seed_parallel_speedup(episodes=10)
+    return (training_throughput(smoke=True) + seed_parallel_speedup(episodes=10)
+            + joint_sharding_speedup(episodes=10) + replay_marginal_cost())
 
 
 def run_all() -> List[Tuple[str, float, float]]:
@@ -266,12 +382,17 @@ def run_all() -> List[Tuple[str, float, float]]:
     out += placement_throughput()
     out += training_throughput()
     out += seed_parallel_speedup()
+    out += joint_sharding_speedup()
+    out += replay_marginal_cost()
     return out
 
 
 if __name__ == "__main__":
     if len(sys.argv) >= 2 and sys.argv[1] == "--seed-parallel-child":
         child_rows = _seed_parallel_measurements(int(sys.argv[2]), int(sys.argv[3]))
+        print(json.dumps(child_rows))
+    elif len(sys.argv) >= 2 and sys.argv[1] == "--joint-sharding-child":
+        child_rows = _joint_sharding_measurements(int(sys.argv[2]), int(sys.argv[3]))
         print(json.dumps(child_rows))
     else:
         for name, us, derived in run_all():

@@ -1,4 +1,21 @@
-"""On-device circular replay buffer (static shapes, scan-friendly)."""
+"""On-device circular replay buffer (static shapes, scan-friendly).
+
+The store is ONE fused ``(n_slots, lane, n_features + 2)`` ring: every
+transition's feature row, regression target and sample weight live in a
+single array (``[feats | target | weight]``), so a training step touches the
+buffer with exactly one write and one gather instead of three scatters plus
+three gathers — the measured residual per-seed marginal cost of the
+seed-parallel engine on XLA:CPU lived in that scatter/gather traffic.
+
+``lane`` is the caller's batch width (``n_envs`` for the RL loop).  With
+``lane > 1`` every add is one whole lane row, the write pointer stays
+lane-aligned, and the write lowers to a ``dynamic_update_slice`` on the slot
+axis — a contiguous in-place update, not an element-indexed scatter.  The
+default ``lane=1`` keeps the fully general transition-at-a-time ring (adds
+of any size, scatter writes), bit-identical in contents and sampling to the
+lane>1 layout: linear index ``i`` always means the ``i``-th stored
+transition, row-major over ``(slot, lane)``.
+"""
 from __future__ import annotations
 
 from typing import NamedTuple, Tuple
@@ -8,18 +25,50 @@ import jax.numpy as jnp
 
 
 class Replay(NamedTuple):
-    feats: jnp.ndarray     # (cap, 6)
-    targets: jnp.ndarray   # (cap,)
-    weights: jnp.ndarray   # (cap,) per-entry sample weight (0 = masked out)
-    ptr: jnp.ndarray       # () int32
-    size: jnp.ndarray      # () int32
+    data: jnp.ndarray      # (n_slots, lane, n_features + 2): [feats|target|weight]
+    ptr: jnp.ndarray       # () int32 — next write position, in transitions
+    size: jnp.ndarray      # () int32 — live transitions (<= capacity)
+
+    # flat column views, for tests/introspection (the hot paths below slice
+    # the fused rows directly and never materialize these)
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0] * self.data.shape[1]
+
+    @property
+    def lane(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def n_features(self) -> int:
+        return self.data.shape[2] - 2
+
+    @property
+    def feats(self) -> jnp.ndarray:
+        return self.data.reshape(self.capacity, -1)[:, : self.n_features]
+
+    @property
+    def targets(self) -> jnp.ndarray:
+        return self.data.reshape(self.capacity, -1)[:, self.n_features]
+
+    @property
+    def weights(self) -> jnp.ndarray:
+        return self.data.reshape(self.capacity, -1)[:, self.n_features + 1]
 
 
-def replay_init(capacity: int, n_features: int = 6) -> Replay:
+def replay_init(capacity: int, n_features: int = 6, lane: int = 1) -> Replay:
+    """Empty ring of ``capacity`` transitions.
+
+    ``lane`` is the fixed add width (``n_envs`` for the training loop): it
+    must divide ``capacity`` so the ring is a whole number of slots, and
+    every subsequent ``replay_add`` must be a multiple of it (the pointer
+    stays lane-aligned, which is what lets the write be a contiguous slice
+    update instead of a scatter).  ``lane=1`` accepts adds of any size.
+    """
+    if lane < 1 or capacity % lane != 0:
+        raise ValueError(f"lane {lane} must divide capacity {capacity}")
     return Replay(
-        feats=jnp.zeros((capacity, n_features), jnp.float32),
-        targets=jnp.zeros((capacity,), jnp.float32),
-        weights=jnp.zeros((capacity,), jnp.float32),
+        data=jnp.zeros((capacity // lane, lane, n_features + 2), jnp.float32),
         ptr=jnp.zeros((), jnp.int32),
         size=jnp.zeros((), jnp.int32),
     )
@@ -27,21 +76,46 @@ def replay_init(capacity: int, n_features: int = 6) -> Replay:
 
 def replay_add(buf: Replay, feats: jnp.ndarray, targets: jnp.ndarray,
                weights: jnp.ndarray = None) -> Replay:
-    """feats: (B, 6); targets: (B,); weights: (B,) or None (= all 1).
+    """feats: (B, F); targets: (B,); weights: (B,) or None (= all 1).
 
     A zero weight stores a transition that never contributes to the loss —
     used for dropped arrivals (``action == env.NO_NODE``), whose "afterstate"
     is fabricated and must not train the Q-net.
+
+    ``B == lane`` (the training loop's env batch) writes one whole slot via
+    ``dynamic_update_slice`` — the pointer is always lane-aligned, so the
+    row never straddles the wrap.  Any other ``B`` (multiples of ``lane``
+    only; enforced) falls back to the general modular scatter on the flat
+    transition view, which stores to the identical linear positions.
     """
-    cap = buf.feats.shape[0]
     b = feats.shape[0]
+    lane = buf.lane
+    if b % lane != 0:
+        raise ValueError(
+            f"add of {b} transitions into a lane-{lane} ring (adds must be "
+            f"multiples of the lane to keep the write pointer aligned)")
     if weights is None:
         weights = jnp.ones((b,), jnp.float32)
-    idx = (buf.ptr + jnp.arange(b, dtype=jnp.int32)) % cap
+    rows = jnp.concatenate(
+        [feats.astype(jnp.float32),
+         targets.astype(jnp.float32)[:, None],
+         weights.astype(jnp.float32)[:, None]], axis=1)
+    cap = buf.capacity
+    if b == lane and lane > 1:
+        # one aligned slot: contiguous in-place update, no per-element indices
+        slot = (buf.ptr // lane) % buf.data.shape[0]
+        data = jax.lax.dynamic_update_slice_in_dim(
+            buf.data, rows[None], slot, axis=0)
+    else:
+        # an add wider than the ring keeps only its last `cap` transitions —
+        # sliced up front so the scatter indices are unique (jnp's .at[].set
+        # leaves repeated-index application order undefined)
+        skip = max(b - cap, 0)
+        idx = (buf.ptr + skip + jnp.arange(b - skip, dtype=jnp.int32)) % cap
+        data = (buf.data.reshape(cap, -1).at[idx].set(rows[skip:])
+                .reshape(buf.data.shape))
     return Replay(
-        feats=buf.feats.at[idx].set(feats),
-        targets=buf.targets.at[idx].set(targets),
-        weights=buf.weights.at[idx].set(weights.astype(jnp.float32)),
+        data=data,
         ptr=(buf.ptr + b) % cap,
         size=jnp.minimum(buf.size + b, cap),
     )
@@ -58,8 +132,12 @@ def replay_sample(
     silently zero-weight the tail of every batch while ``size < batch``.
 
     ``size <= cap`` always (``replay_add`` clamps), so the draws are already
-    in-range and index the live prefix directly — no ``% cap`` re-wrap.
+    in-range and index the live prefix directly — no ``% cap`` re-wrap.  The
+    fused layout makes this ONE gather: features, targets and weights come
+    back as columns of the same sampled rows.
     """
+    nf = buf.n_features
     idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
-    valid = buf.weights[idx] * (buf.size > 0)
-    return buf.feats[idx], buf.targets[idx], valid
+    rows = buf.data.reshape(buf.capacity, -1)[idx]
+    valid = rows[:, nf + 1] * (buf.size > 0)
+    return rows[:, :nf], rows[:, nf], valid

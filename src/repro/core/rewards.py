@@ -105,11 +105,15 @@ def sdqn_n_reward(
 def energy_term(exp_pods_before: jnp.ndarray, exp_pods_after: jnp.ndarray) -> jnp.ndarray:
     """Active-node delta of one placement: +1 when it woke an idle node.
 
-    Potential-based shaping on the count of nodes hosting experiment pods —
-    the quantity ``env.EpisodeStats.node_seconds`` integrates and the green
-    consolidation story (paper §1 contribution 2, §6) minimizes.  Telescopes
-    over an episode to (final - initial) active nodes, so it cannot change
-    the optimal policy ordering, only sharpen the consolidation gradient.
+    Shaping on the count of nodes hosting experiment pods — the quantity
+    ``env.EpisodeStats.node_seconds`` integrates and the green consolidation
+    story (paper §1 contribution 2, §6) minimizes.  The undiscounted deltas
+    telescope over an episode to (final - initial) active nodes; note this
+    is deliberate objective shaping, not Ng-style policy-invariant shaping
+    (that would need the gamma-weighted ``gamma*phi(s') - phi(s)`` form
+    under the bootstrapped gamma=0.9 targets) — with ``energy_weight`` > 0
+    the learned optimum is *meant* to trade some CPU efficiency for fewer
+    woken nodes.
     """
     before = jnp.sum(exp_pods_before > 0).astype(jnp.float32)
     after = jnp.sum(exp_pods_after > 0).astype(jnp.float32)

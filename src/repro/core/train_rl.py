@@ -16,14 +16,17 @@ clusters.  The actual sharded topology (the Anakin/Podracer pattern):
     unchanged, so CPU tests and the 1-device container run the same code.
   * ``repro.train.engine.train_seeds`` vmaps this whole program over the
     seed ladder (``fold_in(key, seed)``), so ``train_and_select``'s
-    candidates compile once and run as ONE launch; on a mesh the *seed*
-    axis shards over ``data`` instead (whole replicas per device).
+    candidates compile once and run as ONE launch; on a mesh
+    ``launch.mesh.plan_seed_env_layout`` shards the joint (seed, env) batch
+    over a 2-D ``("seed", "data")`` grid — whole replicas per device group,
+    envs split inside each group — so all devices stay busy even when
+    ``n_seeds`` alone is smaller than the device count.
   * In-loop afterstate scoring routes through
     ``schedulers.score_afterstates`` — the same fused-kernel dispatch the
     serving path uses (Pallas on TPU at fleet scale, where the (N, 6)
     feature matrix never hits HBM); the replay stores the single realized
     (6,) afterstate via ``env.hypothetical_place_one``.
-  * The ``TrainCarry`` (replay buffer of cap x 6 floats, Adam moments,
+  * The ``TrainCarry`` (fused replay ring of cap x 8 floats, Adam moments,
     params) is donated across ``train_mixture`` segments: buffers are
     updated in place at scenario hand-offs, not copied.
 
@@ -281,7 +284,11 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
 def _init_carry(key: jax.Array, rl: RLConfig) -> TrainCarry:
     k_init, k_train = jax.random.split(key)
     params, opt_state = dqn.init_train_state(k_init)
-    buffer = replay_init(rl.buffer_capacity)
+    # lane = the env batch: every in-loop add is one whole (n_envs, 6) row,
+    # so the ring write is a contiguous slice update, not a scatter (replay
+    # contents and sampling are identical either way — lane is layout only)
+    lane = rl.n_envs if rl.buffer_capacity % rl.n_envs == 0 else 1
+    buffer = replay_init(rl.buffer_capacity, lane=lane)
     # the target net starts equal to the online net but must own its buffers:
     # the TrainCarry is donated across jitted segments, and XLA refuses to
     # donate the same buffer twice
@@ -357,9 +364,9 @@ def train_mixture(
         def _segment(carry, ep0, _episode=ep_fn):
             return jax.lax.scan(_episode, carry, ep0 + jnp.arange(chunk))
 
-        # the TrainCarry is donated: the replay buffer (cap x 6 floats), the
-        # Adam moments and both parameter sets are updated in place at every
-        # scenario hand-off instead of being copied per segment
+        # the TrainCarry is donated: the fused replay ring (cap x 8 floats),
+        # the Adam moments and both parameter sets are updated in place at
+        # every scenario hand-off instead of being copied per segment
         segments[cfg] = jax.jit(_segment, donate_argnums=(0,))
 
     carry = _init_carry(key, rl)

@@ -37,7 +37,8 @@ class TrialResults(NamedTuple):
     distribution: jnp.ndarray  # (T, N) final pods per node (tenant + ours)
     exp_pods: jnp.ndarray      # (T, N) final experiment pods per node
     dropped: jnp.ndarray       # (T,) int32 arrivals with no feasible node
-    placed: jnp.ndarray        # (T,) int32 experiment pods actually bound
+    placed: jnp.ndarray        # (T,) int32 admitted arrivals (n - dropped;
+                               # churn scenarios retire some before episode end)
     nodes_active: jnp.ndarray  # (T,) time-averaged active-node count
     nodes_active_final: jnp.ndarray  # (T,) int32 active nodes at episode end
     node_seconds: jnp.ndarray  # (T,) integral of active nodes over wall-clock

@@ -1,4 +1,4 @@
-"""Production mesh construction.
+"""Production mesh construction and the seed×env training-layout planner.
 
 A function (not a module-level constant) so importing this module never
 touches jax device state.  Single-pod: 16x16 = 256 chips ("data","model");
@@ -6,6 +6,9 @@ multi-pod: 2 pods x 256 = 512 chips ("pod","data","model") — the "pod" axis
 carries only gradient all-reduce (DCN-economical DP across pods).
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional
 
 import jax
 
@@ -30,3 +33,79 @@ def make_train_mesh(n_data: int | None = None):
     """
     n = n_data if n_data is not None else len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# joint seed×env layout planning for the seed-parallel training engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SeedEnvLayout:
+    """How ``train_seeds``'s (n_seeds, n_envs) batch maps onto devices.
+
+    ``mesh`` is a 2-D ``("seed", "data")`` mesh over every device of the
+    source mesh: the seed ladder shards over ``seed`` (``seed_shards``
+    device groups, each holding whole training replicas) and, inside each
+    group, the per-seed env batch shards over ``data`` (``env_shards``
+    devices).  ``env_shards == 1`` degenerates to pure seed sharding — one
+    flattened parallel axis — and ``seed_shards == 1`` to pure env sharding;
+    both are just the 2-D layout with a trivial axis, so the engine runs one
+    code path.  Hashable (meshes hash by device ids + axis names), so the
+    layout can ride along as a jit static.
+    """
+
+    mesh: jax.sharding.Mesh
+    seed_shards: int
+    env_shards: int
+
+
+def _split_seed_env(n_seeds: int, n_envs: int, n_dev: int) -> Optional[tuple]:
+    """Factor ``n_dev = s * e`` with ``s | n_seeds`` and ``e | n_envs``,
+    maximizing ``s`` (whole replicas per device are the cheapest layout:
+    zero cross-device traffic until selection).  Returns ``None`` when the
+    device count does not divide the total ``n_seeds * n_envs`` batch.
+
+    Such a split always exists when ``n_seeds * n_envs % n_dev == 0``: for
+    every prime power ``p^k`` of ``n_dev``, the seed axis takes
+    ``min(k, multiplicity of p in n_seeds)`` factors and the env axis covers
+    the remainder (which it can, since the product divides).
+    """
+    if n_dev <= 0 or (n_seeds * n_envs) % n_dev != 0:
+        return None
+    s, rem, p = 1, n_dev, 2
+    while rem > 1:
+        while rem % p == 0:
+            if n_seeds % (s * p) == 0:
+                s *= p
+            rem //= p
+        p += 1 if p == 2 else 2
+    e = n_dev // s
+    if n_envs % e != 0:  # unreachable when the product divides; kept as a guard
+        return None
+    return s, e
+
+
+def plan_seed_env_layout(n_seeds: int, n_envs: int, mesh) -> Optional[SeedEnvLayout]:
+    """Pick the joint seed×env sharding for a ``train_seeds`` launch.
+
+    Given the candidate count, the per-seed env batch and a device mesh,
+    returns a :class:`SeedEnvLayout` whose 2-D ``("seed", "data")`` mesh
+    keeps **all** devices busy whenever the device count divides
+    ``n_seeds * n_envs`` — the case PR 3's seed-only sharding left on the table
+    whenever ``n_seeds < n_devices`` (e.g. 2 seeds on a 4-device host ran on
+    2 devices; the joint layout runs them as a (2, 2) grid).  ``None`` means
+    run unsharded: no mesh, a single device, or an indivisible batch (the
+    bit-compatible single-device fallback).
+    """
+    if mesh is None:
+        return None
+    n_dev = int(mesh.devices.size)
+    if n_dev <= 1:
+        return None
+    split = _split_seed_env(n_seeds, n_envs, n_dev)
+    if split is None:
+        return None
+    s, e = split
+    lmesh = jax.sharding.Mesh(mesh.devices.reshape(s, e), ("seed", "data"))
+    return SeedEnvLayout(mesh=lmesh, seed_shards=s, env_shards=e)

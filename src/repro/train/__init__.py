@@ -1,5 +1,6 @@
 """Seed-parallel, mesh-sharded training engine (see ``repro.train.engine``)."""
 from repro.train.engine import (  # noqa: F401
+    Selection,
     seed_fold_keys,
     select_best,
     train_and_select,

@@ -20,16 +20,21 @@ Validation feeds the stacked params through one batched evaluator
 (``eval.engine.make_multi_param_evaluator``: all (seed, trial) episodes in
 one launch) and the winner is a NaN-guarded on-device argmin.
 
-On a mesh, the seed axis shards over ``data`` when it divides evenly (whole
-training replicas per device — the cheapest layout: zero cross-device
-traffic until selection); an indivisible seed count runs unsharded.  For
-env-axis sharding call ``train(..., mesh=...)`` directly.  ``mesh=None``
-(the CPU/test default) is the plain single-device vmap.
+On a mesh, ``launch.mesh.plan_seed_env_layout`` picks the joint seed×env
+layout: a 2-D ``("seed", "data")`` grid that shards the seed ladder over
+``seed`` (whole training replicas per device group — the cheapest layout:
+zero cross-device traffic until selection) and each seed's ``n_envs`` batch
+over ``data``, so **all** devices are busy whenever the device count
+divides ``n_seeds * n_envs``.  ``env_shards == 1`` degenerates to PR 3's pure
+seed sharding (one flattened parallel axis), ``seed_shards == 1`` to pure
+env sharding; an indivisible batch — and ``mesh=None``, the CPU/test
+default — runs the bit-compatible single-device vmap.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import warnings
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import schedulers, train_rl
 from repro.core.types import EnvConfig
 from repro.eval import engine as eval_engine
+from repro.launch import mesh as meshmod
 
 
 def seed_fold_keys(key: jax.Array, n_seeds: int) -> jax.Array:
@@ -50,18 +56,29 @@ def _seed_train(keys, env_cfg: EnvConfig, rl: train_rl.RLConfig, mesh=None):
     cache keys on the static (env_cfg, rl, mesh), so repeated selection
     rounds (benchmark sweeps, hyperparameter scans) reuse one executable.
 
-    The seed axis shards over ``data`` when it divides evenly; otherwise the
-    whole stack runs unsharded (env-axis sharding stays a direct
-    ``train(mesh=...)`` feature — constraining it *inside* the seed vmap
-    would re-anchor the spec on the batched seed dimension).
+    ``plan_seed_env_layout`` maps the (n_seeds, n_envs) batch onto the mesh:
+    the key ladder is pinned to the layout's ``seed`` axis and, when the
+    layout splits devices across envs too (``env_shards > 1``), the inner
+    ``train``'s ``n_envs`` constraints run under ``vmap(spmd_axis_name=
+    "seed")`` so every batched ``with_sharding_constraint`` spec re-anchors
+    as ``("seed", ..., "data")`` instead of being dropped on the batched
+    seed dimension.  No layout (``mesh=None``, one device, indivisible
+    batch) is the plain single-device vmap, bit-compatible with PR 3.
     """
-    if (mesh is not None and "data" in mesh.axis_names
-            and keys.shape[0] % mesh.shape["data"] == 0):
-        from jax.sharding import NamedSharding, PartitionSpec as P
+    layout = meshmod.plan_seed_env_layout(keys.shape[0], rl.n_envs, mesh)
+    if layout is None:
+        return jax.vmap(lambda k: train_rl.train(k, env_cfg, rl))(keys)
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
-        keys = jax.lax.with_sharding_constraint(
-            keys, NamedSharding(mesh, P("data")))
-    return jax.vmap(lambda k: train_rl.train(k, env_cfg, rl))(keys)
+    keys = jax.lax.with_sharding_constraint(
+        keys, NamedSharding(layout.mesh, P("seed")))
+    if layout.env_shards == 1:
+        # pure seed sharding: whole replicas per device, no inner constraints
+        return jax.vmap(lambda k: train_rl.train(k, env_cfg, rl))(keys)
+    return jax.vmap(
+        lambda k: train_rl.train(k, env_cfg, rl, mesh=layout.mesh),
+        spmd_axis_name="seed",
+    )(keys)
 
 
 def train_seeds(
@@ -81,17 +98,30 @@ def train_seeds(
     return _seed_train(seed_fold_keys(key, n_seeds), env_cfg, rl, mesh)
 
 
-def select_best(stacked_params: dict, metrics: jnp.ndarray) -> Tuple[dict, jnp.ndarray]:
-    """NaN-guarded candidate selection: (params of best seed, its metric).
+class Selection(NamedTuple):
+    """``select_best``'s result; unpacks as ``(params, metric, diverged)``."""
+
+    params: dict
+    metric: jnp.ndarray    # () guarded validation metric of the winner
+    diverged: jnp.ndarray  # () bool: EVERY candidate was NaN — params are
+                           # the seed-0 fallback, not a real selection
+
+
+def select_best(stacked_params: dict, metrics: jnp.ndarray) -> Selection:
+    """NaN-guarded candidate selection: (params of best seed, its metric,
+    all-NaN warning flag).
 
     NaN metrics never win (``x < NaN`` and ``NaN < x`` are both False, so a
     naive running-min would keep its ``inf`` start and return no params at
     all) — they are demoted to ``+inf`` before the argmin.  If *every* seed
-    is NaN the argmin lands on seed 0, so callers always get real params.
+    is NaN the argmin lands on seed 0, so callers always get real params —
+    and ``diverged`` is True so they can tell "seed 0 won" apart from
+    "everything diverged" (the metric alone cannot: both report seed 0).
     """
     guarded = jnp.where(jnp.isnan(metrics), jnp.inf, metrics)
     best = jnp.argmin(guarded)
-    return jax.tree.map(lambda x: x[best], stacked_params), guarded[best]
+    return Selection(jax.tree.map(lambda x: x[best], stacked_params),
+                     guarded[best], jnp.all(jnp.isnan(metrics)))
 
 
 def train_and_select(
@@ -116,5 +146,11 @@ def train_and_select(
         eval_cfg, lambda p: schedulers.make_sdqn_selector(p, eval_cfg), val_pods)
     val_keys = eval_engine.fixed_trial_keys(5000, val_trials)
     metrics = jnp.mean(evaluator(stacked, val_keys).metric, axis=1)   # (S,)
-    best_params, best_metric = select_best(stacked, metrics)
+    best_params, best_metric, diverged = select_best(stacked, metrics)
+    if bool(diverged):
+        warnings.warn(
+            f"train_and_select: every candidate's validation metric was NaN "
+            f"({n_seeds} seeds) — returning seed 0's params unselected; "
+            f"treat them as diverged",
+            RuntimeWarning, stacklevel=2)
     return best_params, float(best_metric)

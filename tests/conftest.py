@@ -1,9 +1,29 @@
+import os
+
 import jax
 import pytest
 
 # Tests run on the single CPU device (the 512-device override is ONLY for
 # the dry-run process — see src/repro/launch/dryrun.py).
 jax.config.update("jax_platform_name", "cpu")
+
+# Hypothesis tiers (no-op when the [test] extra is absent — the property
+# suites then degrade to skips, see tests/strategies.py):
+#   ci      — the PR-lane budget: few examples, no deadline (jit compiles
+#             inside examples blow any per-example deadline).
+#   nightly — the scheduled lane: an order of magnitude more examples, the
+#             budget a cron job can afford and a PR cannot.
+# Select with HYPOTHESIS_PROFILE=ci|nightly|dev; default is the ci budget so
+# a plain local `pytest` run stays fast.
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.register_profile("nightly", max_examples=250, deadline=None)
+    settings.register_profile("dev", max_examples=10, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:  # pragma: no cover - exercised when [test] extra absent
+    pass
 
 
 @pytest.fixture(scope="session")

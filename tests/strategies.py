@@ -1,0 +1,91 @@
+"""Shared hypothesis strategies for the property-based test tier.
+
+Every property suite imports from here instead of hand-rolling its own
+``try: import hypothesis`` guard: ``HAVE_HYPOTHESIS`` says whether the
+[test] extra is present, and the strategies cover the three substrates the
+jit/vmap-heavy surface is built on — clusters (seeds + action traces), pod
+tables (arrival/retire interleavings), and replay-ring op sequences.
+
+Modules degrade gracefully without hypothesis (the seed suite must pass on
+a bare ``pip install -e .``):
+
+    import strategies as strat  # tests/ is on sys.path under pytest
+
+    if strat.HAVE_HYPOTHESIS:
+        from hypothesis import given
+
+        @given(trace=strat.action_traces())
+        def test_property_x(trace): ...
+    else:
+        def test_property_x():
+            pytest.importorskip("hypothesis")
+
+Example budgets/deadlines come from the profiles registered in
+``tests/conftest.py`` (``HYPOTHESIS_PROFILE=ci|nightly|dev``) — strategies
+here deliberately carry no ``@settings`` so the nightly lane can scale the
+example count without editing every suite.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when [test] extra absent
+    st = None
+    HAVE_HYPOTHESIS = False
+
+
+def seeds():
+    """PRNG seeds for ``reset``/``sample_pod_table`` — the full int32 range."""
+    return st.integers(0, 2**31 - 1)
+
+
+def action_traces(n_nodes: int = 4, max_len: int = 30):
+    """Node-index sequences driving ``place``/``tick`` on a small cluster."""
+    return st.lists(st.integers(0, n_nodes - 1), min_size=1, max_size=max_len)
+
+
+def pod_events(n_nodes: int = 4, max_len: int = 24):
+    """Arrival/advance interleavings for the PodLedger lifecycle invariants.
+
+    Each event is ``(node, lifetime_s, advance_s)``: bind one pod to
+    ``node`` (the ledger records ``now + lifetime``), then advance the clock
+    by ``advance_s`` and retire whatever fell due.  Short lifetimes against
+    long advances force mid-trace retirement; ``inf``-ish long ones pin the
+    never-retire path — both interleave freely within one trace.
+    """
+    event = st.tuples(
+        st.integers(0, n_nodes - 1),
+        st.floats(0.5, 600.0, allow_nan=False, allow_infinity=False),
+        st.floats(0.0, 120.0, allow_nan=False, allow_infinity=False),
+    )
+    return st.lists(event, min_size=1, max_size=max_len)
+
+
+def replay_ops(max_ops: int = 16, max_add: int = 7):
+    """Add/sample interleavings for the replay-ring invariants.
+
+    ``("add", n, drop_mask_seed)`` stores ``n`` transitions (the seed picks
+    which of them are weight-0 "dropped" rows); ``("sample", batch)`` draws.
+    Sequences long enough to wrap a small ring several times.
+    """
+    add = st.tuples(st.just("add"), st.integers(1, max_add),
+                    st.integers(0, 2**16 - 1))
+    sample = st.tuples(st.just("sample"), st.integers(1, 64),
+                       st.integers(0, 2**16 - 1))
+    return st.lists(st.one_of(add, sample), min_size=1, max_size=max_ops)
+
+
+def add_sizes(max_adds: int = 12, max_add: int = 7):
+    """Plain add-width sequences (the original ring size/ptr property)."""
+    return st.lists(st.integers(1, max_add), min_size=1, max_size=max_adds)
+
+
+def churn_traces(n_nodes: int = 6, max_pods: int = 12):
+    """Random placements for the consolidator properties: a list of
+    ``(node, lifetime_s)`` bindings onto an initially-empty cluster."""
+    pod = st.tuples(st.integers(0, n_nodes - 1),
+                    st.floats(30.0, 3000.0, allow_nan=False,
+                              allow_infinity=False))
+    return st.lists(pod, min_size=1, max_size=max_pods)

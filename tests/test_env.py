@@ -135,22 +135,17 @@ def _check_env_invariants(seed, actions):
     assert bool(jnp.all(feats[:, 0] <= 100.0 + 1e-3))    # cpu% capped
 
 
-# A bare module-level `pytest.importorskip("hypothesis")` would skip this
-# whole module (unit tests included); guard just the property-based test so
-# the suite degrades gracefully when the [test] extra is absent.
-try:
-    import hypothesis  # noqa: F401
-except ImportError:  # pragma: no cover - exercised when [test] extra absent
-    hypothesis = None
+# The hypothesis guard lives in tests/strategies.py (shared by every
+# property suite): a bare module-level `pytest.importorskip("hypothesis")`
+# would skip this whole module, unit tests included, so only the randomized
+# tier degrades when the [test] extra is absent.  Example budgets come from
+# the profiles in tests/conftest.py (HYPOTHESIS_PROFILE=ci|nightly|dev).
+import strategies as strat
 
-if hypothesis is not None:
-    from hypothesis import given, settings, strategies as st
+if strat.HAVE_HYPOTHESIS:
+    from hypothesis import given
 
-    @settings(max_examples=25, deadline=None)
-    @given(
-        seed=st.integers(0, 2**31 - 1),
-        actions=st.lists(st.integers(0, 3), min_size=1, max_size=30),
-    )
+    @given(seed=strat.seeds(), actions=strat.action_traces())
     def test_property_env_invariants(seed, actions):
         _check_env_invariants(seed, actions)
 

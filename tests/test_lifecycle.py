@@ -13,10 +13,6 @@ from repro import scenarios
 from repro.core import dqn, env as kenv, rewards, schedulers
 from repro.core.types import paper_cluster
 
-CHURN = ("short-job-burst", "longrun-train-mix", "diurnal-churn",
-         "consolidation-stress")
-
-
 class TestLifetimeSampling:
     def test_default_pod_runs_forever(self):
         table = kenv.sample_pod_table(jax.random.PRNGKey(0), paper_cluster(), 16)

@@ -141,16 +141,15 @@ class TestReplay:
         assert 1.0 in np.asarray(w).tolist()
 
 
-# property-based variant only when the [test] extra (hypothesis) is present
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # pragma: no cover - exercised when [test] extra absent
-    st = None
+# property-based variant only when the [test] extra (hypothesis) is
+# present; the strategies and the import guard are shared across suites via
+# tests/strategies.py, budgets via the conftest profiles
+import strategies as strat
 
-if st is not None:
+if strat.HAVE_HYPOTHESIS:
+    from hypothesis import given
 
-    @settings(max_examples=20, deadline=None)
-    @given(adds=st.lists(st.integers(1, 7), min_size=1, max_size=12))
+    @given(adds=strat.add_sizes())
     def test_property_size_and_ptr(adds):
         TestReplay.check_size_and_ptr(adds)
 

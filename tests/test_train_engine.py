@@ -1,6 +1,13 @@
 """Seed-parallel training-engine tests: equivalence with the sequential seed
-loop, mesh-constraint parity, fused in-loop afterstate scoring, NaN-guarded
-candidate selection, and replay-sampling regressions."""
+loop, joint seed×env layout planning + mesh-constraint parity, fused in-loop
+afterstate scoring, NaN-guarded candidate selection, and replay-sampling
+regressions."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -107,19 +114,181 @@ class TestSelectBest:
         return {"w": jnp.arange(3.0).reshape(3, 1)}
 
     def test_picks_min(self):
-        p, v = engine.select_best(self._stack(), jnp.array([3.0, 1.0, 2.0]))
+        p, v, diverged = engine.select_best(self._stack(),
+                                            jnp.array([3.0, 1.0, 2.0]))
         assert float(v) == 1.0 and float(p["w"][0]) == 1.0
+        assert not bool(diverged)
 
     def test_nan_never_wins(self):
         """NaN validation metrics must not beat finite ones (every NaN
         comparison is False, so the old running-min returned (None, inf))."""
-        p, v = engine.select_best(self._stack(),
-                                  jnp.array([jnp.nan, 2.0, jnp.nan]))
+        p, v, diverged = engine.select_best(self._stack(),
+                                            jnp.array([jnp.nan, 2.0, jnp.nan]))
         assert float(v) == 2.0 and float(p["w"][0]) == 1.0
+        assert not bool(diverged)  # one finite seed is a real selection
 
-    def test_all_nan_falls_back_to_seed0(self):
-        p, v = engine.select_best(self._stack(), jnp.full((3,), jnp.nan))
+    def test_all_nan_falls_back_to_seed0_and_warns(self):
+        """All-NaN still returns real params (seed 0), but the ``diverged``
+        flag must distinguish that fallback from seed 0 *winning* — the
+        metric alone cannot (callers see inf either way)."""
+        p, v, diverged = engine.select_best(self._stack(),
+                                            jnp.full((3,), jnp.nan))
         assert np.isinf(float(v)) and float(p["w"][0]) == 0.0
+        assert bool(diverged)
+
+    def test_train_and_select_warns_on_divergence(self, monkeypatch):
+        """The engine surfaces the all-NaN case as a RuntimeWarning instead
+        of silently handing back seed 0."""
+        import pytest
+
+        def fake_train_seeds(key, cfg, rl, n_seeds, mesh=None):
+            return {"w": jnp.zeros((n_seeds, 1))}, {}
+
+        class FakeEval:
+            def __call__(self, stacked, keys):
+                class R:
+                    metric = jnp.full((2, 3), jnp.nan)
+                return R()
+
+        monkeypatch.setattr(engine, "train_seeds", fake_train_seeds)
+        monkeypatch.setattr(engine.eval_engine, "make_multi_param_evaluator",
+                            lambda *a, **k: FakeEval())
+        with pytest.warns(RuntimeWarning, match="NaN"):
+            params, metric = engine.train_and_select(
+                jax.random.PRNGKey(0), TCFG, TCFG, RL, n_seeds=2,
+                val_trials=3)
+        assert np.isinf(metric) and params is not None
+
+
+class TestLayoutPlanner:
+    """``plan_seed_env_layout``: the joint seed×env device split."""
+
+    def test_split_prefers_seed_axis(self):
+        assert meshmod._split_seed_env(4, 16, 4) == (4, 1)
+        assert meshmod._split_seed_env(8, 16, 4) == (4, 1)
+
+    def test_split_joint_when_seeds_short(self):
+        assert meshmod._split_seed_env(2, 16, 4) == (2, 2)
+        assert meshmod._split_seed_env(2, 16, 8) == (2, 4)
+        assert meshmod._split_seed_env(6, 10, 4) == (2, 2)
+        assert meshmod._split_seed_env(9, 8, 6) == (3, 2)
+
+    def test_split_env_only(self):
+        assert meshmod._split_seed_env(3, 16, 4) == (1, 4)
+        assert meshmod._split_seed_env(1, 8, 2) == (1, 2)
+
+    def test_split_indivisible(self):
+        assert meshmod._split_seed_env(3, 5, 4) is None
+        assert meshmod._split_seed_env(2, 2, 8) is None  # batch < devices
+        assert meshmod._split_seed_env(2, 16, 0) is None
+
+    def test_split_always_exists_when_product_divides(self):
+        """Number theory pin: the greedy prime split never misses a valid
+        factorization when n_seeds * n_envs % n_dev == 0."""
+        for n_seeds in range(1, 13):
+            for n_envs in range(1, 17):
+                for n_dev in range(1, 17):
+                    got = meshmod._split_seed_env(n_seeds, n_envs, n_dev)
+                    if (n_seeds * n_envs) % n_dev == 0:
+                        s, e = got
+                        assert s * e == n_dev
+                        assert n_seeds % s == 0 and n_envs % e == 0
+                    else:
+                        assert got is None
+
+    def test_single_device_and_no_mesh_plan_none(self):
+        assert meshmod.plan_seed_env_layout(4, 16, None) is None
+        assert meshmod.plan_seed_env_layout(
+            4, 16, meshmod.make_host_mesh()) is None
+
+    def test_layout_is_hashable_jit_static(self):
+        lay = meshmod.SeedEnvLayout(meshmod.make_host_mesh(), 1, 1)
+        assert hash(lay) == hash(
+            meshmod.SeedEnvLayout(meshmod.make_host_mesh(), 1, 1))
+
+
+class TestJointShardingParity:
+    """Multi-device parity for the joint layouts, in a child process (the
+    host platform can only be split into >1 device before jax initializes).
+
+    One child covers the three layout paths on a forced 4-device host:
+    joint (2, 2) at n_seeds=2, env-only (1, 4) at n_seeds=3 with the seed
+    axis indivisible, and the full fallback at an indivisible batch — each
+    pinned <= 1e-6 against the unsharded program with the identical
+    ``fold_in`` PRNG ladder."""
+
+    _CHILD = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.core import train_rl
+        from repro.core.types import training_cluster
+        from repro.launch import mesh as meshmod
+        from repro.train import engine
+
+        cfg = training_cluster()
+        key = jax.random.PRNGKey(0)
+        mesh4 = meshmod.make_train_mesh(4)
+        checks = {}
+
+        def parity(tag, rl, n_seeds):
+            ref, rm = engine.train_seeds(key, cfg, rl, n_seeds)
+            got, gm = engine.train_seeds(key, cfg, rl, n_seeds, mesh=mesh4)
+            # the repo-wide parity pin: atol 1e-6 with rtol 1e-5 headroom for
+            # float reassociation on O(10-100) metrics (see
+            # TestSeedParallel.test_matches_sequential_per_seed)
+            for name in ref:
+                np.testing.assert_allclose(np.asarray(got[name]),
+                                           np.asarray(ref[name]),
+                                           atol=1e-6, rtol=1e-5,
+                                           err_msg=f"{tag}:{name}")
+            for k in rm:
+                np.testing.assert_allclose(np.asarray(gm[k]),
+                                           np.asarray(rm[k]),
+                                           atol=1e-6, rtol=1e-5,
+                                           err_msg=f"{tag}:{k}")
+            checks[tag] = "ok"
+
+        rl4 = train_rl.RLConfig(episodes=2, pods_per_episode=5, n_envs=4,
+                                batch_size=16, buffer_capacity=64)
+        lay = meshmod.plan_seed_env_layout(2, 4, mesh4)
+        assert (lay.seed_shards, lay.env_shards) == (2, 2), lay
+        parity("joint_2x2", rl4, 2)
+
+        lay = meshmod.plan_seed_env_layout(3, 4, mesh4)
+        assert (lay.seed_shards, lay.env_shards) == (1, 4), lay
+        parity("env_only_1x4", rl4, 3)
+
+        rl5 = train_rl.RLConfig(episodes=1, pods_per_episode=4, n_envs=5,
+                                batch_size=16, buffer_capacity=60)
+        assert meshmod.plan_seed_env_layout(3, 5, mesh4) is None
+        parity("fallback_unsharded", rl5, 3)
+
+        print("PARITY" + json.dumps(checks))
+    """)
+
+    def test_joint_and_fallback_match_unsharded(self):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            " --xla_force_host_platform_device_count=4").strip()
+        env["JAX_PLATFORM_NAME"] = "cpu"
+        # the child must resolve the same repro tree whether the suite runs
+        # from PYTHONPATH=src or an editable install
+        import repro
+
+        # __path__ (not __file__): repro is a namespace package
+        src_dir = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+        env["PYTHONPATH"] = os.pathsep.join(
+            [src_dir] + [p for p in (env.get("PYTHONPATH"),) if p])
+        out = subprocess.run([sys.executable, "-c", self._CHILD], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("PARITY")][-1]
+        checks = json.loads(line[len("PARITY"):])
+        assert set(checks) == {"joint_2x2", "env_only_1x4",
+                               "fallback_unsharded"}
+        assert all(v == "ok" for v in checks.values()), checks
 
 
 class TestFusedInLoopScoring:
@@ -259,6 +428,21 @@ class TestReplaySampling:
         buf = replay_init(8)
         _, _, w = replay_sample(buf, jax.random.PRNGKey(0), 16)
         np.testing.assert_array_equal(np.asarray(w), np.zeros((16,)))
+
+
+class TestReplayLaneLayout:
+    """The training loop's ring is lane-structured by ``n_envs``."""
+
+    def test_init_carry_lane_matches_env_batch(self):
+        carry = train_rl._init_carry(jax.random.PRNGKey(0), RL)
+        assert carry.buffer.lane == RL.n_envs
+        assert carry.buffer.capacity == RL.buffer_capacity
+
+    def test_init_carry_lane_falls_back_when_indivisible(self):
+        rl = train_rl.RLConfig(n_envs=3, buffer_capacity=64)
+        carry = train_rl._init_carry(jax.random.PRNGKey(0), rl)
+        assert carry.buffer.lane == 1
+        assert carry.buffer.capacity == 64
 
 
 class TestSupervisedSharedTransition:
