@@ -30,6 +30,12 @@ floors — the gate exists to catch order-of-magnitude regressions (a de-jitted
 hot loop, a silent fallback to per-step dispatch), not CI-machine jitter.
 Other timing columns stay informational only.
 
+``--latency-row NAME`` (repeatable) is the mirror-image *ceiling* gate for
+rows whose ``derived`` is a latency (placement_serve p99 ms, ...): current
+above ``baseline * (1 + latency_tolerance)`` fails.  Same philosophy —
+committed ceilings are generous; the gate catches a de-batched serving loop
+or a per-bind device launch, not scheduler jitter.
+
 Every gated row prints measured vs baseline vs the allowed threshold, pass or
 fail, so a red CI log is diagnosable without downloading the artifacts.
 """
@@ -103,12 +109,13 @@ def _gate_ratios(label: str, cur: dict, base: dict, tolerance: float,
 
 def compare(current: dict, baseline: dict, tolerance: float,
             throughput_rows=(), throughput_tolerance: float = 0.25,
+            latency_rows=(), latency_tolerance: float = 1.0,
             lifecycle: bool = False) -> int:
     cur = scenario_ratios(current["rows"])
     base = scenario_ratios(baseline["rows"])
     cur_life = lifecycle_ratios(current["rows"]) if lifecycle else {}
     base_life = lifecycle_ratios(baseline["rows"]) if lifecycle else {}
-    if not base and not throughput_rows and not base_life:
+    if not base and not throughput_rows and not latency_rows and not base_life:
         print("check_smoke: baseline has no gated rows", file=sys.stderr)
         return 2
     failures: List[str] = []
@@ -146,6 +153,29 @@ def compare(current: dict, baseline: dict, tolerance: float,
                     f"{name}: {cur_rows[name]:g} vs baseline "
                     f"{base_rows[name]:g} (floor {floor:g})")
 
+    if latency_rows:
+        cur_rows, base_rows = _row_map(current["rows"]), _row_map(baseline["rows"])
+        print(f"{'latency row':28s} {'baseline':>12s} {'current':>12s} "
+              f"{'ceiling':>12s}  verdict")
+        for name in latency_rows:
+            if name not in base_rows:
+                failures.append(f"{name}: missing from committed baseline")
+                print(f"{name:28s} {'MISSING':>12s} {'-':>12s} {'-':>12s}  FAIL")
+                continue
+            ceiling = base_rows[name] * (1.0 + latency_tolerance)
+            if name not in cur_rows:
+                failures.append(f"{name}: missing from current run")
+                print(f"{name:28s} {base_rows[name]:12g} {'MISSING':>12s} "
+                      f"{ceiling:12.6g}  FAIL")
+                continue
+            ok = cur_rows[name] <= ceiling
+            print(f"{name:28s} {base_rows[name]:12g} {cur_rows[name]:12.6g} "
+                  f"{ceiling:12.6g}  {'ok' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"{name}: {cur_rows[name]:g} vs baseline "
+                    f"{base_rows[name]:g} (ceiling {ceiling:g})")
+
     if failures:
         print("\nREGRESSIONS:", file=sys.stderr)
         for f in failures:
@@ -160,6 +190,9 @@ def compare(current: dict, baseline: dict, tolerance: float,
     if throughput_rows:
         gated.append(f"{len(throughput_rows)} throughput rows within "
                      f"-{throughput_tolerance:.0%}")
+    if latency_rows:
+        gated.append(f"{len(latency_rows)} latency rows within "
+                     f"+{latency_tolerance:.0%}")
     print(f"\nall {' and '.join(gated)} of baseline")
     return 0
 
@@ -180,6 +213,15 @@ def main(argv=None) -> int:
                          "baseline (repeatable), e.g. sdqn_train_ondevice")
     ap.add_argument("--throughput-tolerance", type=float, default=0.25,
                     help="allowed relative throughput regression (default 0.25)")
+    ap.add_argument("--latency-row", action="append", default=[],
+                    metavar="NAME",
+                    help="also gate this row's derived latency against the "
+                         "baseline ceiling (repeatable), e.g. "
+                         "placement_serve_rate500_p99_ms")
+    ap.add_argument("--latency-tolerance", type=float, default=1.0,
+                    help="allowed relative latency regression (default 1.0 — "
+                         "p99 on a shared CI runner is noisy; the gate is for "
+                         "order-of-magnitude blowups)")
     args = ap.parse_args(argv)
     with open(args.current) as f:
         current = json.load(f)
@@ -188,6 +230,8 @@ def main(argv=None) -> int:
     return compare(current, baseline, args.tolerance,
                    throughput_rows=args.throughput_row,
                    throughput_tolerance=args.throughput_tolerance,
+                   latency_rows=args.latency_row,
+                   latency_tolerance=args.latency_tolerance,
                    lifecycle=args.lifecycle)
 
 

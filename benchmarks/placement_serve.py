@@ -1,0 +1,81 @@
+"""Placement-daemon serving benchmark: decisions/sec and latency vs load.
+
+Replays scenario arrival traces through ``repro.sched.daemon`` in real time
+at several offered rates and reports sustained placements/sec plus p50/p99
+decision latency (measured from each request's *scheduled* arrival, so
+queueing delay under overload shows up as latency, not as a slower clock).
+
+Rows (per offered rate R, requests/sec):
+  * ``placement_serve_rate<R>_throughput`` — derived = decisions/sec served
+  * ``placement_serve_rate<R>_p50_ms`` / ``_p99_ms`` — decision latency
+  * ``placement_serve_rate<R>_bound`` — requests bound (vs dropped)
+
+The lower rate's throughput floor and p99 ceiling are gated in CI against
+``benchmarks/baseline_placement_serve.json`` (see ``check_smoke
+--latency-row``); the committed numbers are deliberately conservative — the
+gate catches a de-batched scoring loop or a per-bind device launch, not
+CI-machine jitter.
+
+    PYTHONPATH=src python -m benchmarks.run --placement-serve \
+        --json BENCH_placement_serve.json
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import dqn, env as kenv
+from repro.core.types import fleet_cluster
+from repro.scenarios import arrival_trace
+from repro.sched.daemon import (
+    ClusterSubstrate,
+    DaemonConfig,
+    PlacementDaemon,
+    replay_trace,
+)
+
+# Offered rates to sweep (requests/sec).  The low rate is comfortably inside
+# a 2-core CI container's capacity (its throughput floor + p99 ceiling are
+# the committed gates); the high rate oversubscribes the daemon so the bench
+# also exercises the queueing/backpressure path.
+RATES_PER_S = (500.0, 4000.0)
+
+
+def serve_rows(n_nodes: int = 64, n_requests: int = 400,
+               batch_size: int = 32, max_wait_s: float = 0.005,
+               rates=RATES_PER_S) -> List[Tuple[str, float, float]]:
+    qparams = dqn.init_qnet(jax.random.PRNGKey(0))
+    cfg = fleet_cluster(n_nodes)
+    state = kenv.reset(jax.random.PRNGKey(1), cfg)
+    rows: List[Tuple[str, float, float]] = []
+    for rate in rates:
+        sub = ClusterSubstrate(state, cfg)
+        daemon = PlacementDaemon(
+            sub, qparams,
+            DaemonConfig(batch_size=batch_size, max_wait_s=max_wait_s))
+        daemon.warmup()          # compile outside the timing window
+        trace = arrival_trace(jax.random.PRNGKey(2), cfg, n_requests,
+                              rate_per_s=rate)
+        dur = replay_trace(daemon, trace.t_s, trace.pods)
+        m = daemon.metrics
+        assert m.device_launches == m.batches, "batched scoring de-fused"
+        assert m.bound + m.dropped == n_requests
+        lat = np.asarray(m.latencies_s)
+        tag = f"placement_serve_rate{int(rate)}"
+        rows += [
+            (f"{tag}_throughput", dur / n_requests * 1e6, n_requests / dur),
+            (f"{tag}_p50_ms", 0.0, float(np.percentile(lat, 50)) * 1e3),
+            (f"{tag}_p99_ms", 0.0, float(np.percentile(lat, 99)) * 1e3),
+            (f"{tag}_bound", 0.0, float(m.bound)),
+            (f"{tag}_conflicts", 0.0, float(m.conflicts)),
+            (f"{tag}_batches", 0.0, float(m.batches)),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in serve_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -51,6 +51,10 @@ def main() -> None:
     mode.add_argument("--lifecycle-smoke", action="store_true",
                       help="CI-sized lifecycle benchmark (the sizing "
                            "benchmarks/baseline_lifecycle.json is gated at)")
+    mode.add_argument("--placement-serve", action="store_true",
+                      help="placement-daemon serving benchmark: decisions/sec "
+                           "and p50/p99 latency at several offered rates (the "
+                           "sizing baseline_placement_serve.json is gated at)")
     ap.add_argument("--trials", type=int, default=None,
                     help="episodes per measurement (default: 3, or 1 with --smoke)")
     ap.add_argument("--pods", type=int, default=None,
@@ -123,6 +127,10 @@ def main() -> None:
         from benchmarks import lifecycle_bench
 
         rows += lifecycle_bench.smoke_rows()
+    elif args.placement_serve:
+        from benchmarks import placement_serve
+
+        rows += placement_serve.serve_rows()
     else:
         from benchmarks import roofline_report, sched_scale
 

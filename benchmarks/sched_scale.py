@@ -137,7 +137,7 @@ def eval_engine_speedup(trials: int = 64) -> List[Tuple[str, float, float]]:
     n_pods = 50
     keys = eval_engine.trial_keys(jax.random.PRNGKey(0), trials)
 
-    loop_ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, n_pods)[2])
+    loop_ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, n_pods).metric)
 
     def loop(keys):
         return [loop_ep(keys[t]) for t in range(trials)]
@@ -158,7 +158,7 @@ def placement_throughput() -> List[Tuple[str, float, float]]:
     qp = dqn.init_qnet(jax.random.PRNGKey(0))
     sel = schedulers.make_sdqn_selector(qp, cfg)
     n_pods = 200
-    ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, n_pods)[2])
+    ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, n_pods).metric)
     dt = _time(ep, jax.random.PRNGKey(0), iters=3, warmup=1)
     rows.append(("sdqn_place_1024node_ep", dt * 1e6, n_pods / dt))
 
@@ -166,7 +166,7 @@ def placement_throughput() -> List[Tuple[str, float, float]]:
     hcfg = make_env("fleet-hetero")
     hsel = schedulers.make_sdqn_selector(qp, hcfg)
     hn = hcfg.scenario.n_pods
-    hep = jax.jit(lambda kk: kenv.run_episode(kk, hcfg, hsel, hn)[2])
+    hep = jax.jit(lambda kk: kenv.run_episode(kk, hcfg, hsel, hn).metric)
     dt = _time(hep, jax.random.PRNGKey(0), iters=3, warmup=1)
     rows.append(("sdqn_place_fleet_hetero_ep", dt * 1e6, hn / dt))
     return rows

@@ -26,9 +26,9 @@ for name, select in [
     mets, dists = [], []
     episode = jax.jit(lambda k: kenv.run_episode(k, cfg, select, 50))
     for trial in range(3):
-        state, _, metric, _, _ = episode(jax.random.PRNGKey(100 + trial))
-        mets.append(float(metric))
-        dists.append(np.asarray(state.exp_pods).tolist())
+        res = episode(jax.random.PRNGKey(100 + trial))
+        mets.append(float(res.metric))
+        dists.append(np.asarray(res.state.exp_pods).tolist())
     print(f"{name:24s} avg CPU = {np.mean(mets):5.2f}%   pod distributions: {dists}")
 
 print("\nSDQN places pods by learned Q-values over real-time node state —")

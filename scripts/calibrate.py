@@ -27,9 +27,9 @@ def evaluate(select, trials=5, n_pods=50, cfg=None):
     mets, dists = [], []
     ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, select, n_pods))
     for t in range(trials):
-        _, dist, met, _, _ = ep(jax.random.PRNGKey(100 + t))
-        mets.append(float(met))
-        dists.append(np.asarray(dist))
+        res = ep(jax.random.PRNGKey(100 + t))
+        mets.append(float(res.metric))
+        dists.append(np.asarray(res.placements))
     return float(np.mean(mets)), dists
 
 

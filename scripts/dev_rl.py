@@ -16,11 +16,11 @@ def evaluate(name, select, trials=5, n_pods=50):
     dists, mets = [], []
     for t in range(trials):
         k = jax.random.PRNGKey(100 + t)
-        _, dist, met, _, _ = jax.jit(
+        res = jax.jit(
             lambda kk: kenv.run_episode(kk, cfg, select, n_pods)
         )(k)
-        dists.append([int(x) for x in dist])
-        mets.append(float(met))
+        dists.append([int(x) for x in res.placements])
+        mets.append(float(res.metric))
     avg = sum(mets) / len(mets)
     print(f"{name:18s} avg_cpu={avg:6.2f}%  trials={[f'{m:.2f}' for m in mets]}")
     for d, m in zip(dists, mets):

@@ -12,9 +12,9 @@ def evaluate(name, select, trials=5, n_pods=50):
     mets, dists = [], []
     ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, select, n_pods))
     for t in range(trials):
-        st, dist, met, _, _ = ep(jax.random.PRNGKey(100 + t))
-        mets.append(float(met))
-        dists.append([int(x) for x in st.exp_pods])
+        res = ep(jax.random.PRNGKey(100 + t))
+        mets.append(float(res.metric))
+        dists.append([int(x) for x in res.state.exp_pods])
     avg = sum(mets) / len(mets)
     print(f"{name:12s} avg={avg:6.2f}%  trials={[f'{m:.1f}' for m in mets]} dists={dists}")
     return avg
@@ -33,7 +33,7 @@ def select_scorer(init_fn, score_fn, n_seeds=4):
     for sd in range(n_seeds):
         p = train_rl.train_supervised_scorer(jax.random.fold_in(key, 70+sd), tcfg, init_fn, score_fn, episodes=30)
         sel = schedulers.make_neural_selector(p, score_fn, cfg)
-        ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, 50)[2])
+        ep = jax.jit(lambda kk: kenv.run_episode(kk, cfg, sel, 50).metric)
         m = float(sum(ep(jax.random.PRNGKey(5000+t)) for t in range(6)) / 6)
         if m < bestm: best, bestm = p, m
     return best

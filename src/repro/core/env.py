@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import (ClusterState, EnvConfig, EpisodeStats, PodLedger,
-                              PodSpec, PodTable)
+from repro.core.types import (NO_PLACEMENT, ClusterState, EnvConfig,
+                              EpisodeResult, EpisodeStats, PodLedger, PodSpec,
+                              PodTable)
 
 # ---------------------------------------------------------------------------
 # construction
@@ -376,7 +377,10 @@ def pull_cost_now(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
     return cfg.image_pull_cost * (1.0 + cfg.pull_concurrency_coeff * in_flight)
 
 
-NO_NODE = -1  # sentinel action: no feasible node, the pod is dropped (no-op bind)
+# sentinel action: no feasible node, the pod is dropped (no-op bind).  A
+# re-export of the unified ``core.types.NO_PLACEMENT`` constant (the old
+# per-module spelling, kept for callers that import it from here).
+NO_NODE = NO_PLACEMENT
 
 
 def place(state: ClusterState, action: jnp.ndarray, pod: PodSpec, cfg: EnvConfig) -> ClusterState:
@@ -638,7 +642,7 @@ def run_episode(
     n_pods: int,
     pod_table: Optional[PodTable] = None,
     consolidate: Optional[Callable] = None,
-) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray, jnp.ndarray, EpisodeStats]:
+) -> EpisodeResult:
     """Schedule `n_pods` arrivals with `select_action`, settle, retire.
 
     Arrivals come from `pod_table` when given, otherwise they are sampled
@@ -659,11 +663,14 @@ def run_episode(
     pass that migrates pods off nearly-idle nodes through the fused
     ``score_afterstates`` dispatch.
 
-    Returns ``(final_state, pod_distribution (N,), metric, dropped, stats)``
-    where ``metric`` is the dt-weighted cluster-average CPU% (the paper's
-    objective), ``dropped`` counts ``NO_NODE`` arrivals, and ``stats`` is an
+    Returns an ``EpisodeResult`` ``(state, placements, metric, dropped,
+    stats)`` where ``metric`` is the dt-weighted cluster-average CPU% (the
+    paper's objective), ``placements`` is the final (N,) pod distribution,
+    ``dropped`` counts ``NO_NODE`` arrivals, and ``stats`` is an
     ``EpisodeStats`` of the time-resolved lifecycle metrics (active nodes,
-    node-seconds, energy, retirements).
+    node-seconds, energy, retirements).  The field order matches the legacy
+    positional 5-tuple, so old-style unpacking still works through the
+    NamedTuple shim.
     """
     k_reset, k_pods, k_act = jax.random.split(key, 3)
     state = reset(k_reset, cfg)
@@ -733,8 +740,6 @@ def run_episode(
     (state, ledger, acc), _ = jax.lax.scan(
         settle_step, (state, ledger, acc), None, length=cfg.settle_steps
     )
-    distribution = state.num_pods
-    dropped = jnp.sum(actions < 0).astype(jnp.int32)
     stats = EpisodeStats(
         nodes_active_mean=acc.node_seconds / acc.dt,
         nodes_active_final=nodes_active(state),
@@ -743,4 +748,10 @@ def run_episode(
         energy_wh=acc.energy_j / 3600.0,
         retired=acc.retired,
     )
-    return state, distribution, acc.metric / acc.dt, dropped, stats
+    return EpisodeResult(
+        state=state,
+        placements=state.num_pods,
+        metric=acc.metric / acc.dt,
+        dropped=jnp.sum(actions < 0).astype(jnp.int32),
+        stats=stats,
+    )

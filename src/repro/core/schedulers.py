@@ -44,21 +44,55 @@ def masked_argmax(key: jax.Array, scores: jnp.ndarray, ok: jnp.ndarray,
 
 
 def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
-                      cfg: EnvConfig, score_fn=None) -> jnp.ndarray:
+                      cfg: EnvConfig, score_fn=None,
+                      fused: bool | str = "auto") -> jnp.ndarray:
     """(N,) scores: Q(afterstate_i) for each candidate node i.
 
-    With the default Table-4 Q-net and ``N >= FUSED_SCORE_MIN_NODES`` the
-    scoring runs through the fused kernel path (Pallas on TPU, a fused XLA
-    twin elsewhere) which computes afterstate features in-kernel; custom
-    ``score_fn``s (LSTM/Transformer baselines) always take the jnp path.
+    This is the ONE scoring dispatch the trainer, the serving daemon, the
+    consolidator, and the public ``repro.sched.api.score`` entry point share.
+
+    ``fused`` selects the backend:
+      * ``"auto"`` (default) — the fused kernel path (Pallas on TPU, a fused
+        XLA twin elsewhere; afterstate features are computed in-kernel and
+        the (N, 6) matrix never hits HBM) when the default Table-4 Q-net is
+        used and ``N >= FUSED_SCORE_MIN_NODES``; the plain O(N) jnp path
+        below that, where dispatch overhead dominates;
+      * ``True`` — force the fused path at any N;
+      * ``"interpret"`` — the Pallas kernel body in interpret mode (kernel
+        correctness sweeps on CPU);
+      * ``False`` — force the unfused jnp path.
+
+    Custom ``score_fn``s (LSTM/Transformer baselines) always take the jnp
+    path — they cannot be fused into the afterstate kernel.
     """
-    if score_fn is None and state.n_nodes >= FUSED_SCORE_MIN_NODES:
+    if score_fn is not None and fused in (True, "interpret"):
+        raise ValueError("custom score_fn cannot take the fused kernel path")
+    use_fused = fused in (True, "interpret") or (
+        fused == "auto" and score_fn is None
+        and state.n_nodes >= FUSED_SCORE_MIN_NODES)
+    if use_fused:
         from repro.kernels import ops
 
-        return ops.sdqn_score_afterstate(state, pod, cfg, qparams)
+        mode = "interpret" if fused == "interpret" else None
+        return ops.sdqn_score_afterstate(state, pod, cfg, qparams, mode=mode)
     after = kenv.hypothetical_place(state, pod, cfg)        # (N, 6) raw
     fn = score_fn or dqn.qvalues
     return fn(qparams, kenv.normalize_features(after))
+
+
+def score_afterstates_batch(qparams: dict, state: ClusterState, pods: PodSpec,
+                            cfg: EnvConfig, score_fn=None,
+                            fused: bool | str = "auto") -> jnp.ndarray:
+    """(B, N) scores for a *batch* of candidate pods against one snapshot.
+
+    ``pods`` is a ``PodSpec`` whose fields carry a leading batch dim (B,).
+    The batch axis is vmapped over the shared per-pod dispatch, so under
+    ``jit`` the whole batch lowers to ONE device launch — this is the
+    serving daemon's batched scoring pass (``sched.daemon``).
+    """
+    return jax.vmap(
+        lambda p: score_afterstates(qparams, state, p, cfg, score_fn, fused)
+    )(pods)
 
 
 def make_sdqn_selector(qparams: dict, cfg: EnvConfig, epsilon: float = 0.0,

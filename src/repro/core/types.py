@@ -6,6 +6,13 @@ from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
+# Unified "no feasible target" sentinel.  Historically ``env.NO_NODE`` (pod
+# scheduling) and ``sched.placement.NO_HOST`` (job->host placement) were two
+# independently-defined -1 constants; both are now re-exports of this one.
+# Selectors return it when the filtering phase leaves no candidate; ``place``
+# treats it as a no-op bind and episode accounting counts it as a drop.
+NO_PLACEMENT = -1
+
 
 class ClusterState(NamedTuple):
     """Vectorized node state. All arrays have leading dim N (nodes).
@@ -184,6 +191,25 @@ class EpisodeStats(NamedTuple):
     node_seconds: jnp.ndarray         # integral of nodes_active over wall-clock
     energy_wh: jnp.ndarray            # integral of active-node power draw
     retired: jnp.ndarray              # int32, pods that completed + released
+
+
+class EpisodeResult(NamedTuple):
+    """The public return value of ``env.run_episode``.
+
+    Replaces the positional 5-tuple the function historically returned.  The
+    field order is exactly the old positional order, so legacy
+    ``state, dist, metric, dropped, stats = run_episode(...)`` unpacking
+    keeps working through the NamedTuple (the one-release deprecation shim);
+    new code should use the named fields.
+    """
+
+    state: "ClusterState"             # final cluster state after settle
+    placements: jnp.ndarray           # (N,) final pods per node (the paper's
+    #                                   "pod distribution"; tenant + ours)
+    metric: jnp.ndarray               # dt-weighted cluster-average CPU% — the
+    #                                   paper's objective (its reward signal)
+    dropped: jnp.ndarray              # int32, arrivals with no feasible node
+    stats: "EpisodeStats"             # time-resolved lifecycle metrics
 
 
 @dataclasses.dataclass(frozen=True)

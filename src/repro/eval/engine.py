@@ -67,11 +67,11 @@ def _trial_fn(env_cfg: EnvConfig, select: Callable, n: int,
     """The shared per-trial body: ``key -> TrialResults`` for one episode."""
 
     def one(k):
-        state, dist, metric, dropped, stats = kenv.run_episode(
-            k, env_cfg, select, n, consolidate=consolidate)
+        res = kenv.run_episode(k, env_cfg, select, n, consolidate=consolidate)
+        state, dropped, stats = res.state, res.dropped, res.stats
         return TrialResults(
-            metric=metric,
-            distribution=dist,
+            metric=res.metric,
+            distribution=res.placements,
             exp_pods=state.exp_pods,
             dropped=dropped,
             # bound = arrivals the filter phase admitted; on churn scenarios

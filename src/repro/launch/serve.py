@@ -1,12 +1,15 @@
 """Batched serving driver with SDQN request routing.
 
 Serves a small LM with continuous batching: requests arrive in waves, the
-SDQN placement engine (the paper's scheduler, reused at the serving tier)
-routes each request wave to one of several model-server replicas based on
-replica load features, then each replica runs prefill + decode.
+SDQN placement *daemon* (the paper's scheduler as a continuously-serving
+loop, ``repro.sched.daemon``) routes each request wave to one of several
+model-server replicas based on replica load features — waves are submitted
+as placement requests, batch-scored in one device launch, and bound with
+optimistic concurrency — then each replica runs prefill + decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \\
-        --replicas 4 --requests 64 --gen-tokens 16
+        --replicas 4 --requests 64 --gen-tokens 16 \\
+        --qnet-path runs/rl/ckpt     # repro.checkpoint dir (or legacy .npz)
 """
 from __future__ import annotations
 
@@ -17,14 +20,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.configs.base import get_config
 from repro.core import dqn
 from repro.models import model as mdl
-from repro.sched.placement import JobSpec, PlacementEngine, fresh_fleet
+from repro.sched.daemon import DaemonConfig, FleetSubstrate, PlacementDaemon
+from repro.sched.placement import JobSpec, fresh_fleet
 
 
 def sample_requests(key, n, vocab, prompt_len):
     return jax.random.randint(key, (n, prompt_len), 0, vocab)
+
+
+def load_qnet(path: str, key: jax.Array) -> dict:
+    """SDQN routing params: a ``repro.checkpoint`` directory (the trainer's
+    ``ckpt.save`` layout, latest step), a legacy flat ``.npz``, or a fresh
+    init when ``path`` is empty."""
+    init = dqn.init_qnet(key)
+    if not path:
+        return init
+    if path.endswith(".npz"):
+        loaded = np.load(path)
+        return {k: jnp.asarray(loaded[k]) for k in loaded.files}
+    return ckpt.restore(path, init)
 
 
 def main(argv=None):
@@ -37,7 +55,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--qnet-path", default="", help="trained SDQN params (npz); fresh init if empty")
+    ap.add_argument("--qnet-path", default="",
+                    help="trained SDQN params: repro.checkpoint dir or legacy "
+                         "npz; fresh init if empty")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -55,26 +75,26 @@ def main(argv=None):
     def decode_fn(p, tok, cache, idx):
         return mdl.decode_step(p, cfg, tok, cache, idx)
 
-    # SDQN routing across replicas
-    qparams = dqn.init_qnet(jax.random.fold_in(key, 1))
-    if args.qnet_path:
-        import numpy as _np
-
-        loaded = _np.load(args.qnet_path)
-        qparams = {k: jnp.asarray(loaded[k]) for k in loaded.files}
-    engine = PlacementEngine(qparams)
+    # SDQN routing across replicas, served by the placement daemon: waves are
+    # submitted as requests, batch-scored in one launch, optimistically bound
+    qparams = load_qnet(args.qnet_path, jax.random.fold_in(key, 1))
     fleet = fresh_fleet(args.replicas, jax.random.fold_in(key, 2))
-    job = JobSpec(cpu_pct_demand=100.0 / max(args.requests // args.wave_size, 1), kind="serve")
-
     waves = args.requests // args.wave_size
-    assignments = []
+    sub = FleetSubstrate(fleet)
+    daemon = PlacementDaemon(
+        sub, qparams,
+        DaemonConfig(batch_size=max(min(waves, 8), 1), max_wait_s=0.0))
+    daemon.warmup()
+    job = JobSpec(cpu_pct_demand=100.0 / max(waves, 1), kind="serve")
+
+    for _ in range(waves):
+        daemon.submit(job)
+    daemon.drain()
+    assignments = [d.node for d in sorted(daemon.decisions)]
+
     t0 = time.time()
     generated = 0
-    for w in range(waves):
-        replica, _ = engine.select(fleet, job)
-        fleet = engine.place(fleet, replica, job)
-        assignments.append(replica)
-
+    for w, replica in enumerate(assignments):
         kw = jax.random.fold_in(key, 100 + w)
         prompts = sample_requests(kw, args.wave_size, cfg.vocab_size, args.prompt_len)
         logits, cache = prefill_fn(params, prompts)
@@ -96,11 +116,16 @@ def main(argv=None):
         generated += args.wave_size * args.gen_tokens
 
     dt = time.time() - t0
-    counts = np.bincount(np.asarray(assignments), minlength=args.replicas)
+    placed = [a for a in assignments if a >= 0]
+    counts = np.bincount(np.asarray(placed, np.int64), minlength=args.replicas)
     print(f"[serve] {args.requests} requests, {generated} tokens in {dt:.1f}s "
           f"({generated / dt:.1f} tok/s)")
-    print(f"[serve] SDQN routing across replicas: {counts.tolist()}")
-    print(f"[serve] replica load (cpu%): {np.round(np.asarray(fleet.cpu_pct), 1).tolist()}")
+    print(f"[serve] SDQN routing across replicas: {counts.tolist()} "
+          f"({daemon.metrics.batches} daemon batches, "
+          f"{daemon.metrics.device_launches} scoring launches, "
+          f"{daemon.metrics.conflicts} bind conflicts)")
+    print(f"[serve] replica load (cpu%): "
+          f"{np.round(np.asarray(sub.live.cpu_pct), 1).tolist()}")
     return counts
 
 

@@ -5,6 +5,7 @@ x arrival process.  ``registry`` holds the named scenarios the benchmarks and
 tests run; ``catalog`` holds the reusable building blocks; ``engine`` turns a
 scenario + policy into episode metrics.
 """
+from repro.scenarios.arrivals import ArrivalTrace, arrival_trace, trace_from_table
 from repro.scenarios.catalog import NODE_CLASSES, POD_TYPES
 from repro.scenarios.engine import batch_episode, evaluate_scenario, scenario_episode
 from repro.scenarios.registry import (
@@ -19,6 +20,9 @@ __all__ = [
     "NODE_CLASSES",
     "POD_TYPES",
     "SCENARIOS",
+    "ArrivalTrace",
+    "arrival_trace",
+    "trace_from_table",
     "batch_episode",
     "evaluate_scenario",
     "get_scenario",

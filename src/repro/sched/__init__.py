@@ -1,3 +1,12 @@
-from repro.sched.placement import FleetState, PlacementEngine, JobSpec  # noqa: F401
+from repro.sched.placement import FleetState, PlacementEngine, JobSpec, NO_HOST  # noqa: F401
 from repro.sched.elastic import consolidation_plan  # noqa: F401
 from repro.sched.straggler import StragglerMonitor  # noqa: F401
+from repro.sched import api  # noqa: F401  (the unified public scheduling API)
+from repro.sched.api import NO_PLACEMENT  # noqa: F401
+from repro.sched.daemon import (  # noqa: F401
+    ClusterSubstrate,
+    DaemonConfig,
+    FleetSubstrate,
+    PlacementDaemon,
+    replay_trace,
+)

@@ -1,0 +1,142 @@
+"""The unified public scheduling API.
+
+Five PRs grew three overlapping scoring entry points — the trainer called
+``schedulers.score_afterstates``, the job-placement engine called
+``ops.sdqn_score_delta``, and the serving path stitched the two together.
+This module is the ONE documented surface that wraps that shared dispatch;
+the placement daemon (``sched.daemon``), the trainer, and the
+``PlacementEngine`` all route through it (directly or via the same
+underlying ``schedulers.score_afterstates`` dispatch).
+
+    from repro.sched import api
+
+    q = api.score(cluster_state, pod, params=qparams, cfg=env_cfg)   # (N,)
+    q = api.score(fleet_state, job, params=qparams)                  # (N,)
+    qb = api.score_batch(cluster_state, pods, params=qparams, cfg=env_cfg)
+
+``score`` dispatches on the fleet's type:
+
+  * ``core.types.ClusterState`` + ``core.types.PodSpec`` — the paper's pod
+    scheduler: Q(afterstate) per candidate node through
+    ``schedulers.score_afterstates`` (fused Pallas kernel on TPU at fleet
+    scale, fused XLA twin elsewhere, plain O(N) jnp below the threshold).
+    ``cfg`` (the ``EnvConfig``) is required.
+  * ``sched.placement.FleetState`` + ``sched.placement.JobSpec`` — job→host
+    placement: the six raw fleet columns + the job's afterstate delta
+    through the fused column kernel (``ops.sdqn_score_delta``).
+
+``fused`` selects the backend uniformly across both substrates:
+``"auto"`` (default heuristics), ``True`` (force the fused path),
+``"interpret"`` (Pallas kernel body in interpret mode, for CPU kernel
+sweeps), ``False`` (force the unfused reference path).
+
+``NO_PLACEMENT`` (== ``env.NO_NODE`` == ``placement.NO_HOST``) is the
+sentinel every selector in the repo returns when the filtering phase leaves
+no feasible target.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core import schedulers
+from repro.core.types import NO_PLACEMENT, ClusterState, EnvConfig, PodSpec
+from repro.sched import placement as _placement
+from repro.sched.placement import FleetState, JobSpec
+
+__all__ = ["NO_PLACEMENT", "score", "score_batch", "select"]
+
+Fleet = Union[ClusterState, FleetState]
+Workload = Union[PodSpec, JobSpec]
+
+
+def _fleet_mode(fused) -> Optional[str]:
+    """Map the uniform ``fused`` knob onto ``ops.sdqn_score_delta`` modes."""
+    if fused == "auto":
+        return None          # backend default: Pallas on TPU, fused XLA twin
+    if fused is True:
+        return None
+    if fused == "interpret":
+        return "interpret"
+    if fused is False:
+        return "ref"
+    raise ValueError(f"fused must be 'auto', True, False or 'interpret'; "
+                     f"got {fused!r}")
+
+
+def score(fleet: Fleet, pod: Workload, *, params: dict,
+          cfg: Optional[EnvConfig] = None, fused="auto",
+          score_fn=None) -> jnp.ndarray:
+    """(N,) Q-scores of placing ``pod`` on each target in ``fleet``.
+
+    See the module docstring for the dispatch rules.  ``score_fn`` swaps the
+    Table-4 Q-net for a custom scorer (LSTM/Transformer baselines;
+    ClusterState substrate only, always the unfused path).
+    """
+    if isinstance(fleet, ClusterState):
+        if cfg is None:
+            raise ValueError("cfg (EnvConfig) is required to score a "
+                             "ClusterState fleet")
+        return schedulers.score_afterstates(params, fleet, pod, cfg,
+                                            score_fn=score_fn, fused=fused)
+    if isinstance(fleet, FleetState):
+        if score_fn is not None:
+            raise ValueError("score_fn is not supported on the FleetState "
+                             "column-kernel path")
+        from repro.kernels import ops
+
+        return ops.sdqn_score_delta(
+            _placement.fleet_cols(fleet), _placement.job_delta(pod), params,
+            mode=_fleet_mode(fused))
+    raise TypeError(f"unsupported fleet type: {type(fleet).__name__}")
+
+
+def score_batch(fleet: Fleet, pods: Workload, *, params: dict,
+                cfg: Optional[EnvConfig] = None, fused="auto",
+                score_fn=None) -> jnp.ndarray:
+    """(B, N) Q-scores for a batch of workloads against ONE fleet snapshot.
+
+    ``pods``: a ``PodSpec`` with a leading (B,) batch dim on every field
+    (ClusterState substrate), or a sequence of B ``JobSpec``s (FleetState
+    substrate).  Under ``jit`` the whole batch lowers to one device launch —
+    this is the serving daemon's batched scoring pass.
+    """
+    if isinstance(fleet, ClusterState):
+        if cfg is None:
+            raise ValueError("cfg (EnvConfig) is required to score a "
+                             "ClusterState fleet")
+        return schedulers.score_afterstates_batch(params, fleet, pods, cfg,
+                                                  score_fn=score_fn,
+                                                  fused=fused)
+    if isinstance(fleet, FleetState):
+        from repro.kernels import ops
+
+        deltas = jnp.stack([_placement.job_delta(j) for j in pods])
+        cols = _placement.fleet_cols(fleet)
+        mode = _fleet_mode(fused)
+        return jnp.stack([ops.sdqn_score_delta(cols, d, params, mode=mode)
+                          for d in deltas])
+    raise TypeError(f"unsupported fleet type: {type(fleet).__name__}")
+
+
+def select(fleet: Fleet, pod: Workload, *, params: dict,
+           cfg: Optional[EnvConfig] = None, fused="auto",
+           score_fn=None) -> jnp.ndarray:
+    """Greedy feasible argmax over ``score``; ``NO_PLACEMENT`` if none fit.
+
+    The one-shot convenience wrapper (scores + k8s filtering phase in one
+    call).  For continuous serving use ``sched.daemon.PlacementDaemon``,
+    which batches requests and binds with optimistic concurrency.
+    """
+    q = score(fleet, pod, params=params, cfg=cfg, fused=fused,
+              score_fn=score_fn)
+    if isinstance(fleet, ClusterState):
+        from repro.core import env as kenv
+
+        ok = kenv.feasible(fleet, pod, cfg)
+    else:
+        ok = _placement.PlacementEngine(params).feasible(fleet, pod)
+    masked = jnp.where(ok, q, -jnp.inf)
+    choice = jnp.argmax(masked).astype(jnp.int32)
+    return jnp.where(jnp.any(ok), choice, jnp.int32(NO_PLACEMENT))

@@ -1,0 +1,447 @@
+"""Production placement daemon: continuously-serving, batched, optimistic.
+
+The paper's SDQN scheduler is only useful in production if it can serve
+placement decisions under load.  This daemon is that serving loop:
+
+  * **Batched one-launch scoring.**  Pending pod requests accumulate into
+    batches (cut by size OR by the oldest request's wait time) and the whole
+    batch is scored through the shared fused dispatch
+    (``schedulers.score_afterstates_batch`` / ``ops.sdqn_score_delta`` via
+    ``repro.sched.api``) in ONE device launch — one jitted call per batch,
+    padded to a static batch shape so every fill level reuses one
+    compilation.
+  * **Double-buffered fleet state.**  Admission (``submit`` + committed
+    binds) writes the *live* buffer — a mutable host-side (numpy) mirror —
+    while scoring reads a frozen device *snapshot* published at batch cut.
+    Request intake is a queue append plus numpy writes and never blocks on a
+    device launch; the snapshot publish is an O(columns) transfer.
+  * **Optimistic concurrency.**  Scores are computed against the snapshot,
+    but by bind time the live buffer may have moved (earlier binds in the
+    same batch, external churn applied through ``substrate.live``).  Every
+    bind re-validates feasibility against the live buffer; a conflicted
+    request loses the race and is re-queued to be re-scored against fresh
+    state (``conflict_policy="requeue"``, mirroring the real kube binding
+    race where an optimistic bind fails admission and the pod returns to the
+    scheduling queue) or falls through to its next-best snapshot candidate
+    (``conflict_policy="next-best"``).
+
+Two substrates plug into the same loop: ``ClusterSubstrate`` (the paper's
+pod->node cluster, ``core.env`` physics) and ``FleetSubstrate`` (job->host
+placement over ``sched.placement.FleetState``, used by the serving driver in
+``launch/serve.py``).  Both keep their live buffer as numpy mirrors whose
+bind/feasibility arithmetic is pinned against the jnp reference
+(``env.place`` / ``env.feasible``) in tests/test_daemon.py.
+
+    sub = ClusterSubstrate(kenv.reset(key, cfg), cfg)
+    d = PlacementDaemon(sub, qparams, DaemonConfig(batch_size=32))
+    d.submit(pod); ...; d.poll(); decisions = d.decisions
+
+Offered load comes from the scenario engine's arrival streams
+(``scenarios.arrivals.arrival_trace``) replayed through ``replay_trace`` —
+see ``benchmarks/placement_serve.py`` for the sustained placements/sec and
+p50/p99 decision-latency bench.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import env as kenv, schedulers
+from repro.core.types import NO_PLACEMENT, ClusterState, EnvConfig, PodSpec
+from repro.sched import placement as _pl
+
+__all__ = [
+    "ClusterSubstrate", "DaemonConfig", "DaemonMetrics", "Decision",
+    "FleetSubstrate", "PlacementDaemon", "replay_trace",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DaemonConfig:
+    """Serving-loop knobs.
+
+    A batch is cut when ``batch_size`` requests are pending OR the oldest
+    pending request has waited ``max_wait_s`` — the standard
+    throughput/latency trade of a batching server.  ``max_retries`` bounds
+    how many times a conflicted request re-queues before it is dropped;
+    ``conflict_policy`` picks what happens when an optimistic bind loses the
+    race (see module docstring).  ``fused`` threads through to the scoring
+    dispatch (``repro.sched.api.score``).
+    """
+
+    batch_size: int = 32
+    max_wait_s: float = 0.02
+    max_retries: int = 4
+    conflict_policy: str = "requeue"     # "requeue" | "next-best"
+    fused: object = "auto"
+
+    def __post_init__(self):
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if self.conflict_policy not in ("requeue", "next-best"):
+            raise ValueError(f"unknown conflict_policy "
+                             f"{self.conflict_policy!r}")
+
+
+class Decision(NamedTuple):
+    """One served placement decision (``node == NO_PLACEMENT`` = dropped)."""
+
+    req_id: int
+    node: int
+    latency_s: float       # decision time - submission time
+    attempts: int          # 1 + times the request lost an optimistic bind
+
+
+@dataclasses.dataclass
+class DaemonMetrics:
+    submitted: int = 0
+    bound: int = 0
+    dropped: int = 0
+    conflicts: int = 0      # optimistic binds that failed live re-validation
+    requeued: int = 0       # conflicted requests sent back to the queue
+    batches: int = 0
+    device_launches: int = 0  # jitted scoring calls; == batches by design
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+
+class _Request:
+    __slots__ = ("req_id", "pod", "t_submit", "attempts")
+
+    def __init__(self, req_id, pod, t_submit):
+        self.req_id = req_id
+        self.pod = pod
+        self.t_submit = t_submit
+        self.attempts = 0
+
+
+# ---------------------------------------------------------------------------
+# substrates: live-buffer mirror + batched snapshot scorer
+# ---------------------------------------------------------------------------
+
+
+class ClusterSubstrate:
+    """The paper's pod->node cluster as a daemon substrate.
+
+    ``live`` is a ``ClusterState`` of *mutable numpy* arrays — the admission
+    buffer.  ``snapshot`` publishes it as device arrays for the scoring
+    launch.  ``bind``/``feasible_one`` mirror ``env.place``/``env.feasible``
+    restricted to the touched row (parity pinned in tests/test_daemon.py).
+    """
+
+    def __init__(self, state: ClusterState, cfg: EnvConfig,
+                 score_fn: Optional[Callable] = None):
+        self.cfg = cfg
+        self.score_fn = score_fn
+        self.live = jax.tree.map(lambda x: np.array(x), state)
+
+    def snapshot(self) -> ClusterState:
+        return jax.tree.map(jnp.asarray, self.live)
+
+    def pack(self, pods: Sequence[PodSpec], size: int) -> PodSpec:
+        """Stack + pad a request batch to the static (size,) scoring shape."""
+        pad = size - len(pods)
+        pods = list(pods) + [pods[-1]] * pad
+
+        def col(get):
+            return jnp.asarray([float(get(p)) for p in pods], jnp.float32)
+
+        return PodSpec(cpu_request=col(lambda p: p.cpu_request),
+                       cpu_demand=col(lambda p: p.cpu_demand),
+                       mem_request=col(lambda p: p.mem_request),
+                       mem_demand=col(lambda p: p.mem_demand))
+
+    def make_scorer(self, fused) -> Callable:
+        """Jitted ``(params, snapshot, pod_batch) -> (scores, feasible)``,
+        both (B, N): the whole batch in ONE device launch."""
+        cfg, score_fn = self.cfg, self.score_fn
+
+        @jax.jit
+        def score(params, snap, pods):
+            q = schedulers.score_afterstates_batch(params, snap, pods, cfg,
+                                                   score_fn, fused)
+            ok = jax.vmap(lambda p: kenv.feasible(snap, p, cfg))(pods)
+            return q, ok
+
+        return score
+
+    def feasible_one(self, node: int, pod: PodSpec) -> bool:
+        """``env.feasible`` row ``node`` against the LIVE buffer (bind-time
+        re-validation)."""
+        lv = self.live
+        return bool(
+            lv.healthy[node]
+            and lv.cpu_requested[node] + float(pod.cpu_request)
+            <= lv.cpu_capacity[node]
+            and lv.mem_requested[node] + float(pod.mem_request)
+            <= lv.mem_capacity[node]
+            and lv.num_pods[node] < lv.max_pods[node]
+        )
+
+    def bind(self, node: int, pod: PodSpec) -> None:
+        """Commit one bind to the live buffer: ``env.place`` restricted to
+        the chosen row, in numpy (no device op on the serving hot path)."""
+        lv, cfg = self.live, self.cfg
+        in_flight = float(np.sum(lv.startup_cpu > 0.25 * cfg.image_pull_cost))
+        pull = cfg.image_pull_cost * (1.0 + cfg.pull_concurrency_coeff
+                                      * in_flight)
+        start = cfg.warm_start_cost if lv.image_cached[node] else pull
+        lv.num_pods[node] += 1
+        lv.exp_pods[node] += 1
+        lv.cpu_requested[node] += float(pod.cpu_request)
+        lv.mem_requested[node] += float(pod.mem_request)
+        lv.pods_cpu[node] += float(pod.cpu_demand)
+        lv.mem_used[node] += float(pod.mem_demand)
+        lv.startup_cpu[node] += start
+        lv.image_cached[node] = True
+
+
+class FleetSubstrate:
+    """Job->host placement (``sched.placement``) as a daemon substrate.
+
+    Jobs are packed as (B, 6) afterstate-delta rows (``placement.job_delta``)
+    and scored through the fused column kernel — the same dispatch
+    ``PlacementEngine.select`` uses, batched.
+    """
+
+    def __init__(self, fleet: _pl.FleetState,
+                 max_host_cpu_pct: float = 88.0):
+        self.live = jax.tree.map(lambda x: np.array(x, np.float64), fleet)
+        self.max_host_cpu_pct = max_host_cpu_pct
+
+    def snapshot(self) -> _pl.FleetState:
+        return jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), self.live)
+
+    def pack(self, jobs: Sequence[_pl.JobSpec], size: int) -> jnp.ndarray:
+        jobs = list(jobs) + [jobs[-1]] * (size - len(jobs))
+        return jnp.stack([_pl.job_delta(j) for j in jobs])
+
+    def make_scorer(self, fused) -> Callable:
+        max_cpu = self.max_host_cpu_pct
+
+        from repro.kernels import ops
+        from repro.sched.api import _fleet_mode
+
+        mode = _fleet_mode(fused)
+
+        @jax.jit
+        def score(params, snap, deltas):
+            cols = _pl.fleet_cols(snap)
+            q = jax.vmap(lambda d: ops.sdqn_score_delta(
+                cols, d, params, mode=mode))(deltas)
+            ok = (
+                (snap.healthy > 0.5)[None, :]
+                & (snap.cpu_pct[None, :] + deltas[:, 0:1] <= max_cpu)
+                & (snap.mem_pct[None, :] + deltas[:, 1:2] <= 95.0)
+                & (snap.job_util_pct[None, :] + deltas[:, 2:3]
+                   <= 100.0 + 1e-6)
+            )
+            return q, ok
+
+        return score
+
+    def feasible_one(self, node: int, job: _pl.JobSpec) -> bool:
+        lv = self.live
+        return bool(
+            lv.healthy[node] > 0.5
+            and lv.cpu_pct[node] + job.cpu_pct_demand <= self.max_host_cpu_pct
+            and lv.mem_pct[node] + job.mem_pct_demand <= 95.0
+            and lv.job_util_pct[node] + _pl.JOB_UTIL_DELTA_PCT
+            <= 100.0 + 1e-6
+        )
+
+    def bind(self, node: int, job: _pl.JobSpec) -> None:
+        lv = self.live
+        lv.cpu_pct[node] += job.cpu_pct_demand
+        lv.mem_pct[node] += job.mem_pct_demand
+        lv.job_util_pct[node] += _pl.JOB_UTIL_DELTA_PCT
+        lv.num_jobs[node] += 1
+
+
+# ---------------------------------------------------------------------------
+# the daemon
+# ---------------------------------------------------------------------------
+
+
+class PlacementDaemon:
+    """Continuously-serving placement loop over a substrate.
+
+    ``submit`` is admission: O(1) queue append, never blocks on the device.
+    ``poll`` cuts at most one batch when ready (size or max-wait), publishes
+    the live buffer as the scoring snapshot, scores the whole batch in one
+    jitted launch, and commits binds with bind-time re-validation.
+    ``flush``/``drain`` force remaining work through.  ``clock`` is
+    injectable for deterministic tests (defaults to ``time.monotonic``).
+    """
+
+    def __init__(self, substrate, params: dict,
+                 config: DaemonConfig = DaemonConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self._sub = substrate
+        self._params = params
+        self.config = config
+        self._clock = clock
+        self._pending: collections.deque = collections.deque()
+        self._scorer = substrate.make_scorer(config.fused)
+        self._next_id = 0
+        self.metrics = DaemonMetrics()
+        self.decisions: List[Decision] = []
+
+    # -- admission (writes the live buffer side only) -----------------------
+
+    def submit(self, pod, now: Optional[float] = None) -> int:
+        """Enqueue one placement request; returns its request id."""
+        now = self._clock() if now is None else now
+        req = _Request(self._next_id, pod, now)
+        self._next_id += 1
+        self._pending.append(req)
+        self.metrics.submitted += 1
+        return req.req_id
+
+    def set_params(self, params: dict) -> None:
+        """Hot-swap policy params (same pytree structure: no recompile) —
+        the online-learning refresh hook."""
+        self._params = params
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # -- serving loop -------------------------------------------------------
+
+    def _cut_ready(self, now: float) -> bool:
+        if not self._pending:
+            return False
+        if len(self._pending) >= self.config.batch_size:
+            return True
+        return now - self._pending[0].t_submit >= self.config.max_wait_s
+
+    def poll(self, now: Optional[float] = None) -> int:
+        """Process at most one batch if the cut condition holds.  Returns
+        the number of requests decided (bound or dropped) this call."""
+        now = self._clock() if now is None else now
+        if not self._cut_ready(now):
+            return 0
+        return self._process_batch(now)
+
+    def flush(self, now: Optional[float] = None) -> int:
+        """Process one batch regardless of the cut condition (0 if idle)."""
+        now = self._clock() if now is None else now
+        if not self._pending:
+            return 0
+        return self._process_batch(now)
+
+    def drain(self, now: Optional[float] = None) -> int:
+        """Flush until the queue is empty (conflict re-queues included)."""
+        done = 0
+        while self._pending:
+            done += self.flush(now)
+        return done
+
+    def warmup(self) -> None:
+        """Prime the scoring compilation outside any timing window."""
+        snap = self._sub.snapshot()
+        pods = self._sub.pack([self._dummy_pod()], self.config.batch_size)
+        jax.block_until_ready(self._scorer(self._params, snap, pods))
+
+    def scorer_cache_size(self) -> int:
+        """Compilations of the batched scorer (1 == every batch, at every
+        fill level, reused one executable)."""
+        return self._scorer._cache_size()
+
+    # -- internals ----------------------------------------------------------
+
+    def _dummy_pod(self):
+        if isinstance(self._sub, ClusterSubstrate):
+            return kenv.default_pod(self._sub.cfg)
+        return _pl.JobSpec()
+
+    def _process_batch(self, now: float) -> int:
+        b = self.config.batch_size
+        reqs = [self._pending.popleft()
+                for _ in range(min(len(self._pending), b))]
+        # publish the admission buffer as the read (scoring) snapshot; the
+        # live buffer keeps taking writes from here on
+        snap = self._sub.snapshot()
+        pods = self._sub.pack([r.pod for r in reqs], b)
+        scores, ok = self._scorer(self._params, snap, pods)  # ONE launch
+        self.metrics.device_launches += 1
+        self.metrics.batches += 1
+        scores = np.asarray(scores)
+        ok = np.asarray(ok)
+        decided = 0
+        for i, req in enumerate(reqs):
+            decided += self._commit(req, scores[i], ok[i])
+        return decided
+
+    def _decide(self, req: _Request, node: int) -> None:
+        lat = max(self._clock() - req.t_submit, 0.0)
+        self.decisions.append(Decision(req.req_id, node, lat, req.attempts))
+        self.metrics.latencies_s.append(lat)
+        if node == NO_PLACEMENT:
+            self.metrics.dropped += 1
+        else:
+            self.metrics.bound += 1
+
+    def _commit(self, req: _Request, row: np.ndarray, ok: np.ndarray) -> int:
+        """Optimistic bind of one scored request; returns 1 if decided."""
+        req.attempts += 1
+        masked = np.where(ok, row, -np.inf)
+        if not ok.any():
+            # the snapshot offered no feasible node at all: a genuine drop,
+            # exactly env.run_episode's NO_NODE accounting
+            self._decide(req, NO_PLACEMENT)
+            return 1
+        choice = int(np.argmax(masked))
+        if self._sub.feasible_one(choice, req.pod):
+            self._sub.bind(choice, req.pod)
+            self._decide(req, choice)
+            return 1
+        # optimistic bind lost the race: the snapshot's winner was taken by
+        # an earlier bind (or external churn) before this request's turn
+        self.metrics.conflicts += 1
+        if self.config.conflict_policy == "next-best":
+            for cand in np.argsort(-masked)[1:]:
+                if not np.isfinite(masked[cand]):
+                    break
+                if self._sub.feasible_one(int(cand), req.pod):
+                    self._sub.bind(int(cand), req.pod)
+                    self._decide(req, int(cand))
+                    return 1
+        if req.attempts > self.config.max_retries:
+            self._decide(req, NO_PLACEMENT)
+            return 1
+        # back to the queue head: re-scored against fresh state next batch
+        self.metrics.requeued += 1
+        self._pending.appendleft(req)
+        return 0
+
+
+def replay_trace(daemon: PlacementDaemon, t_s: Sequence[float],
+                 pods: Sequence, speed: float = 1.0) -> float:
+    """Replay an arrival trace in real time through the daemon.
+
+    ``t_s`` are arrival offsets (seconds) from the replay start, ``pods``
+    the matching workload specs (see ``scenarios.arrivals.arrival_trace``).
+    Each request's submission time is its *scheduled* arrival, so when the
+    daemon cannot keep up, queueing delay shows up in decision latency —
+    the offered-load curve the placement_serve bench measures.  ``speed``
+    compresses the trace (2.0 = twice the offered rate).  Polls between
+    arrivals, drains at the end; returns the wall-clock serving duration.
+    """
+    clock = daemon._clock
+    t0 = clock()
+    for t_off, pod in zip(t_s, pods):
+        due = t0 + t_off / speed
+        while clock() < due:
+            if not daemon.poll():
+                time.sleep(0)        # yield; arrival gaps are sub-ms anyway
+        daemon.submit(pod, now=due)
+        daemon.poll()
+    daemon.drain()
+    return clock() - t0

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import env as kenv
+from repro.core.types import NO_PLACEMENT
 from repro.kernels import ops
 
 # Job-slot ceiling per host: the Table-2 "pod utilization" analogue for the
@@ -26,7 +27,9 @@ from repro.kernels import ops
 MAX_JOBS_PER_HOST = 25.0
 JOB_UTIL_DELTA_PCT = 100.0 / MAX_JOBS_PER_HOST
 
-NO_HOST = -1  # select() sentinel: no feasible host, the job is not bound
+# select() sentinel: no feasible host, the job is not bound.  Re-export of
+# the unified ``core.types.NO_PLACEMENT`` constant (old spelling kept).
+NO_HOST = NO_PLACEMENT
 
 
 class FleetState(NamedTuple):
@@ -51,6 +54,20 @@ class JobSpec:
     cpu_pct_demand: float = 5.0     # host-% one job replica adds
     mem_pct_demand: float = 2.0
     kind: str = "train"             # train | serve | data
+
+
+def fleet_cols(fleet: FleetState) -> tuple:
+    """The six raw Table-2 feature columns of a fleet, for the column kernel."""
+    return (fleet.cpu_pct, fleet.mem_pct, fleet.job_util_pct,
+            fleet.healthy.astype(jnp.float32), fleet.uptime_hours,
+            fleet.num_jobs.astype(jnp.float32))
+
+
+def job_delta(job: JobSpec) -> jnp.ndarray:
+    """The afterstate delta one job adds to the six columns (matches ``place``
+    exactly — including the JOB_UTIL_DELTA_PCT advance of the third feature)."""
+    return jnp.array([job.cpu_pct_demand, job.mem_pct_demand,
+                      JOB_UTIL_DELTA_PCT, 0.0, 0.0, 1.0])
 
 
 class PlacementEngine:
@@ -86,20 +103,18 @@ class PlacementEngine:
         """Pick the host for one job. Returns (host index, scores).
 
         Afterstate scoring streams the six fleet columns through the fused
-        column kernel (``ops.sdqn_score_delta``): features + job delta +
+        column kernel (``ops.sdqn_score_delta``, via the unified
+        ``repro.sched.api.score`` entry point): features + job delta +
         normalization + Q-net in one pass, never materializing the (N, 6)
         feature matrix in HBM.  The delta matches ``place`` exactly —
         including the ``job_util_pct`` advance of JOB_UTIL_DELTA_PCT, which
         previously stayed stale at its reset value.
         """
-        cols = (fleet.cpu_pct, fleet.mem_pct, fleet.job_util_pct,
-                fleet.healthy.astype(jnp.float32), fleet.uptime_hours,
-                fleet.num_jobs.astype(jnp.float32))
-        delta = jnp.array([job.cpu_pct_demand, job.mem_pct_demand,
-                           JOB_UTIL_DELTA_PCT, 0.0, 0.0, 1.0])
-        mode = None if self.use_kernel is None else (
-            "interpret" if self.use_kernel else "ref")
-        scores = ops.sdqn_score_delta(cols, delta, self.qparams, mode=mode)
+        from repro.sched import api  # lazy: api imports this module
+
+        fused = ("auto" if self.use_kernel is None
+                 else ("interpret" if self.use_kernel else False))
+        scores = api.score(fleet, job, params=self.qparams, fused=fused)
         ok = self.feasible(fleet, job)
         scores = jnp.where(ok, scores, -jnp.inf)
         # all-infeasible fleet: argmax over all -inf would bind host 0 —

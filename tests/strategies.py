@@ -89,3 +89,24 @@ def churn_traces(n_nodes: int = 6, max_pods: int = 12):
                     st.floats(30.0, 3000.0, allow_nan=False,
                               allow_infinity=False))
     return st.lists(pod, min_size=1, max_size=max_pods)
+
+
+def daemon_ops(max_ops: int = 24):
+    """Submit/poll/flush/advance interleavings for the placement daemon.
+
+    ``("submit", size_frac)`` enqueues a pod whose requests/demands scale
+    with ``size_frac`` (oversized fractions force infeasible requests and
+    drops); ``("advance", dt)`` moves the fake clock (crossing max-wait cuts
+    partial batches); ``("poll",)`` and ``("flush",)`` drive the loop at
+    arbitrary points, so batch boundaries land on every possible prefix.
+    """
+    submit = st.tuples(st.just("submit"),
+                       st.floats(0.05, 1.5, allow_nan=False,
+                                 allow_infinity=False))
+    advance = st.tuples(st.just("advance"),
+                        st.floats(0.0, 0.1, allow_nan=False,
+                                  allow_infinity=False))
+    poll = st.tuples(st.just("poll"), st.just(0.0))
+    flush = st.tuples(st.just("flush"), st.just(0.0))
+    return st.lists(st.one_of(submit, advance, poll, flush),
+                    min_size=1, max_size=max_ops)

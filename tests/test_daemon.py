@@ -1,0 +1,405 @@
+"""Placement-daemon suite: batching, one-launch scoring, optimistic binds.
+
+Covers the serving loop's contracts (``repro.sched.daemon``): batches cut by
+size AND by max-wait; the whole batch scores in ONE device launch with ONE
+compilation across fill levels; racing binds to the same node resolve with
+exactly one winner and the loser re-validating against fresh state; the
+numpy live-buffer mirrors (``bind``/``feasible_one``) stay bit-close to the
+jnp references (``env.place``/``env.feasible``, ``PlacementEngine``); plus
+the unified ``repro.sched.api`` dispatch, the arrival-trace adapter, the
+``EpisodeResult`` shim, and ``serve.load_qnet`` checkpoint loading.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dqn, env as kenv, schedulers
+from repro.core.types import (
+    NO_PLACEMENT,
+    EpisodeResult,
+    paper_cluster,
+)
+from repro.scenarios import arrival_trace, trace_from_table
+from repro.sched import api, placement
+from repro.sched.daemon import (
+    ClusterSubstrate,
+    DaemonConfig,
+    FleetSubstrate,
+    PlacementDaemon,
+)
+
+CFG = paper_cluster()
+
+
+@pytest.fixture(scope="module")
+def qparams():
+    return dqn.init_qnet(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def state():
+    return kenv.reset(jax.random.PRNGKey(1), CFG)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def make_daemon(state, qparams, score_fn=None, **cfg_kw):
+    clock = FakeClock()
+    sub = ClusterSubstrate(state, CFG, score_fn=score_fn)
+    d = PlacementDaemon(sub, qparams, DaemonConfig(**cfg_kw), clock=clock)
+    return d, sub, clock
+
+
+# ---------------------------------------------------------------------------
+# batching semantics
+# ---------------------------------------------------------------------------
+
+
+class TestBatching:
+    def test_batch_cut_by_size(self, state, qparams):
+        d, _, clock = make_daemon(state, qparams, batch_size=4,
+                                  max_wait_s=1e9)
+        pod = kenv.default_pod(CFG)
+        for _ in range(3):
+            d.submit(pod)
+            assert d.poll() == 0          # below size, wait unbounded
+        d.submit(pod)
+        assert d.poll() == 4              # 4th request cuts the batch
+        assert d.metrics.batches == 1
+        assert d.pending == 0
+
+    def test_batch_cut_by_max_wait(self, state, qparams):
+        d, _, clock = make_daemon(state, qparams, batch_size=64,
+                                  max_wait_s=0.5)
+        pod = kenv.default_pod(CFG)
+        d.submit(pod)
+        d.submit(pod)
+        assert d.poll() == 0              # neither condition holds yet
+        clock.t = 0.499
+        assert d.poll() == 0
+        clock.t = 0.5                     # oldest waited max_wait_s
+        assert d.poll() == 2              # partial batch ships
+        assert d.metrics.batches == 1
+
+    def test_drain_finishes_everything(self, state, qparams):
+        d, _, _ = make_daemon(state, qparams, batch_size=8, max_wait_s=1e9)
+        pod = kenv.default_pod(CFG)
+        for _ in range(11):
+            d.submit(pod)
+        assert d.drain() == 11
+        assert len(d.decisions) == 11
+        assert d.metrics.bound + d.metrics.dropped == 11
+
+    def test_latency_measured_from_submission(self, state, qparams):
+        d, _, clock = make_daemon(state, qparams, batch_size=64,
+                                  max_wait_s=0.1)
+        d.submit(kenv.default_pod(CFG))   # t=0
+        clock.t = 0.25
+        assert d.poll() == 1
+        assert d.decisions[0].latency_s == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# one device launch per batch
+# ---------------------------------------------------------------------------
+
+
+class TestOneLaunch:
+    def test_one_launch_one_compile_across_fills(self, state, qparams):
+        d, _, _ = make_daemon(state, qparams, batch_size=4, max_wait_s=1e9)
+        d.warmup()
+        pod = kenv.default_pod(CFG)
+        # full batch, then two partial fills (3, 1) via drain
+        for _ in range(4):
+            d.submit(pod)
+        d.poll()
+        for _ in range(3):
+            d.submit(pod)
+        d.flush()
+        d.submit(pod)
+        d.flush()
+        assert d.metrics.batches == 3
+        # ONE jitted call per batch...
+        assert d.metrics.device_launches == d.metrics.batches
+        # ...and ONE compilation total: partial fills pad to the static
+        # batch shape instead of recompiling
+        assert d.scorer_cache_size() == 1
+
+    def test_fleet_substrate_one_compile(self, qparams):
+        sub = FleetSubstrate(placement.fresh_fleet(8))
+        d = PlacementDaemon(sub, qparams,
+                            DaemonConfig(batch_size=4, max_wait_s=1e9),
+                            clock=FakeClock())
+        d.warmup()
+        for _ in range(6):
+            d.submit(placement.JobSpec())
+        d.drain()
+        assert d.metrics.device_launches == d.metrics.batches == 2
+        assert d.scorer_cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# optimistic concurrency
+# ---------------------------------------------------------------------------
+
+
+def _two_node_race(qparams, conflict_policy="requeue", max_retries=4):
+    """Two requests, one batch, both scored against the same snapshot and
+    both preferring node 0 — which only has room for ONE more pod."""
+    cfg = dataclasses.replace(paper_cluster(), n_nodes=2)
+    state = kenv.reset(jax.random.PRNGKey(2), cfg)
+    # prefer the lowest-CPU afterstate, deterministically
+    score_fn = lambda params, feats: -feats[:, 0]
+    clock = FakeClock()
+    sub = ClusterSubstrate(state, cfg, score_fn=score_fn)
+    lv = sub.live
+    lv.healthy[:] = True
+    lv.base_cpu[:] = (1.0, 30.0)          # node 0 is the attractive one
+    lv.cpu_requested[:] = 0.0
+    lv.mem_requested[:] = 0.0
+    lv.max_pods[0] = lv.num_pods[0] + 1   # ...but fits exactly one more pod
+    lv.max_pods[1] = lv.num_pods[1] + 10
+    d = PlacementDaemon(
+        sub, qparams,
+        DaemonConfig(batch_size=2, max_wait_s=1e9, max_retries=max_retries,
+                     conflict_policy=conflict_policy),
+        clock=clock)
+    pod = kenv.default_pod(cfg)
+    d.submit(pod)
+    d.submit(pod)
+    return d
+
+
+class TestOptimisticConcurrency:
+    def test_racing_binds_one_winner_loser_requeues(self, qparams):
+        d = _two_node_race(qparams)
+        assert d.poll() == 1              # winner bound; loser re-queued
+        assert d.metrics.conflicts == 1
+        assert d.metrics.requeued == 1
+        assert d.pending == 1
+        assert d.decisions[0].node == 0
+        # the re-queued loser re-validates against FRESH state next batch:
+        # node 0 is now full in the new snapshot, so it lands on node 1
+        assert d.drain() == 1
+        assert d.decisions[1].node == 1
+        assert d.decisions[1].attempts == 2
+        assert d.metrics.bound == 2
+
+    def test_next_best_policy_resolves_in_one_batch(self, qparams):
+        d = _two_node_race(qparams, conflict_policy="next-best")
+        assert d.poll() == 2              # loser falls through to node 1
+        assert d.metrics.conflicts == 1
+        assert d.metrics.requeued == 0
+        assert sorted(dec.node for dec in d.decisions) == [0, 1]
+
+    def test_max_retries_drops_conflicted_request(self, qparams):
+        d = _two_node_race(qparams, max_retries=1)
+        # make node 1 infeasible too, AFTER the snapshot preference is set:
+        # the loser's only alternative vanishes and retries run out
+        d.poll()
+        d._sub.live.max_pods[1] = d._sub.live.num_pods[1]
+        d.drain()
+        assert d.decisions[1].node == NO_PLACEMENT
+        assert d.metrics.dropped == 1
+
+    def test_infeasible_batch_drops_with_sentinel(self, state, qparams):
+        d, sub, _ = make_daemon(state, qparams, batch_size=1)
+        sub.live.healthy[:] = False       # nothing passes the filter phase
+        d.submit(kenv.default_pod(CFG))
+        assert d.flush() == 1
+        assert d.decisions[0].node == NO_PLACEMENT
+        assert d.metrics.dropped == 1
+        assert d.metrics.conflicts == 0   # a drop, not a lost race
+
+
+# ---------------------------------------------------------------------------
+# live-buffer mirrors vs the jnp references
+# ---------------------------------------------------------------------------
+
+
+class TestMirrorParity:
+    def test_cluster_bind_matches_env_place(self, state, qparams):
+        sub = ClusterSubstrate(state, CFG)
+        pod = kenv.default_pod(CFG)
+        for node in (0, 3, 0):            # includes a warm re-bind
+            ref = kenv.place(
+                jax.tree.map(jnp.asarray, sub.live), jnp.int32(node), pod,
+                CFG)
+            sub.bind(node, pod)
+            for name, a, b in zip(ref._fields, jax.tree.map(
+                    np.asarray, sub.live), ref):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5,
+                    err_msg=f"{name} after bind({node})")
+
+    def test_cluster_feasible_one_matches_env_feasible(self, state, qparams):
+        sub = ClusterSubstrate(state, CFG)
+        lv = sub.live
+        lv.healthy[1] = False
+        lv.cpu_requested[2] = lv.cpu_capacity[2]          # CPU-full
+        lv.num_pods[3] = lv.max_pods[3]                   # at max-pods
+        pod = kenv.default_pod(CFG)
+        ref = np.asarray(kenv.feasible(
+            jax.tree.map(jnp.asarray, lv), pod, CFG))
+        got = np.array([sub.feasible_one(i, pod)
+                        for i in range(CFG.n_nodes)])
+        np.testing.assert_array_equal(got, ref)
+
+    def test_fleet_bind_matches_engine_place(self, qparams):
+        fleet = placement.fresh_fleet(6)
+        sub = FleetSubstrate(fleet)
+        eng = placement.PlacementEngine(qparams)
+        job = placement.JobSpec()
+        ref = eng.place(eng.place(fleet, 2, job), 4, job)
+        sub.bind(2, job)
+        sub.bind(4, job)
+        for name, a, b in zip(ref._fields, jax.tree.map(
+                np.asarray, sub.live), ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, err_msg=name)
+
+    def test_fleet_feasible_one_matches_engine(self, qparams):
+        fleet = placement.fresh_fleet(6)._replace(
+            cpu_pct=jnp.asarray([10.0, 90.0, 10.0, 10.0, 10.0, 10.0]),
+            mem_pct=jnp.asarray([5.0, 5.0, 96.0, 5.0, 5.0, 5.0]),
+            healthy=jnp.asarray([1.0, 1.0, 1.0, 0.0, 1.0, 1.0]),
+            job_util_pct=jnp.asarray([0.0, 0.0, 0.0, 0.0, 100.0, 0.0]),
+        )
+        sub = FleetSubstrate(fleet)
+        eng = placement.PlacementEngine(qparams)
+        job = placement.JobSpec()
+        ref = np.asarray(eng.feasible(fleet, job))
+        got = np.array([sub.feasible_one(i, job) for i in range(6)])
+        np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# the unified public scheduling API
+# ---------------------------------------------------------------------------
+
+
+class TestApi:
+    def test_cluster_dispatch_matches_schedulers(self, state, qparams):
+        pod = kenv.default_pod(CFG)
+        got = api.score(state, pod, params=qparams, cfg=CFG)
+        ref = schedulers.score_afterstates(qparams, state, pod, CFG)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref))
+
+    def test_cluster_requires_cfg(self, state, qparams):
+        with pytest.raises(ValueError, match="cfg"):
+            api.score(state, kenv.default_pod(CFG), params=qparams)
+
+    def test_fleet_dispatch_matches_engine_select_scores(self, qparams):
+        fleet = placement.fresh_fleet(16)
+        job = placement.JobSpec()
+        got = api.score(fleet, job, params=qparams, fused=False)
+        eng = placement.PlacementEngine(qparams, use_kernel=False)
+        _, ref = eng.select(fleet, job)
+        ok = np.asarray(eng.feasible(fleet, job))
+        np.testing.assert_allclose(np.asarray(got)[ok],
+                                   np.asarray(ref)[ok], rtol=1e-5)
+
+    def test_score_batch_rows_match_score(self, state, qparams):
+        pods = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (3,)), kenv.default_pod(CFG))
+        qb = api.score_batch(state, pods, params=qparams, cfg=CFG)
+        q1 = api.score(state, kenv.default_pod(CFG), params=qparams, cfg=CFG)
+        assert qb.shape == (3, CFG.n_nodes)
+        np.testing.assert_allclose(np.asarray(qb[0]), np.asarray(q1),
+                                   rtol=1e-5)
+
+    def test_select_returns_sentinel_when_fleet_full(self, qparams):
+        fleet = placement.fresh_fleet(4)._replace(
+            healthy=jnp.zeros((4,)))
+        assert int(api.select(fleet, placement.JobSpec(),
+                              params=qparams)) == NO_PLACEMENT
+
+    def test_bad_fused_value_rejected(self, qparams):
+        with pytest.raises(ValueError, match="fused"):
+            api.score(placement.fresh_fleet(4), placement.JobSpec(),
+                      params=qparams, fused="bogus")
+
+    def test_sentinels_are_unified(self):
+        assert kenv.NO_NODE is NO_PLACEMENT
+        assert placement.NO_HOST is NO_PLACEMENT
+        assert api.NO_PLACEMENT is NO_PLACEMENT
+
+
+# ---------------------------------------------------------------------------
+# arrival traces + EpisodeResult shim + checkpoint loading
+# ---------------------------------------------------------------------------
+
+
+class TestArrivals:
+    def test_trace_reproducible_and_monotone(self):
+        a = arrival_trace(jax.random.PRNGKey(5), CFG, 40)
+        b = arrival_trace(jax.random.PRNGKey(5), CFG, 40)
+        np.testing.assert_array_equal(a.t_s, b.t_s)
+        assert a.t_s[0] == 0.0
+        assert np.all(np.diff(a.t_s) >= 0)
+        assert len(a.pods) == 40
+
+    def test_rate_rescaling(self):
+        tr = arrival_trace(jax.random.PRNGKey(6), CFG, 50,
+                           rate_per_s=2000.0)
+        assert tr.offered_rate_per_s == pytest.approx(2000.0, rel=1e-6)
+
+    def test_burst_table_spreads_at_offered_rate(self):
+        table = kenv.sample_pod_table(jax.random.PRNGKey(7), CFG, 10)
+        zero = table._replace(dt_s=jnp.zeros_like(table.dt_s))
+        tr = trace_from_table(zero, rate_per_s=100.0)
+        np.testing.assert_allclose(np.diff(tr.t_s), 0.01)
+
+
+class TestEpisodeResultShim:
+    def test_tuple_unpacking_still_works(self):
+        sel = schedulers.make_kube_selector(CFG)
+        res = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 10)
+        assert isinstance(res, EpisodeResult)
+        # the deprecation shim: legacy positional order is preserved
+        state, placements, metric, dropped, stats = res
+        assert state is res.state
+        assert placements is res.placements
+        assert metric is res.metric
+        assert dropped is res.dropped
+        assert stats is res.stats
+        assert res._fields == ("state", "placements", "metric", "dropped",
+                               "stats")
+
+
+class TestServeCheckpointLoading:
+    def test_load_qnet_roundtrips_through_ckpt(self, tmp_path, qparams):
+        from repro.checkpoint import ckpt
+        from repro.launch import serve
+
+        ckpt.save(str(tmp_path), 7, qparams)
+        loaded = serve.load_qnet(str(tmp_path), jax.random.PRNGKey(9))
+        for name in qparams:
+            np.testing.assert_array_equal(np.asarray(loaded[name]),
+                                          np.asarray(qparams[name]))
+
+    def test_load_qnet_npz_legacy(self, tmp_path, qparams):
+        from repro.launch import serve
+
+        path = tmp_path / "q.npz"
+        np.savez(path, **{k: np.asarray(v) for k, v in qparams.items()})
+        loaded = serve.load_qnet(str(path), jax.random.PRNGKey(9))
+        np.testing.assert_array_equal(
+            np.asarray(loaded["w1"]), np.asarray(qparams["w1"]))
+
+    def test_load_qnet_empty_is_fresh_init(self):
+        from repro.launch import serve
+
+        a = serve.load_qnet("", jax.random.PRNGKey(3))
+        b = dqn.init_qnet(jax.random.PRNGKey(3))
+        np.testing.assert_array_equal(np.asarray(a["w1"]),
+                                      np.asarray(b["w1"]))

@@ -22,13 +22,13 @@ class TestBatchEpisode:
         res = batch(keys)
         ep = jax.jit(lambda k: kenv.run_episode(k, CFG, sel, 30))
         for t in range(trials):
-            state, dist, met, dropped, _ = ep(jax.random.fold_in(jax.random.PRNGKey(7), t))
-            assert float(res.metric[t]) == float(met)
+            r = ep(jax.random.fold_in(jax.random.PRNGKey(7), t))
+            assert float(res.metric[t]) == float(r.metric)
             np.testing.assert_array_equal(np.asarray(res.distribution[t]),
-                                          np.asarray(dist))
+                                          np.asarray(r.placements))
             np.testing.assert_array_equal(np.asarray(res.exp_pods[t]),
-                                          np.asarray(state.exp_pods))
-            assert int(res.dropped[t]) == int(dropped)
+                                          np.asarray(r.state.exp_pods))
+            assert int(res.dropped[t]) == int(r.dropped)
 
     def test_shapes(self):
         sel = schedulers.make_kube_selector(CFG)

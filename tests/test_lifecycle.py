@@ -101,8 +101,8 @@ class TestConservation:
         sel = schedulers.make_kube_selector(cfg)
         key = jax.random.PRNGKey(3)
         n = cfg.scenario.n_pods
-        final, _, _, dropped, stats = jax.jit(
-            lambda k: kenv.run_episode(k, cfg, sel, n))(key)
+        res = jax.jit(lambda k: kenv.run_episode(k, cfg, sel, n))(key)
+        final, dropped, stats = res.state, res.dropped, res.stats
         assert int(stats.retired) == n - int(dropped)
         assert int(stats.nodes_active_final) == 0
         reset_state = kenv.reset(jax.random.split(key, 3)[0], cfg)
@@ -161,8 +161,9 @@ class TestStaticParity:
         assert bool(np.all(np.isinf(np.asarray(table.lifetime_s))))
         ref_state, ref_metric, _ = jax.jit(
             lambda k: _static_reference_episode(k, cfg, sel, n, table))(key)
-        new_state, _, new_metric, _, stats = jax.jit(
+        res = jax.jit(
             lambda k: kenv.run_episode(k, cfg, sel, n, pod_table=table))(key)
+        new_state, new_metric, stats = res.state, res.metric, res.stats
         assert int(stats.retired) == 0
         np.testing.assert_allclose(float(ref_metric), float(new_metric),
                                    rtol=1e-6)
@@ -180,8 +181,9 @@ class TestStaticParity:
         table = kenv.sample_pod_table(jax.random.split(key, 3)[1], cfg, n)
         _, ref_metric, _ = jax.jit(
             lambda k: _static_reference_episode(k, cfg, sel, n, table))(key)
-        final, _, new_metric, _, stats = jax.jit(
+        res = jax.jit(
             lambda k: kenv.run_episode(k, cfg, sel, n, pod_table=table))(key)
+        new_metric, stats = res.metric, res.stats
         assert int(stats.retired) > 0
         assert float(new_metric) < float(ref_metric)  # drained cluster is idler
 
@@ -190,9 +192,9 @@ class TestChurnEpisodes:
     def test_nodes_active_falls_after_arrival_wave(self):
         cfg = scenarios.make_env("short-job-burst")
         sel = schedulers.make_kube_selector(cfg)
-        _, _, _, dropped, stats = jax.jit(
+        stats = jax.jit(
             lambda k: kenv.run_episode(k, cfg, sel, cfg.scenario.n_pods))(
-                jax.random.PRNGKey(0))
+                jax.random.PRNGKey(0)).stats
         assert int(stats.retired) > 0
         assert int(stats.nodes_active_final) < int(stats.nodes_active_peak)
         assert float(stats.nodes_active_mean) < float(stats.nodes_active_peak)
@@ -200,8 +202,9 @@ class TestChurnEpisodes:
     def test_stats_are_consistent_integrals(self):
         cfg = scenarios.make_env("diurnal-churn")
         sel = schedulers.make_kube_selector(cfg)
-        _, _, _, _, stats = jax.jit(
-            lambda k: kenv.run_episode(k, cfg, sel, 40))(jax.random.PRNGKey(1))
+        stats = jax.jit(
+            lambda k: kenv.run_episode(k, cfg, sel, 40))(
+                jax.random.PRNGKey(1)).stats
         assert float(stats.node_seconds) > 0.0
         assert float(stats.energy_wh) > 0.0
         assert 0.0 < float(stats.nodes_active_mean) <= float(stats.nodes_active_peak)
@@ -300,10 +303,11 @@ class TestConsolidator:
         plain = jax.jit(lambda k: kenv.run_episode(k, base, sel, n))(key)
         packed = jax.jit(lambda k: kenv.run_episode(
             k, cfg, sel, n, consolidate=cons))(key)
-        assert float(packed[4].node_seconds) <= float(plain[4].node_seconds) * 1.05
+        assert (float(packed.stats.node_seconds)
+                <= float(plain.stats.node_seconds) * 1.05)
         # all pods still die and release everything
-        assert int(packed[4].nodes_active_final) == 0
-        np.testing.assert_array_equal(np.asarray(packed[0].exp_pods), 0)
+        assert int(packed.stats.nodes_active_final) == 0
+        np.testing.assert_array_equal(np.asarray(packed.state.exp_pods), 0)
 
 
 class TestEnergyReward:

@@ -19,8 +19,8 @@ import pytest
 import strategies as strat
 from repro.core import dqn, env as kenv
 from repro.core.replay import Replay, replay_add, replay_init, replay_sample
-from repro.core.types import fleet_cluster, paper_cluster
-from repro.sched import elastic
+from repro.core.types import PodSpec, fleet_cluster, paper_cluster
+from repro.sched import daemon as sched_daemon, elastic
 
 # ---------------------------------------------------------------------------
 # PodLedger lifecycle invariants
@@ -324,6 +324,79 @@ def test_consolidator_fixed_cases():
 
 
 # ---------------------------------------------------------------------------
+# placement-daemon invariants
+# ---------------------------------------------------------------------------
+
+_DAEMON_Q = dqn.init_qnet(jax.random.PRNGKey(2))
+
+
+def _check_daemon_never_binds_infeasible(seed, ops):
+    """No interleaving of submits, clock advances, polls and flushes makes
+    the daemon bind an infeasible pod (``sched.daemon``'s optimistic-bind
+    re-validation contract).  After every op AND after the final drain:
+
+      * CPU/mem *requests* never exceed any node's capacity;
+      * no node exceeds its max-pods slot ceiling;
+      * the unhealthy node never gains a pod;
+      * every submitted request eventually resolves (bound or dropped).
+
+    Oversized submissions (request > capacity) must fall out as drops, never
+    as overshooting binds.
+    """
+    cfg = paper_cluster()
+    state = kenv.reset(jax.random.PRNGKey(seed), cfg)
+    sub = sched_daemon.ClusterSubstrate(state, cfg)
+    sub.live.healthy[0] = False
+    pods0 = sub.live.num_pods.copy()
+    t = [0.0]
+    d = sched_daemon.PlacementDaemon(
+        sub, _DAEMON_Q,
+        sched_daemon.DaemonConfig(batch_size=3, max_wait_s=0.05,
+                                  max_retries=2),
+        clock=lambda: t[0])
+    cap = float(np.min(np.asarray(sub.live.cpu_capacity)))
+    mem_cap = float(np.min(np.asarray(sub.live.mem_capacity)))
+
+    def check():
+        lv = sub.live
+        assert np.all(lv.cpu_requested <= np.asarray(lv.cpu_capacity) + 1e-3)
+        assert np.all(lv.mem_requested <= np.asarray(lv.mem_capacity) + 1e-3)
+        assert np.all(lv.num_pods <= lv.max_pods)
+        assert lv.num_pods[0] == pods0[0], "bound onto the unhealthy node"
+
+    for op, arg in ops:
+        if op == "submit":
+            d.submit(PodSpec(cpu_request=arg * cap,
+                             cpu_demand=0.5 * arg * cap,
+                             mem_request=arg * mem_cap,
+                             mem_demand=0.2 * arg * mem_cap))
+        elif op == "advance":
+            t[0] += arg
+            d.poll()
+        elif op == "poll":
+            d.poll()
+        elif op == "flush":
+            d.flush()
+        check()
+    d.drain()
+    check()
+    assert d.metrics.bound + d.metrics.dropped == d.metrics.submitted
+    assert len(d.decisions) == d.metrics.submitted
+
+
+def test_daemon_invariants_fixed_cases():
+    _check_daemon_never_binds_infeasible(
+        0, [("submit", 0.2), ("submit", 1.4), ("poll", 0.0),
+            ("submit", 0.3), ("advance", 0.06), ("flush", 0.0)])
+    # a burst bigger than the cluster can hold: the tail must drop cleanly
+    _check_daemon_never_binds_infeasible(
+        4, [("submit", 0.6)] * 9 + [("flush", 0.0)] * 3)
+    # max-wait cuts partial batches between every submit
+    _check_daemon_never_binds_infeasible(
+        7, [("submit", 0.25), ("advance", 0.06)] * 5)
+
+
+# ---------------------------------------------------------------------------
 # the hypothesis tier (randomized versions of everything above)
 # ---------------------------------------------------------------------------
 
@@ -350,6 +423,10 @@ if strat.HAVE_HYPOTHESIS:
     @given(seed=strat.seeds(), trace=strat.churn_traces())
     def test_property_consolidator_no_pingpong(seed, trace):
         _check_consolidator_no_pingpong(seed, trace)
+
+    @given(seed=strat.seeds(), ops=strat.daemon_ops())
+    def test_property_daemon_never_binds_infeasible(seed, ops):
+        _check_daemon_never_binds_infeasible(seed, ops)
 
 else:  # pragma: no cover - the [test] extra is installed in CI
 

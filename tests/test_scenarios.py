@@ -111,7 +111,7 @@ class TestEpisodes:
         cfg = paper_cluster()
         key = jax.random.PRNGKey(9)
         sel = schedulers.make_kube_selector(cfg)
-        final, _, _, _, _ = kenv.run_episode(key, cfg, sel, 10)
+        final = kenv.run_episode(key, cfg, sel, 10).state
         expected = kenv.reset(jax.random.split(key, 3)[0], cfg)
         # base_cpu is invariant through placements/ticks: the episode's
         # initial layout must be exactly reset(first split), not reset(key)

@@ -28,10 +28,10 @@ class TestKubeScheduler:
 
     def test_episode_runs(self):
         sel = schedulers.make_kube_selector(CFG)
-        _, dist, metric, dropped, _ = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
-        assert int(dropped) == 0
-        assert int(dist.sum()) >= 50  # includes tenant pods
-        assert 5.0 < float(metric) < 60.0
+        res = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        assert int(res.dropped) == 0
+        assert int(res.placements.sum()) >= 50  # includes tenant pods
+        assert 5.0 < float(res.metric) < 60.0
 
 
 class TestDQN:
@@ -82,8 +82,8 @@ class TestSelectors:
     def test_sdqn_selector_runs_episode(self):
         qp = dqn.init_qnet(jax.random.PRNGKey(0))
         sel = schedulers.make_sdqn_selector(qp, CFG)
-        _, dist, metric, _, _ = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
-        assert float(metric) > 0
+        res = kenv.run_episode(jax.random.PRNGKey(0), CFG, sel, 50)
+        assert float(res.metric) > 0
 
     def test_unhealthy_node_never_selected(self):
         qp = dqn.init_qnet(jax.random.PRNGKey(0))
@@ -142,11 +142,10 @@ class TestInfeasibleBurst:
         for sel in (schedulers.make_kube_selector(tiny),
                     schedulers.make_sdqn_selector(
                         dqn.init_qnet(jax.random.PRNGKey(0)), tiny)):
-            state, dist, _, dropped, _ = kenv.run_episode(
-                jax.random.PRNGKey(0), tiny, sel, 20)
-            assert int(dropped) > 0
-            assert int(state.exp_pods.sum()) + int(dropped) == 20
-            assert int(state.num_pods.max()) <= 3
+            res = kenv.run_episode(jax.random.PRNGKey(0), tiny, sel, 20)
+            assert int(res.dropped) > 0
+            assert int(res.state.exp_pods.sum()) + int(res.dropped) == 20
+            assert int(res.state.num_pods.max()) <= 3
 
     def test_training_survives_saturating_cluster(self):
         """RL training on a cluster that saturates mid-burst: dropped

@@ -22,8 +22,9 @@ def evaluate(select, trials=3, n_pods=50):
     mets, dists = [], []
     ep = jax.jit(lambda kk: kenv.run_episode(kk, CFG, select, n_pods))
     for t in range(trials):
-        state, _, met, _, _ = ep(jax.random.PRNGKey(100 + t))
-        mets.append(float(met))
+        res = ep(jax.random.PRNGKey(100 + t))
+        state = res.state
+        mets.append(float(res.metric))
         dists.append(np.asarray(state.exp_pods))
     return float(np.mean(mets)), dists
 
@@ -79,8 +80,8 @@ class TestLiteralAblation:
         qp, metrics = jax.jit(lambda k: train_rl.train(k, tcfg, rl))(jax.random.PRNGKey(0))
         assert np.isfinite(float(metrics["loss"][-1]))
         sel = schedulers.make_sdqn_selector(qp, CFG)
-        _, dist, met, _, _ = kenv.run_episode(jax.random.PRNGKey(5), CFG, sel, 50)
-        assert np.isfinite(float(met))
+        res = kenv.run_episode(jax.random.PRNGKey(5), CFG, sel, 50)
+        assert np.isfinite(float(res.metric))
 
 
 class TestServeIntegration:
