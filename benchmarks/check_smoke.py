@@ -22,6 +22,13 @@ active nodes), the sdqnn/kube ratio must stay within ``tolerance`` of the
 committed baseline ratio — SDQN-n keeping fewer nodes awake than the default
 scheduler is the paper's §6 claim, and this is its regression gate.
 
+``--policy-compare`` gates the policy-class registry story: for every
+``policy_compare_<scenario>_<class>`` row (``derived`` = avg-CPU) each
+registered class's <class>/kube ratio must stay within ``tolerance`` of the
+committed baseline — no policy class silently stops beating the default
+scheduler.  Pair it with ``--throughput-row policy_train_step_<class>`` to
+also floor each class's learner-step rate.
+
 ``--throughput-row NAME`` (repeatable) additionally gates that row's
 ``derived`` column (a rate: transitions/s, episodes/s, ...) against the same
 row in the baseline: current below ``baseline * (1 - throughput_tolerance)``
@@ -47,6 +54,7 @@ import sys
 from typing import Dict, List, Tuple
 
 LIFECYCLE_POLICIES = ("kube", "sdqn", "sdqnn")
+POLICY_CLASSES = ("kube", "mlp", "attention", "mamba")
 
 
 def _policy_ratios(rows, prefix: str, baseline_policy: str,
@@ -82,6 +90,12 @@ def lifecycle_ratios(rows) -> Dict[str, Tuple[float, float, float]]:
     return _policy_ratios(rows, "lifecycle_", "kube", "sdqnn", LIFECYCLE_POLICIES)
 
 
+def policy_class_ratios(rows, policy: str) -> Dict[str, Tuple[float, float, float]]:
+    """{scenario: (kube_cpu, <class>_cpu, ratio)} from policy_compare rows."""
+    return _policy_ratios(rows, "policy_compare_", "kube", policy,
+                          POLICY_CLASSES)
+
+
 def _row_map(rows) -> Dict[str, float]:
     return {row["name"]: float(row["derived"]) for row in rows}
 
@@ -110,12 +124,15 @@ def _gate_ratios(label: str, cur: dict, base: dict, tolerance: float,
 def compare(current: dict, baseline: dict, tolerance: float,
             throughput_rows=(), throughput_tolerance: float = 0.25,
             latency_rows=(), latency_tolerance: float = 1.0,
-            lifecycle: bool = False) -> int:
+            lifecycle: bool = False, policy_compare: bool = False) -> int:
     cur = scenario_ratios(current["rows"])
     base = scenario_ratios(baseline["rows"])
     cur_life = lifecycle_ratios(current["rows"]) if lifecycle else {}
     base_life = lifecycle_ratios(baseline["rows"]) if lifecycle else {}
-    if not base and not throughput_rows and not latency_rows and not base_life:
+    pol_classes = [p for p in POLICY_CLASSES if p != "kube"] if policy_compare else []
+    base_pol = {p: policy_class_ratios(baseline["rows"], p) for p in pol_classes}
+    if (not base and not throughput_rows and not latency_rows and not base_life
+            and not any(base_pol.values())):
         print("check_smoke: baseline has no gated rows", file=sys.stderr)
         return 2
     failures: List[str] = []
@@ -127,6 +144,17 @@ def compare(current: dict, baseline: dict, tolerance: float,
         else:
             _gate_ratios("sdqnn/kube nodes-active", cur_life, base_life,
                          tolerance, failures)
+    if policy_compare:
+        if not any(base_pol.values()):
+            failures.append("policy-compare: baseline has no policy_compare rows")
+        for pol in pol_classes:
+            if not base_pol[pol]:
+                failures.append(
+                    f"policy-compare: baseline has no {pol} rows")
+                continue
+            _gate_ratios(f"{pol}/kube avg-CPU",
+                         policy_class_ratios(current["rows"], pol),
+                         base_pol[pol], tolerance, failures)
 
     if throughput_rows:
         cur_rows, base_rows = _row_map(current["rows"]), _row_map(baseline["rows"])
@@ -187,6 +215,10 @@ def compare(current: dict, baseline: dict, tolerance: float,
     if lifecycle and base_life:
         gated.append(f"{len(base_life)} lifecycle nodes-active ratios within "
                      f"+{tolerance:.0%}")
+    if policy_compare:
+        n_pol = sum(len(v) for v in base_pol.values())
+        gated.append(f"{n_pol} policy-class avg-CPU ratios within "
+                     f"+{tolerance:.0%}")
     if throughput_rows:
         gated.append(f"{len(throughput_rows)} throughput rows within "
                      f"-{throughput_tolerance:.0%}")
@@ -207,6 +239,10 @@ def main(argv=None) -> int:
     ap.add_argument("--lifecycle", action="store_true",
                     help="also gate the lifecycle sdqnn/kube nodes-active "
                          "ratios (BENCH_lifecycle.json runs)")
+    ap.add_argument("--policy-compare", action="store_true",
+                    help="also gate each policy class's <class>/kube avg-CPU "
+                         "ratio (policy_compare_<scenario>_<class> rows from "
+                         "benchmarks.run --policy-compare)")
     ap.add_argument("--throughput-row", action="append", default=[],
                     metavar="NAME",
                     help="also gate this row's derived rate against the "
@@ -232,7 +268,8 @@ def main(argv=None) -> int:
                    throughput_tolerance=args.throughput_tolerance,
                    latency_rows=args.latency_row,
                    latency_tolerance=args.latency_tolerance,
-                   lifecycle=args.lifecycle)
+                   lifecycle=args.lifecycle,
+                   policy_compare=args.policy_compare)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,130 @@
+"""Policy-class comparison bench: every registered scheduler policy class
+(``repro.core.policy``) vs the default kube-scheduler, plus per-class
+train-step throughput.
+
+    PYTHONPATH=src python -m benchmarks.run --policy-compare --json out.json
+
+Two row families (``name,us_per_call,derived`` like every bench here):
+
+* ``policy_train_step_<class>`` — one learner step of that class's Q-net on a
+  replay batch; ``derived`` = transitions/s.  Gated as a throughput floor in
+  CI: a de-jitted loss or an accidentally sequential attention/Mamba forward
+  shows up as an order-of-magnitude drop.
+* ``policy_compare_<scenario>_<class>`` — avg-CPU metric (the paper's
+  objective, lower = better) of a tiny-budget net of that class on two
+  registry scenarios, next to a ``..._kube`` row.  CI gates the
+  ``<class>/kube`` ratio per class, so container speed cancels and what must
+  not regress is each policy class still beating (or at worst matching) the
+  default scheduler at smoke scale.
+
+Training budgets here are CI-sized (seconds, not the paper's presets) — the
+rows rank policy *classes* under an equal tiny budget; the paper-fidelity
+numbers live in ``paper_tables.policy_class_table``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import scenarios
+from repro.core import policy as policy_mod, schedulers, train_rl
+from repro.core.types import training_cluster
+from repro.eval import engine as eval_engine
+from repro.train import engine as train_engine
+
+# the smoke pair: the paper's own cluster shape + a heterogeneous one, so the
+# gate sees both the reproduction setting and a generalization setting
+SCENARIOS = ("paper-burst", "hetero-bigsmall")
+POLICY_CLASSES = tuple(sorted(policy_mod.names()))
+
+
+@functools.lru_cache(maxsize=None)
+def trained(policy: str, episodes: int = 12):
+    """One tiny-budget net per policy class (cached across scenarios)."""
+    rl = dataclasses.replace(train_rl.RLConfig(), policy=policy,
+                             episodes=episodes, n_envs=4,
+                             pods_per_episode=20, buffer_capacity=1024,
+                             batch_size=64)
+    stacked, _ = train_engine.train_seeds(jax.random.PRNGKey(42),
+                                          training_cluster(), rl, 1)
+    return jax.tree.map(lambda x: x[0], stacked)
+
+
+def train_step_rows(batch_size: int = 256,
+                    iters: int = 30) -> List[Tuple[str, float, float]]:
+    """``policy_train_step_<class>`` learner-step throughput rows."""
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for i, name in enumerate(POLICY_CLASSES):
+        spec = policy_mod.get(name)
+        params, opt_state = policy_mod.init_train_state(
+            spec, jax.random.fold_in(key, 10 + i))
+        step = jax.jit(policy_mod.make_train_step(spec))
+        feats = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (batch_size, spec.feature_dim),
+                                  dtype=jnp.float32)
+        targets = jax.random.normal(jax.random.fold_in(key, 2),
+                                    (batch_size,), dtype=jnp.float32)
+        params, opt_state, loss, _ = step(params, opt_state, feats, targets)
+        jax.block_until_ready(loss)  # compile outside the timed window
+        t0 = time.time()
+        for _ in range(iters):
+            params, opt_state, loss, _ = step(params, opt_state, feats,
+                                              targets)
+        jax.block_until_ready(loss)
+        us = (time.time() - t0) / iters * 1e6
+        rows.append((f"policy_train_step_{name}", us, batch_size / us * 1e6))
+        print(f"  train_step {name:10s} {us:8.1f} us/step "
+              f"({batch_size / us * 1e6:,.0f} transitions/s)")
+    return rows
+
+
+def bench_scenario(
+    name: str,
+    trials: int = 1,
+    n_pods: int = 20,
+    train_episodes: int = 12,
+) -> List[Tuple[str, float, float]]:
+    """kube + every policy class on one scenario, batched-trial protocol."""
+    env_cfg = scenarios.make_env(name)
+    rows = []
+    for pol in ("kube",) + POLICY_CLASSES:
+        if pol == "kube":
+            sel = schedulers.make_kube_selector(env_cfg)
+        else:
+            sel = schedulers.make_policy_selector(
+                policy_mod.get(pol), trained(pol, train_episodes), env_cfg)
+        # batched trial runner: all trials are ONE vmapped XLA launch
+        # (make_policy_selector's (select, carry0) pairs thread through)
+        ep = scenarios.batch_episode(env_cfg, sel, n_pods)
+        jax.block_until_ready(
+            ep(eval_engine.trial_keys(jax.random.PRNGKey(0), trials)))
+        t0 = time.time()
+        res = scenarios.evaluate_scenario(
+            jax.random.PRNGKey(100), env_cfg, sel, trials=trials,
+            n_pods=n_pods, episode=ep)
+        us = (time.time() - t0) / trials * 1e6
+        rows.append((f"policy_compare_{name}_{pol}", us, res["metric_mean"]))
+        print(f"  {name:18s} {pol:10s} avg_cpu={res['metric_mean']:6.2f}%"
+              f" (+-{res['metric_std']:.2f})"
+              f"  placed={res['pods_placed_mean']:.0f}/{res['n_pods']:.0f}")
+    return rows
+
+
+def smoke_rows(
+    trials: int = 1,
+    n_pods: int = 20,
+    train_episodes: int = 12,
+) -> List[Tuple[str, float, float]]:
+    """CI-sized policy-class comparison: throughput + both smoke scenarios."""
+    print("\n--- policy-class comparison (avg CPU %, lower = better) ---")
+    rows = train_step_rows()
+    for name in SCENARIOS:
+        rows += bench_scenario(name, trials=trials, n_pods=n_pods,
+                               train_episodes=train_episodes)
+    return rows

@@ -51,6 +51,11 @@ def main() -> None:
     mode.add_argument("--lifecycle-smoke", action="store_true",
                       help="CI-sized lifecycle benchmark (the sizing "
                            "benchmarks/baseline_lifecycle.json is gated at)")
+    mode.add_argument("--policy-compare", action="store_true",
+                      help="CI-sized policy-class comparison: every "
+                           "core.policy registry class vs kube on two "
+                           "scenarios + per-class train-step throughput (the "
+                           "sizing baseline_policy_compare.json is gated at)")
     mode.add_argument("--placement-serve", action="store_true",
                       help="placement-daemon serving benchmark: decisions/sec "
                            "and p50/p99 latency at several offered rates (the "
@@ -127,6 +132,12 @@ def main() -> None:
         from benchmarks import lifecycle_bench
 
         rows += lifecycle_bench.smoke_rows()
+    elif args.policy_compare:
+        from benchmarks import policy_compare
+
+        rows += policy_compare.smoke_rows(
+            trials=args.trials or 1, n_pods=args.pods or 20,
+            train_episodes=args.train_episodes or 12)
     elif args.placement_serve:
         from benchmarks import placement_serve
 
@@ -150,6 +161,7 @@ def main() -> None:
             rows += paper_tables.scenario_generalization(
                 trials=args.trials or 3, n_pods=args.pods,
                 train_episodes=args.train_episodes)
+            rows += paper_tables.policy_class_table()
 
         rows += sched_scale.run_all()
         rows += roofline_report.report(mesh="16x16")

@@ -88,6 +88,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_extra(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """The ``extra`` metadata dict recorded at ``save(...)`` time (e.g. the
+    policy-class record ``core.policy.checkpoint_metadata`` writes), without
+    touching the array shards.  {} for checkpoints saved with no extra."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(step_dir, "manifest.json")))
+    return manifest.get("extra") or {}
+
+
 def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
             shardings: Any = None, validate: bool = True) -> Any:
     """Rebuild a pytree from a checkpoint, re-sharding onto `shardings`.

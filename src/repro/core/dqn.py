@@ -16,10 +16,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import FEATURE_DIM
 from repro.optim import AdamConfig, adam_init, adam_update
 
 HIDDEN = 32
-N_FEATURES = 6
+N_FEATURES = FEATURE_DIM
 
 
 def init_qnet(key: jax.Array, hidden: int = HIDDEN) -> dict:

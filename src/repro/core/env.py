@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import (NO_PLACEMENT, ClusterState, EnvConfig,
-                              EpisodeResult, EpisodeStats, PodLedger, PodSpec,
-                              PodTable)
+from repro.core.types import (FEATURE_DIM, NO_PLACEMENT, ClusterState,
+                              EnvConfig, EpisodeResult, EpisodeStats,
+                              PodLedger, PodSpec, PodTable)
 
 # ---------------------------------------------------------------------------
 # construction
@@ -337,6 +337,8 @@ def features(state: ClusterState, cfg: EnvConfig) -> jnp.ndarray:
 
 
 FEATURE_SCALE = jnp.array([100.0, 100.0, 100.0, 1.0, 24.0, 32.0], jnp.float32)
+assert FEATURE_SCALE.shape == (FEATURE_DIM,), \
+    "FEATURE_SCALE must cover exactly the canonical afterstate width"
 
 
 def normalize_features(feats: jnp.ndarray) -> jnp.ndarray:
@@ -642,6 +644,7 @@ def run_episode(
     n_pods: int,
     pod_table: Optional[PodTable] = None,
     consolidate: Optional[Callable] = None,
+    select_carry=None,
 ) -> EpisodeResult:
     """Schedule `n_pods` arrivals with `select_action`, settle, retire.
 
@@ -662,6 +665,13 @@ def run_episode(
     ``cfg.consolidate_every_s`` seconds of episode time: a jit-safe SDQN-n
     pass that migrates pods off nearly-idle nodes through the fused
     ``score_afterstates`` dispatch.
+
+    ``select_carry`` (a pytree, e.g. ``PolicySpec.carry_init``'s state)
+    switches ``select_action`` to the carrying protocol
+    ``(key, state, pod, carry) -> (node, carry)``: sequence policy classes
+    (Mamba arrival-history encoders) thread their recurrent state through
+    the scanned arrivals.  ``None`` (the default) keeps the stateless
+    three-argument selector protocol unchanged.
 
     Returns an ``EpisodeResult`` ``(state, placements, metric, dropped,
     stats)`` where ``metric`` is the dt-weighted cluster-average CPU% (the
@@ -714,20 +724,32 @@ def run_episode(
         )
         return st, ledger, acc
 
+    # the selector's carry rides the scan as an (empty for stateless
+    # selectors) pytree — the () case adds no arrays, so the trace of the
+    # historical three-argument protocol is unchanged
+    if select_carry is None:
+        sel_carry0 = ()
+
+        def _select(k, st, pod, pc):
+            return select_action(k, st, pod), pc
+    else:
+        sel_carry0 = select_carry
+        _select = select_action
+
     def sched_step(carry, xs):
-        st, ledger, acc = carry
+        st, ledger, acc, pc = carry
         t, k, pod, dt, lifetime = xs
-        a = select_action(k, st, pod)
+        a, pc = _select(k, st, pod, pc)
         st = place(st, a, pod, cfg)
         if use_ledger:
             ledger = ledger_record(ledger, t, a, st.time_s + lifetime, pod)
         st, ledger, acc = advance(st, ledger, dt, acc)
-        return (st, ledger, acc), a
+        return (st, ledger, acc, pc), a
 
     keys = jax.random.split(k_act, n_pods)
-    (state, ledger, acc), actions = jax.lax.scan(
+    (state, ledger, acc, _), actions = jax.lax.scan(
         sched_step, (state, ledger_init(n_pods if use_ledger else 1),
-                     _acc_init()),
+                     _acc_init(), sel_carry0),
         (jnp.arange(n_pods), keys, pod_table.specs, pod_table.dt_s,
          pod_table.lifetime_s),
     )

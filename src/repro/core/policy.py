@@ -1,0 +1,409 @@
+"""Pluggable policy-class registry: one abstraction from train to serve.
+
+The paper's headline comparison (SDQN vs Transformer/LSTM alternatives) needs
+more than the hardcoded 2-layer MLP in ``core.dqn``.  A ``PolicySpec`` is the
+contract every scheduler policy class implements:
+
+  * ``init(key) -> params`` — any pytree (nested dicts welcome);
+  * ``qvalues(params, feats) -> scores`` — pointwise Q over ``(..., F)``
+    feature rows (the replay/learner path; F == ``feature_dim``);
+  * ``score_set(params, feats) -> scores`` — Q over the WHOLE ``(N, F)``
+    candidate-node set (the selection path).  Defaults to ``qvalues``;
+    set-attention policies mix context across the node axis here;
+  * optional arrival-history encoding for sequence policies
+    (``embed_dim > 0``): ``carry_init(params) -> carry`` and
+    ``encode_step(params, carry, workload) -> (carry, embed)``, where
+    ``workload`` is the ``ENCODER_IN``-vector of the arriving pod/job
+    (``pod_workload_features``).  The embed is appended to every afterstate
+    row before scoring, and the carry threads jit-safely through scanned
+    episodes, the eval engine and the serving daemon's batched launch.
+
+Three entries ship in-registry:
+
+  * ``"mlp"`` — the paper's Table-4 SDQN net (``core.dqn``), fused-kernel
+    capable (``kernels.sdqn_score``);
+  * ``"attention"`` — a set-attention scorer over the node feature columns
+    (AGMARL-style): embeds each candidate afterstate, mixes context with one
+    multi-head attention pass over the node set (``kernels.flash_attention``
+    on TPU, the XLA online-attention twin elsewhere), then projects to a
+    scalar Q per node.  On a singleton set the softmax over one key is the
+    identity, so the pointwise ``qvalues`` path is exact, not approximate;
+  * ``"mamba"`` — a selective-state-space arrival-history encoder
+    (``models.mamba`` recurrence; batch re-encoding goes through
+    ``kernels.mamba_scan``) feeding an MLP Q-head over
+    ``[afterstate | history embed]`` rows.
+
+Training is generic over the spec: ``init_train_state``/``make_train_step``
+are the Table-4 Adam/MSE learner for ANY registered policy, and the
+seed-parallel engine (``train.engine``) vmaps whatever params pytree the
+spec produces.  Checkpoints record a versioned metadata record
+(``save_checkpoint``/``restore_checkpoint``) so ``launch/serve.py`` restores
+any variant; manifests without the record fall back to the legacy MLP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dqn
+from repro.core.types import FEATURE_DIM
+from repro.optim import adam_init, adam_update
+
+__all__ = [
+    "ENCODER_IN", "PolicySpec", "checkpoint_metadata", "get",
+    "init_train_state", "make_train_step", "mse_loss", "names",
+    "pod_workload_features", "register", "restore_checkpoint",
+    "save_checkpoint",
+]
+
+# Input width of the sequence encoders: the arriving workload's intrinsic
+# demand vector (cpu_request, cpu_demand, mem_request, mem_demand), known at
+# decision time on every substrate (train loop, eval episodes, both daemon
+# substrates) — unlike afterstate features, which depend on the chosen node.
+ENCODER_IN = 4
+_WORKLOAD_SCALE = (1000.0, 1000.0, 1024.0, 1024.0)  # millicores / MiB
+
+
+def pod_workload_features(pod) -> jnp.ndarray:
+    """``(..., ENCODER_IN)`` normalized demand vector of an arriving pod."""
+    return jnp.stack(
+        [pod.cpu_request, pod.cpu_demand, pod.mem_request, pod.mem_demand],
+        axis=-1) / jnp.asarray(_WORKLOAD_SCALE, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """One scheduler policy class (see module docstring for the contract).
+
+    ``feature_dim`` is the replay-row width F = ``FEATURE_DIM + embed_dim``;
+    ``fused_kernel`` marks specs whose ``qvalues`` is exactly the Table-4
+    MLP, eligible for the fused afterstate/column kernels.  ``hyperparams``
+    is the architecture record checkpoints persist (widths, head counts).
+    """
+
+    name: str
+    feature_dim: int
+    embed_dim: int
+    init: Callable[[jax.Array], Any]
+    qvalues: Callable[[Any, jnp.ndarray], jnp.ndarray]
+    score_set: Callable[[Any, jnp.ndarray], jnp.ndarray]
+    encode_step: Optional[Callable] = None
+    carry_init: Optional[Callable] = None
+    fused_kernel: bool = False
+    hyperparams: Tuple[Tuple[str, Any], ...] = ()
+
+
+_REGISTRY: Dict[str, PolicySpec] = {}
+
+
+def register(spec: PolicySpec) -> PolicySpec:
+    if spec.embed_dim > 0 and (spec.encode_step is None or
+                               spec.carry_init is None):
+        raise ValueError(f"policy {spec.name!r} declares embed_dim="
+                         f"{spec.embed_dim} but no encoder")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> PolicySpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown policy class {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# generic Table-4 learner: Adam(1e-3) + MSE over any spec's qvalues
+# ---------------------------------------------------------------------------
+
+ADAM = dqn.ADAM  # every policy class trains with the paper's optimizer
+
+
+def mse_loss(spec: PolicySpec, params, feats, targets, weights=None):
+    q = spec.qvalues(params, feats)
+    err = jnp.square(q - targets)
+    if weights is not None:
+        return jnp.sum(err * weights) / jnp.maximum(jnp.sum(weights), 1e-9)
+    return jnp.mean(err)
+
+
+def init_train_state(spec: PolicySpec, key: jax.Array):
+    params = spec.init(key)
+    return params, adam_init(params, ADAM)
+
+
+def make_train_step(spec: PolicySpec) -> Callable:
+    """``(params, opt_state, feats, targets, weights) -> (params, opt_state,
+    loss, stats)`` — ``dqn.train_step`` generic over the spec (for the "mlp"
+    entry the traced computation is identical)."""
+
+    def loss_fn(params, feats, targets, weights):
+        return mse_loss(spec, params, feats, targets, weights)
+
+    def step(params, opt_state, feats, targets, weights=None):
+        loss, grads = jax.value_and_grad(loss_fn)(params, feats, targets,
+                                                  weights)
+        params, opt_state, stats = adam_update(params, grads, opt_state, ADAM)
+        return params, opt_state, loss, stats
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# "mlp" — the paper's Table-4 SDQN net (core.dqn), first registry entry
+# ---------------------------------------------------------------------------
+
+MLP = register(PolicySpec(
+    name="mlp",
+    feature_dim=FEATURE_DIM,
+    embed_dim=0,
+    init=dqn.init_qnet,
+    qvalues=dqn.qvalues,
+    score_set=dqn.qvalues,       # pointwise net: the set path IS the row path
+    fused_kernel=True,
+    hyperparams=(("hidden", dqn.HIDDEN),),
+))
+
+
+# ---------------------------------------------------------------------------
+# "attention" — set-attention scorer over the candidate-node feature set
+# ---------------------------------------------------------------------------
+
+ATTN_DMODEL = 16
+ATTN_HEADS = 2
+
+
+def init_attention(key: jax.Array, d_model: int = ATTN_DMODEL) -> dict:
+    ks = jax.random.split(key, 6)
+
+    def dense(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) * (1.0 / fan_in) ** 0.5
+
+    d = d_model
+    return {
+        "w_in": dense(ks[0], FEATURE_DIM, (FEATURE_DIM, d)),
+        "b_in": jnp.zeros((d,), jnp.float32),
+        "wq": dense(ks[1], d, (d, d)),
+        "wk": dense(ks[2], d, (d, d)),
+        "wv": dense(ks[3], d, (d, d)),
+        "wo": dense(ks[4], d, (d, d)),
+        "w_out": dense(ks[5], d, (d, 1)),
+        "b_out": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def _attn_embed(params, feats):
+    return jnp.tanh(feats @ params["w_in"] + params["b_in"])
+
+
+def _attn_head(params, x, attn_out):
+    h = jax.nn.relu(x + attn_out @ params["wo"])   # residual mix of set context
+    return (h @ params["w_out"] + params["b_out"])[..., 0]
+
+
+def attention_qvalues(params: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """Pointwise Q over ``(..., F)`` rows == the set scorer on singleton sets:
+    softmax over one key is the identity, so ``attn_out == v`` exactly (the
+    same seq-len-1 precedent as ``baselines.transformer_score``)."""
+    x = _attn_embed(params, feats)
+    return _attn_head(params, x, x @ params["wv"])
+
+
+def attention_score_set(params: dict, feats: jnp.ndarray,
+                        mode: Optional[str] = None) -> jnp.ndarray:
+    """(N, F) candidate set -> (N,) scores with one MHA mix over the node
+    axis, through the shared ``kernels.ops.flash_attention`` dispatch
+    (Pallas on TPU, the XLA online-attention twin elsewhere — the same
+    interpret-safe fallback story as ``sdqn_score``)."""
+    from repro.kernels import ops
+
+    x = _attn_embed(params, feats)                          # (N, d)
+    n, d = x.shape
+    hd = d // ATTN_HEADS
+
+    def heads(t):
+        return t.reshape(1, n, ATTN_HEADS, hd)              # (B=1, S=N, H, hd)
+
+    out = ops.flash_attention(heads(x @ params["wq"]), heads(x @ params["wk"]),
+                              heads(x @ params["wv"]), causal=False, mode=mode)
+    return _attn_head(params, x, out.reshape(n, d))
+
+
+ATTENTION = register(PolicySpec(
+    name="attention",
+    feature_dim=FEATURE_DIM,
+    embed_dim=0,
+    init=init_attention,
+    qvalues=attention_qvalues,
+    score_set=attention_score_set,
+    hyperparams=(("d_model", ATTN_DMODEL), ("heads", ATTN_HEADS)),
+))
+
+
+# ---------------------------------------------------------------------------
+# "mamba" — selective-state-space arrival-history encoder + MLP Q-head
+# ---------------------------------------------------------------------------
+
+MAMBA_DI = 8        # encoder inner channels
+MAMBA_STATE = 4     # SSM state size per channel
+MAMBA_DT_RANK = 2
+MAMBA_EMBED = 8     # history-embed width appended to afterstate rows
+MAMBA_HIDDEN = 32   # Q-head hidden width (Table 4)
+
+
+def init_mamba(key: jax.Array) -> dict:
+    di, n, r, e = MAMBA_DI, MAMBA_STATE, MAMBA_DT_RANK, MAMBA_EMBED
+    f = FEATURE_DIM + e
+    ks = jax.random.split(key, 6)
+
+    def dense(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) * (1.0 / fan_in) ** 0.5
+
+    return {
+        "enc": {
+            "in_proj": dense(ks[0], ENCODER_IN, (ENCODER_IN, di)),
+            "x_proj": dense(ks[1], di, (di, r + 2 * n)),
+            "dt_proj": dense(ks[2], r, (r, di)),
+            # softplus(dt_bias) ~ 0.05: a gentle default discretization step
+            "dt_bias": jnp.full((di,), jnp.log(jnp.expm1(0.05)), jnp.float32),
+            # S4D-real init: A = -(1..n) per channel
+            "A_log": jnp.broadcast_to(
+                jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), (di, n)
+            ) + jnp.zeros((di, n), jnp.float32),
+            "D": jnp.ones((di,), jnp.float32),
+            "out_proj": dense(ks[3], di, (di, e)),
+        },
+        "head": {
+            "w1": jax.random.normal(ks[4], (f, MAMBA_HIDDEN), jnp.float32)
+            * (2.0 / f) ** 0.5,
+            "b1": jnp.zeros((MAMBA_HIDDEN,), jnp.float32),
+            "w2": jax.random.normal(ks[5], (MAMBA_HIDDEN, 1), jnp.float32)
+            * (1.0 / MAMBA_HIDDEN) ** 0.5,
+            "b2": jnp.zeros((1,), jnp.float32),
+        },
+    }
+
+
+def mamba_qvalues(params: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """Q-head over ``(..., FEATURE_DIM + MAMBA_EMBED)`` rows."""
+    head = params["head"]
+    h = jax.nn.relu(feats @ head["w1"] + head["b1"])
+    return (h @ head["w2"] + head["b2"])[..., 0]
+
+
+def mamba_carry_init(params: dict) -> jnp.ndarray:
+    return jnp.zeros((MAMBA_DI, MAMBA_STATE), jnp.float32)
+
+
+def _mamba_ssm_params(enc: dict, x: jnp.ndarray):
+    """x: (..., di) -> (dt (..., di), b (..., n), c (..., n)), fp32."""
+    proj = x @ enc["x_proj"]
+    r, n = MAMBA_DT_RANK, MAMBA_STATE
+    dt_raw, b, c = (proj[..., :r], proj[..., r:r + n], proj[..., r + n:])
+    dt = jax.nn.softplus(dt_raw @ enc["dt_proj"] + enc["dt_bias"])
+    return dt, b, c
+
+
+def mamba_encode_step(params: dict, carry: jnp.ndarray,
+                      workload: jnp.ndarray):
+    """One arrival: ``(carry (di, n), workload (ENCODER_IN,)) ->
+    (new_carry, embed (MAMBA_EMBED,))`` — the ``models.mamba.decode_mamba``
+    recurrence (``h = exp(dt·a)·h + (dt·x)·B; y = h·C + x·D``) at O(1) per
+    step, jit-safe inside any scanned episode."""
+    enc = params["enc"]
+    x = jax.nn.silu(workload @ enc["in_proj"])              # (di,)
+    dt, b, c = _mamba_ssm_params(enc, x)
+    a = -jnp.exp(enc["A_log"])                              # (di, n)
+    da = jnp.exp(dt[:, None] * a)
+    h = da * carry + (dt * x)[:, None] * b[None, :]
+    y = h @ c + x * enc["D"]                                # (di,)
+    return h, jnp.tanh(y @ enc["out_proj"])
+
+
+def mamba_encode_sequence(params: dict, workloads: jnp.ndarray,
+                          h0: Optional[jnp.ndarray] = None,
+                          mode: Optional[str] = None):
+    """Batch re-encode a ``(T, ENCODER_IN)`` arrival history in one pass via
+    the chunked selective-scan kernel (``kernels.ops.mamba_scan``: Pallas on
+    TPU, the XLA associative-scan twin elsewhere).  Returns
+    ``(embeds (T, MAMBA_EMBED), h_final (di, n))`` — step-for-step equal to
+    folding ``mamba_encode_step`` (pinned in tests/test_policy.py)."""
+    from repro.kernels import ops
+
+    enc = params["enc"]
+    x = jax.nn.silu(workloads @ enc["in_proj"])[None]       # (1, T, di)
+    dt, b, c = _mamba_ssm_params(enc, x)
+    a = -jnp.exp(enc["A_log"])
+    if h0 is None:
+        h0 = mamba_carry_init(params)
+    y, h_final = ops.mamba_scan(x, dt.astype(jnp.float32), a,
+                                b.astype(jnp.float32), c.astype(jnp.float32),
+                                enc["D"], h0[None], mode=mode)
+    return jnp.tanh(y[0] @ enc["out_proj"]), h_final[0]
+
+
+MAMBA = register(PolicySpec(
+    name="mamba",
+    feature_dim=FEATURE_DIM + MAMBA_EMBED,
+    embed_dim=MAMBA_EMBED,
+    init=init_mamba,
+    qvalues=mamba_qvalues,
+    score_set=mamba_qvalues,     # pointwise head; context lives in the embed
+    encode_step=mamba_encode_step,
+    carry_init=mamba_carry_init,
+    hyperparams=(("d_inner", MAMBA_DI), ("ssm_state", MAMBA_STATE),
+                 ("dt_rank", MAMBA_DT_RANK), ("embed", MAMBA_EMBED),
+                 ("hidden", MAMBA_HIDDEN)),
+))
+
+
+# ---------------------------------------------------------------------------
+# versioned policy checkpoints (legacy-MLP fallback for old manifests)
+# ---------------------------------------------------------------------------
+
+POLICY_CKPT_VERSION = 1
+
+
+def checkpoint_metadata(spec: PolicySpec) -> dict:
+    return {
+        "policy_ckpt_version": POLICY_CKPT_VERSION,
+        "policy": spec.name,
+        "feature_dim": spec.feature_dim,
+        "hyperparams": dict(spec.hyperparams),
+    }
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params,
+                    spec: PolicySpec, extra: Optional[dict] = None) -> str:
+    """``ckpt.save`` with the versioned policy metadata record attached, so
+    any variant restores without the caller knowing its class up front."""
+    from repro.checkpoint import ckpt
+
+    meta = dict(extra or {})
+    meta.update(checkpoint_metadata(spec))
+    return ckpt.save(ckpt_dir, step, params, extra=meta)
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
+                       default_policy: str = "mlp"):
+    """Restore ``(params, spec)`` from a checkpoint directory.
+
+    The manifest's policy record picks the spec; manifests written before
+    the record existed (any pre-registry trainer run) fall back to
+    ``default_policy`` — the legacy-MLP path, so old checkpoints and
+    ``--qnet-path`` keep loading.
+    """
+    from repro.checkpoint import ckpt
+
+    meta = ckpt.read_extra(ckpt_dir, step=step)
+    spec = get(meta.get("policy", default_policy))
+    template = jax.eval_shape(lambda: spec.init(jax.random.PRNGKey(0)))
+    return ckpt.restore(ckpt_dir, template, step=step), spec

@@ -23,6 +23,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import FEATURE_DIM
+
 
 class Replay(NamedTuple):
     data: jnp.ndarray      # (n_slots, lane, n_features + 2): [feats|target|weight]
@@ -56,8 +58,13 @@ class Replay(NamedTuple):
         return self.data.reshape(self.capacity, -1)[:, self.n_features + 1]
 
 
-def replay_init(capacity: int, n_features: int = 6, lane: int = 1) -> Replay:
+def replay_init(capacity: int, n_features: int = FEATURE_DIM,
+                lane: int = 1) -> Replay:
     """Empty ring of ``capacity`` transitions.
+
+    ``n_features`` defaults to the canonical afterstate width
+    (``types.FEATURE_DIM``); sequence policy classes pass their wider
+    ``PolicySpec.feature_dim`` (afterstate + history embed) instead.
 
     ``lane`` is the fixed add width (``n_envs`` for the training loop): it
     must divide ``capacity`` so the ring is a whole number of slots, and

@@ -45,7 +45,8 @@ def masked_argmax(key: jax.Array, scores: jnp.ndarray, ok: jnp.ndarray,
 
 def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
                       cfg: EnvConfig, score_fn=None,
-                      fused: bool | str = "auto") -> jnp.ndarray:
+                      fused: bool | str = "auto", policy=None,
+                      embed=None) -> jnp.ndarray:
     """(N,) scores: Q(afterstate_i) for each candidate node i.
 
     This is the ONE scoring dispatch the trainer, the serving daemon, the
@@ -62,13 +63,23 @@ def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
         correctness sweeps on CPU);
       * ``False`` — force the unfused jnp path.
 
-    Custom ``score_fn``s (LSTM/Transformer baselines) always take the jnp
-    path — they cannot be fused into the afterstate kernel.
+    ``policy`` (a ``core.policy.PolicySpec``) swaps the scorer for a
+    registered policy class: candidates are scored through
+    ``policy.score_set`` over the whole (N, F) set, with ``embed`` (the
+    policy's history embedding, for ``embed_dim > 0`` specs) appended to
+    every row.  Fused-capable specs ("mlp") keep the kernel path; every
+    other spec — like a custom ``score_fn`` (LSTM/Transformer baselines) —
+    always takes the jnp path, since it cannot be fused into the afterstate
+    kernel.
     """
-    if score_fn is not None and fused in (True, "interpret"):
-        raise ValueError("custom score_fn cannot take the fused kernel path")
+    if score_fn is not None and policy is not None:
+        raise ValueError("pass either score_fn or policy, not both")
+    fusable = score_fn is None and (policy is None or policy.fused_kernel)
+    if fused in (True, "interpret") and not fusable:
+        raise ValueError("custom score_fn / non-fusable policy cannot take "
+                         "the fused kernel path")
     use_fused = fused in (True, "interpret") or (
-        fused == "auto" and score_fn is None
+        fused == "auto" and fusable
         and state.n_nodes >= FUSED_SCORE_MIN_NODES)
     if use_fused:
         from repro.kernels import ops
@@ -76,13 +87,21 @@ def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
         mode = "interpret" if fused == "interpret" else None
         return ops.sdqn_score_afterstate(state, pod, cfg, qparams, mode=mode)
     after = kenv.hypothetical_place(state, pod, cfg)        # (N, 6) raw
+    feats = kenv.normalize_features(after)
+    if policy is not None:
+        if embed is not None:
+            feats = jnp.concatenate(
+                [feats, jnp.broadcast_to(embed, feats.shape[:-1] + embed.shape)],
+                axis=-1)
+        return policy.score_set(qparams, feats)
     fn = score_fn or dqn.qvalues
-    return fn(qparams, kenv.normalize_features(after))
+    return fn(qparams, feats)
 
 
 def score_afterstates_batch(qparams: dict, state: ClusterState, pods: PodSpec,
                             cfg: EnvConfig, score_fn=None,
-                            fused: bool | str = "auto") -> jnp.ndarray:
+                            fused: bool | str = "auto",
+                            policy=None) -> jnp.ndarray:
     """(B, N) scores for a *batch* of candidate pods against one snapshot.
 
     ``pods`` is a ``PodSpec`` whose fields carry a leading batch dim (B,).
@@ -91,7 +110,8 @@ def score_afterstates_batch(qparams: dict, state: ClusterState, pods: PodSpec,
     serving daemon's batched scoring pass (``sched.daemon``).
     """
     return jax.vmap(
-        lambda p: score_afterstates(qparams, state, p, cfg, score_fn, fused)
+        lambda p: score_afterstates(qparams, state, p, cfg, score_fn, fused,
+                                    policy=policy)
     )(pods)
 
 
@@ -108,6 +128,40 @@ def make_sdqn_selector(qparams: dict, cfg: EnvConfig, epsilon: float = 0.0,
 # SDQN-n uses the same scoring machinery; consolidation comes from the reward
 # the network was trained on (Table 5), not from a different selector.
 make_sdqn_n_selector = make_sdqn_selector
+
+
+def make_policy_selector(spec, params: dict, cfg: EnvConfig,
+                         epsilon: float = 0.0):
+    """Episode selector for any registered policy class.
+
+    Returns ``(select, carry0)``:
+
+      * stateless specs (``embed_dim == 0``, or ``spec is None`` = the
+        default Table-4 net): ``select(key, state, pod) -> node`` and
+        ``carry0 is None`` — drop-in for ``env.run_episode``;
+      * sequence specs: ``select(key, state, pod, carry) -> (node, carry)``
+        plus the initial carry — pass both to ``env.run_episode`` via
+        ``select_carry`` so the history threads through the scanned episode.
+    """
+    if spec is None or spec.embed_dim == 0:
+
+        def select(key, state, pod):
+            ok = kenv.feasible(state, pod, cfg)
+            q = score_afterstates(params, state, pod, cfg, policy=spec)
+            return masked_argmax(key, q, ok, epsilon)
+
+        return select, None
+
+    from repro.core import policy as policy_mod
+
+    def select(key, state, pod, carry):
+        carry2, emb = spec.encode_step(
+            params, carry, policy_mod.pod_workload_features(pod))
+        ok = kenv.feasible(state, pod, cfg)
+        q = score_afterstates(params, state, pod, cfg, policy=spec, embed=emb)
+        return masked_argmax(key, q, ok, epsilon), carry2
+
+    return select, spec.carry_init(params)
 
 
 def make_neural_selector(params: dict, score_fn, cfg: EnvConfig) -> Callable:

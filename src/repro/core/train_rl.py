@@ -44,7 +44,8 @@ from typing import Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import dqn, env as kenv, rewards, schedulers
+from repro.core import dqn, env as kenv, policy as policy_mod, rewards, \
+    schedulers
 from repro.core.replay import Replay, replay_add, replay_init, replay_sample
 from repro.core.schedulers import masked_argmax
 from repro.core.types import EnvConfig
@@ -79,6 +80,12 @@ class RLConfig:
     # activates (rewards.energy_term); 0 = off.  Pair with churn scenarios so
     # the policy sees nodes actually emptying out over an episode.
     energy_weight: float = 0.0
+    # policy class (core.policy registry): "mlp" is the paper's Table-4 net
+    # and reproduces the pre-registry trainer bit-for-bit; "attention" /
+    # "mamba" train through the identical loop (sequence specs thread their
+    # arrival-history carry through the scanned episode and store wider
+    # [afterstate | embed] replay rows).
+    policy: str = "mlp"
 
 
 class TrainCarry(NamedTuple):
@@ -123,19 +130,31 @@ def transition_step(key, select, env_state, pod, dt_s, env_cfg: EnvConfig,
 
 
 def _transition(key, qparams, env_state, pod, dt_s, env_cfg: EnvConfig,
-                epsilon, reward_fn):
+                epsilon, reward_fn, spec=None, embed=None):
     """One RL pod arrival: epsilon-greedy over ``schedulers.score_afterstates``
-    (the shared fused-kernel dispatch) + the common transition body."""
+    (the shared fused-kernel dispatch) + the common transition body.
+
+    ``spec``/``embed`` route scoring through a registered policy class
+    (``core.policy``); sequence specs append their history ``embed`` to the
+    stored replay row.  The defaults reproduce the pre-registry MLP trainer
+    exactly (pinned in tests/test_train_engine.py).
+    """
 
     def select(k, st, p):
         ok = kenv.feasible(st, p, env_cfg)
-        q = schedulers.score_afterstates(qparams, st, p, env_cfg)
+        q = schedulers.score_afterstates(qparams, st, p, env_cfg,
+                                         policy=spec, embed=embed)
         return masked_argmax(k, q, ok, epsilon)
 
-    return transition_step(key, select, env_state, pod, dt_s, env_cfg, reward_fn)
+    new_state, stored, r, action = transition_step(
+        key, select, env_state, pod, dt_s, env_cfg, reward_fn)
+    if embed is not None:
+        stored = jnp.concatenate([stored, embed])
+    return new_state, stored, r, action
 
 
-def _bootstrap_bonus(online_params, target_params, env_state, pod, env_cfg, rl: RLConfig):
+def _bootstrap_bonus(online_params, target_params, env_state, pod, env_cfg,
+                     rl: RLConfig, spec=None, embed=None):
     """Double-DQN bonus: gamma * Q_target(s', argmax_a Q_online(s', a)).
 
     0 when s' has no feasible action (terminal for this workload burst).
@@ -143,14 +162,21 @@ def _bootstrap_bonus(online_params, target_params, env_state, pod, env_cfg, rl: 
     avoids the max-operator over-estimation of rarely-visited states — e.g.
     cold-pull afterstates that look mid-band attractive.  Scoring goes
     through the fused dispatch; only the argmax afterstate is gathered for
-    the target net (one (6,) row, not the (N, 6) matrix).
+    the target net (one (6,) row, not the (N, 6) matrix).  For sequence
+    policy classes ``embed`` is the history embedding AT the next arrival
+    (the online carry stepped by the next pod's workload), appended to the
+    target row exactly as stored transitions are.
     """
     ok = kenv.feasible(env_state, pod, env_cfg)
-    q_online = schedulers.score_afterstates(online_params, env_state, pod, env_cfg)
+    q_online = schedulers.score_afterstates(online_params, env_state, pod,
+                                            env_cfg, policy=spec, embed=embed)
     a_star = jnp.argmax(jnp.where(ok, q_online, -jnp.inf))
     after_star = kenv.normalize_features(
         kenv.hypothetical_place_one(env_state, pod, env_cfg, a_star))
-    q_tgt = dqn.qvalues(target_params, after_star)
+    if embed is not None:
+        after_star = jnp.concatenate([after_star, embed])
+    qfn = dqn.qvalues if spec is None else spec.qvalues
+    q_tgt = qfn(target_params, after_star)
     return jnp.where(jnp.any(ok), rl.gamma * q_tgt, 0.0)
 
 
@@ -189,6 +215,13 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
     reward_fn = rewards.make_reward_fn(rl.variant, rl.consolidation_n,
                                        rl.efficiency_weight, rl.energy_weight)
     shard = _env_constraint(mesh, rl.n_envs)
+    spec = policy_mod.get(rl.policy)
+    # Python-level static: sequence specs (embed_dim > 0) thread per-env
+    # encoder carries through the pod scan; stateless specs thread an empty
+    # pytree, which adds no arrays — the "mlp" trace is byte-identical to the
+    # pre-registry trainer.
+    seq = spec.embed_dim > 0
+    step_fn = policy_mod.make_train_step(spec)
 
     def epsilon_at(step):
         frac = step.astype(jnp.float32) / max(n_steps_total, 1)
@@ -220,19 +253,42 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
         use_ledger = kenv.has_lifecycle(env_cfg)
         ledgers = jax.vmap(lambda _: kenv.ledger_init(
             rl.pods_per_episode if use_ledger else 1))(jnp.arange(rl.n_envs))
+        # per-env arrival-history carries (fresh each episode, like the env
+        # reset); () for stateless specs keeps the scan signature unchanged
+        if seq:
+            carries0 = jax.tree.map(
+                lambda z: jnp.zeros((rl.n_envs,) + z.shape, z.dtype),
+                spec.carry_init(carry.params))
+        else:
+            carries0 = ()
 
         def pod_step(inner, xs):
             t, pod_t, pod_next_t, dt_row, life_row = xs
-            c, env_states, ledgers = inner
+            c, env_states, ledgers, carries = inner
             kt = jax.random.fold_in(k_steps, t)
             step_no = ep_idx * rl.pods_per_episode + t
             eps = epsilon_at(step_no)
             keys = jax.random.split(kt, rl.n_envs + 2)
             expiry = env_states.time_s + life_row  # pods start at bind time
-            new_states, stored, r, actions = jax.vmap(
-                lambda kk, st, pod, dt: _transition(
-                    kk, c.params, st, pod, dt, env_cfg, eps, reward_fn)
-            )(keys[: rl.n_envs], env_states, pod_t, dt_row)
+            if seq:
+                # advance every env's history with this arrival's workload;
+                # the resulting embedding conditions both scoring and the
+                # stored replay row (wide [afterstate | embed] features)
+                wf = jax.vmap(policy_mod.pod_workload_features)(pod_t)
+                carries, embeds = jax.vmap(
+                    spec.encode_step, in_axes=(None, 0, 0)
+                )(c.params, carries, wf)
+                new_states, stored, r, actions = jax.vmap(
+                    lambda kk, st, pod, dt, emb: _transition(
+                        kk, c.params, st, pod, dt, env_cfg, eps, reward_fn,
+                        spec=spec, embed=emb)
+                )(keys[: rl.n_envs], env_states, pod_t, dt_row, embeds)
+            else:
+                new_states, stored, r, actions = jax.vmap(
+                    lambda kk, st, pod, dt: _transition(
+                        kk, c.params, st, pod, dt, env_cfg, eps, reward_fn,
+                        spec=spec)
+                )(keys[: rl.n_envs], env_states, pod_t, dt_row)
             if use_ledger:
                 ledgers = jax.vmap(
                     lambda led, a, e, pod: kenv.ledger_record(led, t, a, e, pod)
@@ -243,10 +299,25 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
 
             targets = r
             if rl.bootstrap:
-                bonus = jax.vmap(
-                    lambda st, pod: _bootstrap_bonus(
-                        c.params, c.target_params, st, pod, env_cfg, rl)
-                )(new_states, pod_next_t)
+                if seq:
+                    # peek the next arrival's embedding (carry stepped but NOT
+                    # committed — the real advance happens next iteration)
+                    wf_next = jax.vmap(policy_mod.pod_workload_features)(
+                        pod_next_t)
+                    _, embeds_next = jax.vmap(
+                        spec.encode_step, in_axes=(None, 0, 0)
+                    )(c.params, carries, wf_next)
+                    bonus = jax.vmap(
+                        lambda st, pod, emb: _bootstrap_bonus(
+                            c.params, c.target_params, st, pod, env_cfg, rl,
+                            spec=spec, embed=emb)
+                    )(new_states, pod_next_t, embeds_next)
+                else:
+                    bonus = jax.vmap(
+                        lambda st, pod: _bootstrap_bonus(
+                            c.params, c.target_params, st, pod, env_cfg, rl,
+                            spec=spec)
+                    )(new_states, pod_next_t)
                 targets = r + jnp.where(t + 1 < rl.pods_per_episode, bonus, 0.0)
 
             # dropped arrivals (all-infeasible burst) store with weight 0:
@@ -254,7 +325,7 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
             buf = replay_add(c.buffer, stored, targets,
                              (actions >= 0).astype(jnp.float32))
             feats_b, targets_b, w = replay_sample(buf, keys[-1], rl.batch_size)
-            params_, opt_, loss, _ = dqn.train_step(c.params, c.opt_state, feats_b, targets_b, w)
+            params_, opt_, loss, _ = step_fn(c.params, c.opt_state, feats_b, targets_b, w)
 
             learn_step = c.learn_step + 1
             tgt = jax.tree.map(
@@ -265,10 +336,10 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
                 c.target_params,
             )
             c = TrainCarry(params_, opt_, tgt, buf, c.key, learn_step)
-            return (c, new_states, ledgers), (loss, jnp.mean(r))
+            return (c, new_states, ledgers, carries), (loss, jnp.mean(r))
 
-        (carry2, env_states, _), (losses, rews) = jax.lax.scan(
-            pod_step, (carry, env_states, ledgers),
+        (carry2, env_states, _, _), (losses, rews) = jax.lax.scan(
+            pod_step, (carry, env_states, ledgers, carries0),
             (jnp.arange(rl.pods_per_episode), pods_t, pods_next_t, dt_t, life_t),
         )
         metric = jax.vmap(lambda st: kenv.average_cpu_utilization(st, env_cfg))(env_states)
@@ -283,12 +354,15 @@ def _make_episode_fn(env_cfg: EnvConfig, rl: RLConfig, n_steps_total: int,
 
 def _init_carry(key: jax.Array, rl: RLConfig) -> TrainCarry:
     k_init, k_train = jax.random.split(key)
-    params, opt_state = dqn.init_train_state(k_init)
-    # lane = the env batch: every in-loop add is one whole (n_envs, 6) row,
+    spec = policy_mod.get(rl.policy)
+    params, opt_state = policy_mod.init_train_state(spec, k_init)
+    # lane = the env batch: every in-loop add is one whole (n_envs, F) row,
     # so the ring write is a contiguous slice update, not a scatter (replay
-    # contents and sampling are identical either way — lane is layout only)
+    # contents and sampling are identical either way — lane is layout only).
+    # F = spec.feature_dim: sequence specs store [afterstate | embed] rows.
     lane = rl.n_envs if rl.buffer_capacity % rl.n_envs == 0 else 1
-    buffer = replay_init(rl.buffer_capacity, lane=lane)
+    buffer = replay_init(rl.buffer_capacity, n_features=spec.feature_dim,
+                         lane=lane)
     # the target net starts equal to the online net but must own its buffers:
     # the TrainCarry is donated across jitted segments, and XLA refuses to
     # donate the same buffer twice

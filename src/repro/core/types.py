@@ -13,6 +13,13 @@ import jax.numpy as jnp
 # treats it as a no-op bind and episode accounting counts it as a drop.
 NO_PLACEMENT = -1
 
+# Width of the Table-2 afterstate feature row.  This is THE canonical
+# definition: ``env.FEATURE_SCALE``, the replay ring's row layout, the MLP
+# Q-net's input width and the fused kernels all derive from it (policy
+# classes with history embeddings store ``FEATURE_DIM + embed_dim`` rows —
+# see ``core.policy.PolicySpec.feature_dim``).
+FEATURE_DIM = 6
+
 
 class ClusterState(NamedTuple):
     """Vectorized node state. All arrays have leading dim N (nodes).

@@ -62,12 +62,26 @@ def _default_n_pods(env_cfg: EnvConfig, n_pods: Optional[int]) -> int:
     return env_cfg.scenario.n_pods if env_cfg.scenario is not None else 50
 
 
+def _split_carrying(select):
+    """Normalize a selector to ``(select, carry0)``.
+
+    Factories for sequence policy classes (``schedulers.make_policy_selector``)
+    return ``(select, carry0)`` pairs; plain selectors (and stateless-policy
+    pairs, whose carry is None) evaluate exactly as before.
+    """
+    if isinstance(select, tuple):
+        return select
+    return select, None
+
+
 def _trial_fn(env_cfg: EnvConfig, select: Callable, n: int,
               consolidate: Optional[Callable] = None) -> Callable:
     """The shared per-trial body: ``key -> TrialResults`` for one episode."""
+    select, carry0 = _split_carrying(select)
 
     def one(k):
-        res = kenv.run_episode(k, env_cfg, select, n, consolidate=consolidate)
+        res = kenv.run_episode(k, env_cfg, select, n, consolidate=consolidate,
+                               select_carry=carry0)
         state, dropped, stats = res.state, res.dropped, res.stats
         return TrialResults(
             metric=res.metric,
@@ -108,7 +122,9 @@ def make_param_evaluator(env_cfg: EnvConfig, selector_factory: Callable,
     ``selector_factory(params) -> (key, state, pod) -> action`` is rebuilt
     inside the trace, so policies with identical pytree structure (every
     seed of a training run) share one compilation instead of re-jitting
-    per candidate.
+    per candidate.  A factory may instead return a ``(select, carry0)``
+    pair (``schedulers.make_policy_selector``) — sequence policy classes
+    thread their history carry through each scanned episode.
     """
     n = _default_n_pods(env_cfg, n_pods)
 

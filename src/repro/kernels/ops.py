@@ -69,10 +69,25 @@ def mamba_scan(x, dt, a, bmat, cmat, d_skip, h0, *, mode: Optional[str] = None,
     return mamba.selective_scan(x, dt, a, bmat, cmat, d_skip, h0, chunk=chunk)
 
 
+def _mlp_weights(params):
+    """The fused SDQN kernels hardwire the Table-4 MLP over the canonical
+    ``types.FEATURE_DIM``-wide afterstate row; reject any other policy
+    class's params up front (wider sequence-policy rows must take the
+    unfused ``PolicySpec.score_set`` path, never the column kernels)."""
+    from repro.core.types import FEATURE_DIM
+
+    w1 = params["w1"]
+    if w1.shape[0] != FEATURE_DIM:
+        raise ValueError(
+            f"fused SDQN kernels score {FEATURE_DIM}-wide afterstate rows; "
+            f"got w1 input width {w1.shape[0]} (non-MLP policy params?)")
+    return w1, params["b1"], params["w2"], params["b2"]
+
+
 def sdqn_score(feats, params, *, mode: Optional[str] = None, block_n: int = 1024):
     """Score N nodes through the Table-4 Q-net. params: repro.core.dqn pytree."""
     mode = mode or _default_mode()
-    w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
+    w1, b1, w2, b2 = _mlp_weights(params)
     if mode == "pallas":
         return _ss.sdqn_score(feats, w1, b1, w2, b2, block_n=block_n)
     if mode == "interpret":
@@ -118,13 +133,13 @@ def sdqn_score_afterstate(state, pod, cfg, params, *, mode: Optional[str] = None
     scalars = scalars.at[_ss._S_CONT_COEFF].set(cfg.contention_coeff)
     scalars = scalars.at[_ss._S_UPTIME_SCALE].set(kenv.FEATURE_SCALE[4])
     scalars = scalars.at[_ss._S_EXP_SCALE].set(kenv.FEATURE_SCALE[5])
-    scalars = scalars.at[_ss._S_B2].set(jnp.reshape(params["b2"], ()))
+    w1, b1, w2, b2 = _mlp_weights(params)
+    scalars = scalars.at[_ss._S_B2].set(jnp.reshape(b2, ()))
 
     if mode == "xla":
-        return _ss.sdqn_score_afterstate_xla(cols, scalars, params["w1"],
-                                             params["b1"], params["w2"])
-    return _ss.sdqn_score_afterstate(cols, scalars, params["w1"], params["b1"],
-                                     params["w2"], block_n=block_n,
+        return _ss.sdqn_score_afterstate_xla(cols, scalars, w1, b1, w2)
+    return _ss.sdqn_score_afterstate(cols, scalars, w1, b1, w2,
+                                     block_n=block_n,
                                      interpret=(mode == "interpret"))
 
 
@@ -139,7 +154,7 @@ def sdqn_score_delta(cols, deltas, params, *, mode: Optional[str] = None,
     from repro.core import env as kenv
 
     mode = mode or ("pallas" if jax.default_backend() == "tpu" else "xla")
-    w1, b1, w2, b2 = params["w1"], params["b1"], params["w2"], params["b2"]
+    w1, b1, w2, b2 = _mlp_weights(params)
     if mode == "ref":
         feats = (jnp.stack(cols, axis=-1) + deltas[None, :]) / kenv.FEATURE_SCALE
         return ref.sdqn_score_ref(feats, w1, b1, w2, b2)

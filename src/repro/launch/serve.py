@@ -20,9 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import ckpt
 from repro.configs.base import get_config
-from repro.core import dqn
 from repro.models import model as mdl
 from repro.sched.daemon import DaemonConfig, FleetSubstrate, PlacementDaemon
 from repro.sched.placement import JobSpec, fresh_fleet
@@ -32,17 +30,33 @@ def sample_requests(key, n, vocab, prompt_len):
     return jax.random.randint(key, (n, prompt_len), 0, vocab)
 
 
-def load_qnet(path: str, key: jax.Array) -> dict:
-    """SDQN routing params: a ``repro.checkpoint`` directory (the trainer's
-    ``ckpt.save`` layout, latest step), a legacy flat ``.npz``, or a fresh
-    init when ``path`` is empty."""
-    init = dqn.init_qnet(key)
+def load_policy(path: str, key: jax.Array, policy: str = "mlp"):
+    """SDQN routing params + their policy class: ``(params, PolicySpec)``.
+
+    ``path`` is a ``repro.checkpoint`` directory (the trainer's ``ckpt.save``
+    layout, latest step), a legacy flat ``.npz`` (always the Table-4 MLP), or
+    empty for a fresh init of ``policy``.  Checkpoint directories carry their
+    policy class in the manifest (``core.policy.checkpoint_metadata``), so a
+    single ``--qnet-path`` restores ANY registered variant; pre-registry
+    checkpoints with no metadata fall back to ``policy``.
+    """
+    from repro.core import policy as policy_mod
+
     if not path:
-        return init
+        spec = policy_mod.get(policy)
+        return spec.init(key), spec
     if path.endswith(".npz"):
         loaded = np.load(path)
-        return {k: jnp.asarray(loaded[k]) for k in loaded.files}
-    return ckpt.restore(path, init)
+        return ({k: jnp.asarray(loaded[k]) for k in loaded.files},
+                policy_mod.get("mlp"))
+    return policy_mod.restore_checkpoint(path, default_policy=policy)
+
+
+def load_qnet(path: str, key: jax.Array) -> dict:
+    """Legacy entry point: just the params (MLP default).  Prefer
+    ``load_policy``, which also recovers the checkpoint's policy class."""
+    params, _ = load_policy(path, key)
+    return params
 
 
 def main(argv=None):
@@ -58,6 +72,10 @@ def main(argv=None):
     ap.add_argument("--qnet-path", default="",
                     help="trained SDQN params: repro.checkpoint dir or legacy "
                          "npz; fresh init if empty")
+    ap.add_argument("--policy", default="mlp",
+                    help="policy class (core.policy registry) when --qnet-path "
+                         "is empty or carries no policy metadata; checkpoint "
+                         "metadata wins otherwise")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -77,10 +95,11 @@ def main(argv=None):
 
     # SDQN routing across replicas, served by the placement daemon: waves are
     # submitted as requests, batch-scored in one launch, optimistically bound
-    qparams = load_qnet(args.qnet_path, jax.random.fold_in(key, 1))
+    qparams, qspec = load_policy(args.qnet_path, jax.random.fold_in(key, 1),
+                                 policy=args.policy)
     fleet = fresh_fleet(args.replicas, jax.random.fold_in(key, 2))
     waves = args.requests // args.wave_size
-    sub = FleetSubstrate(fleet)
+    sub = FleetSubstrate(fleet, policy=qspec)
     daemon = PlacementDaemon(
         sub, qparams,
         DaemonConfig(batch_size=max(min(waves, 8), 1), max_wait_s=0.0))
@@ -120,7 +139,8 @@ def main(argv=None):
     counts = np.bincount(np.asarray(placed, np.int64), minlength=args.replicas)
     print(f"[serve] {args.requests} requests, {generated} tokens in {dt:.1f}s "
           f"({generated / dt:.1f} tok/s)")
-    print(f"[serve] SDQN routing across replicas: {counts.tolist()} "
+    print(f"[serve] SDQN routing ({qspec.name}) across replicas: "
+          f"{counts.tolist()} "
           f"({daemon.metrics.batches} daemon batches, "
           f"{daemon.metrics.device_launches} scoring launches, "
           f"{daemon.metrics.conflicts} bind conflicts)")

@@ -65,25 +65,48 @@ def _fleet_mode(fused) -> Optional[str]:
                      f"got {fused!r}")
 
 
+def _fleet_policy_score(fleet: FleetState, delta: jnp.ndarray, params: dict,
+                        policy, embed=None) -> jnp.ndarray:
+    """FleetState scoring through a non-fusable policy class: assemble the
+    (N, 6) afterstate rows the column kernel would have built in-kernel,
+    append ``embed`` when the spec carries one, and hand the whole set to
+    ``policy.score_set``."""
+    from repro.core import env as kenv
+
+    feats = (jnp.stack(_placement.fleet_cols(fleet), axis=-1)
+             + delta[None, :]) / kenv.FEATURE_SCALE
+    if embed is not None:
+        feats = jnp.concatenate(
+            [feats, jnp.broadcast_to(embed, feats.shape[:-1] + embed.shape)],
+            axis=-1)
+    return policy.score_set(params, feats)
+
+
 def score(fleet: Fleet, pod: Workload, *, params: dict,
           cfg: Optional[EnvConfig] = None, fused="auto",
-          score_fn=None) -> jnp.ndarray:
+          score_fn=None, policy=None, embed=None) -> jnp.ndarray:
     """(N,) Q-scores of placing ``pod`` on each target in ``fleet``.
 
     See the module docstring for the dispatch rules.  ``score_fn`` swaps the
     Table-4 Q-net for a custom scorer (LSTM/Transformer baselines;
-    ClusterState substrate only, always the unfused path).
+    ClusterState substrate only, always the unfused path).  ``policy`` (a
+    ``core.policy.PolicySpec``) swaps in a registered policy class on either
+    substrate; ``embed`` is its history embedding for sequence specs.
     """
     if isinstance(fleet, ClusterState):
         if cfg is None:
             raise ValueError("cfg (EnvConfig) is required to score a "
                              "ClusterState fleet")
         return schedulers.score_afterstates(params, fleet, pod, cfg,
-                                            score_fn=score_fn, fused=fused)
+                                            score_fn=score_fn, fused=fused,
+                                            policy=policy, embed=embed)
     if isinstance(fleet, FleetState):
         if score_fn is not None:
             raise ValueError("score_fn is not supported on the FleetState "
                              "column-kernel path")
+        if policy is not None and not policy.fused_kernel:
+            return _fleet_policy_score(fleet, _placement.job_delta(pod),
+                                       params, policy, embed=embed)
         from repro.kernels import ops
 
         return ops.sdqn_score_delta(
@@ -94,7 +117,7 @@ def score(fleet: Fleet, pod: Workload, *, params: dict,
 
 def score_batch(fleet: Fleet, pods: Workload, *, params: dict,
                 cfg: Optional[EnvConfig] = None, fused="auto",
-                score_fn=None) -> jnp.ndarray:
+                score_fn=None, policy=None) -> jnp.ndarray:
     """(B, N) Q-scores for a batch of workloads against ONE fleet snapshot.
 
     ``pods``: a ``PodSpec`` with a leading (B,) batch dim on every field
@@ -108,11 +131,14 @@ def score_batch(fleet: Fleet, pods: Workload, *, params: dict,
                              "ClusterState fleet")
         return schedulers.score_afterstates_batch(params, fleet, pods, cfg,
                                                   score_fn=score_fn,
-                                                  fused=fused)
+                                                  fused=fused, policy=policy)
     if isinstance(fleet, FleetState):
+        deltas = jnp.stack([_placement.job_delta(j) for j in pods])
+        if policy is not None and not policy.fused_kernel:
+            return jnp.stack([_fleet_policy_score(fleet, d, params, policy)
+                              for d in deltas])
         from repro.kernels import ops
 
-        deltas = jnp.stack([_placement.job_delta(j) for j in pods])
         cols = _placement.fleet_cols(fleet)
         mode = _fleet_mode(fused)
         return jnp.stack([ops.sdqn_score_delta(cols, d, params, mode=mode)
@@ -122,7 +148,7 @@ def score_batch(fleet: Fleet, pods: Workload, *, params: dict,
 
 def select(fleet: Fleet, pod: Workload, *, params: dict,
            cfg: Optional[EnvConfig] = None, fused="auto",
-           score_fn=None) -> jnp.ndarray:
+           score_fn=None, policy=None) -> jnp.ndarray:
     """Greedy feasible argmax over ``score``; ``NO_PLACEMENT`` if none fit.
 
     The one-shot convenience wrapper (scores + k8s filtering phase in one
@@ -130,7 +156,7 @@ def select(fleet: Fleet, pod: Workload, *, params: dict,
     which batches requests and binds with optimistic concurrency.
     """
     q = score(fleet, pod, params=params, cfg=cfg, fused=fused,
-              score_fn=score_fn)
+              score_fn=score_fn, policy=policy)
     if isinstance(fleet, ClusterState):
         from repro.core import env as kenv
 

@@ -135,13 +135,23 @@ class ClusterSubstrate:
     """
 
     def __init__(self, state: ClusterState, cfg: EnvConfig,
-                 score_fn: Optional[Callable] = None):
+                 score_fn: Optional[Callable] = None, policy=None):
+        if score_fn is not None and policy is not None:
+            raise ValueError("pass either score_fn or policy, not both")
         self.cfg = cfg
         self.score_fn = score_fn
+        self.policy = policy
         self.live = jax.tree.map(lambda x: np.array(x), state)
 
     def snapshot(self) -> ClusterState:
         return jax.tree.map(jnp.asarray, self.live)
+
+    def init_carry(self, params: dict):
+        """The daemon-lifetime arrival-history carry: the policy's encoder
+        state over the submitted request stream (() for stateless specs)."""
+        if self.policy is not None and self.policy.embed_dim > 0:
+            return self.policy.carry_init(params)
+        return ()
 
     def pack(self, pods: Sequence[PodSpec], size: int) -> PodSpec:
         """Stack + pad a request batch to the static (size,) scoring shape."""
@@ -157,16 +167,54 @@ class ClusterSubstrate:
                        mem_demand=col(lambda p: p.mem_demand))
 
     def make_scorer(self, fused) -> Callable:
-        """Jitted ``(params, snapshot, pod_batch) -> (scores, feasible)``,
-        both (B, N): the whole batch in ONE device launch."""
-        cfg, score_fn = self.cfg, self.score_fn
+        """Jitted ``(params, snapshot, pod_batch, carry, n_real) ->
+        (scores, feasible, carry)``, scores/feasible (B, N): the whole batch
+        in ONE device launch.
+
+        The signature is uniform across policy classes so the daemon loop
+        never branches: stateless specs thread ``carry = ()`` untouched,
+        sequence specs advance their encoder carry *inside* the launch via a
+        ``lax.scan`` over the batch (requests encode in submission order).
+        ``n_real`` is a traced scalar — the ``< n_real`` pad mask means pad
+        rows are scored (static shape, one compilation at every fill level)
+        but never advance the history.  A conflicted request that re-queues
+        re-encodes on its next batch — the history sees it twice, which is
+        faithful to a kube scheduling queue (the pod really does arrive at
+        the scheduler again).
+        """
+        cfg, score_fn, policy = self.cfg, self.score_fn, self.policy
+
+        if policy is None or policy.embed_dim == 0:
+
+            @jax.jit
+            def score(params, snap, pods, carry, n_real):
+                q = schedulers.score_afterstates_batch(params, snap, pods,
+                                                       cfg, score_fn, fused,
+                                                       policy=policy)
+                ok = jax.vmap(lambda p: kenv.feasible(snap, p, cfg))(pods)
+                return q, ok, carry
+
+            return score
+
+        from repro.core import policy as policy_mod
 
         @jax.jit
-        def score(params, snap, pods):
-            q = schedulers.score_afterstates_batch(params, snap, pods, cfg,
-                                                   score_fn, fused)
-            ok = jax.vmap(lambda p: kenv.feasible(snap, p, cfg))(pods)
-            return q, ok
+        def score(params, snap, pods, carry, n_real):
+            def step(c, xs):
+                pod, is_real = xs
+                c2, emb = policy.encode_step(
+                    params, c, policy_mod.pod_workload_features(pod))
+                c2 = jax.tree.map(lambda a, b: jnp.where(is_real, a, b),
+                                  c2, c)
+                q = schedulers.score_afterstates(params, snap, pod, cfg,
+                                                 fused=fused, policy=policy,
+                                                 embed=emb)
+                return c2, (q, kenv.feasible(snap, pod, cfg))
+
+            n_b = jax.tree.leaves(pods)[0].shape[0]
+            is_real = jnp.arange(n_b) < n_real
+            carry2, (q, ok) = jax.lax.scan(step, carry, (pods, is_real))
+            return q, ok, carry2
 
         return score
 
@@ -210,9 +258,10 @@ class FleetSubstrate:
     """
 
     def __init__(self, fleet: _pl.FleetState,
-                 max_host_cpu_pct: float = 88.0):
+                 max_host_cpu_pct: float = 88.0, policy=None):
         self.live = jax.tree.map(lambda x: np.array(x, np.float64), fleet)
         self.max_host_cpu_pct = max_host_cpu_pct
+        self.policy = policy
 
     def snapshot(self) -> _pl.FleetState:
         return jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), self.live)
@@ -221,27 +270,88 @@ class FleetSubstrate:
         jobs = list(jobs) + [jobs[-1]] * (size - len(jobs))
         return jnp.stack([_pl.job_delta(j) for j in jobs])
 
+    def init_carry(self, params: dict):
+        if self.policy is not None and self.policy.embed_dim > 0:
+            return self.policy.carry_init(params)
+        return ()
+
     def make_scorer(self, fused) -> Callable:
+        """Same uniform ``(params, snap, deltas, carry, n_real) ->
+        (q, ok, carry)`` contract as ``ClusterSubstrate.make_scorer``.
+
+        Fused-capable specs (and the default ``policy=None``) keep the fused
+        column kernel; other policy classes score the assembled (N, 6) rows
+        through ``PolicySpec.score_set``.  Sequence specs feed their encoder
+        the job's normalized demand delta (the first ``ENCODER_IN`` entries
+        of ``delta / FEATURE_SCALE`` — the job-stream analogue of
+        ``pod_workload_features``).
+        """
         max_cpu = self.max_host_cpu_pct
+        policy = self.policy
+        if policy is not None and policy.fused_kernel:
+            policy = None          # "mlp": the column kernel IS its score_set
 
         from repro.kernels import ops
         from repro.sched.api import _fleet_mode
 
         mode = _fleet_mode(fused)
 
-        @jax.jit
-        def score(params, snap, deltas):
-            cols = _pl.fleet_cols(snap)
-            q = jax.vmap(lambda d: ops.sdqn_score_delta(
-                cols, d, params, mode=mode))(deltas)
-            ok = (
+        def feasible(snap, deltas):
+            return (
                 (snap.healthy > 0.5)[None, :]
                 & (snap.cpu_pct[None, :] + deltas[:, 0:1] <= max_cpu)
                 & (snap.mem_pct[None, :] + deltas[:, 1:2] <= 95.0)
                 & (snap.job_util_pct[None, :] + deltas[:, 2:3]
                    <= 100.0 + 1e-6)
             )
-            return q, ok
+
+        def afterstate_rows(snap, delta, embed=None):
+            feats = (jnp.stack(_pl.fleet_cols(snap), axis=-1)
+                     + delta[None, :]) / kenv.FEATURE_SCALE
+            if embed is not None:
+                feats = jnp.concatenate(
+                    [feats,
+                     jnp.broadcast_to(embed, feats.shape[:-1] + embed.shape)],
+                    axis=-1)
+            return feats
+
+        if policy is None:
+
+            @jax.jit
+            def score(params, snap, deltas, carry, n_real):
+                cols = _pl.fleet_cols(snap)
+                q = jax.vmap(lambda d: ops.sdqn_score_delta(
+                    cols, d, params, mode=mode))(deltas)
+                return q, feasible(snap, deltas), carry
+
+            return score
+
+        if policy.embed_dim == 0:
+
+            @jax.jit
+            def score(params, snap, deltas, carry, n_real):
+                q = jax.vmap(lambda d: policy.score_set(
+                    params, afterstate_rows(snap, d)))(deltas)
+                return q, feasible(snap, deltas), carry
+
+            return score
+
+        from repro.core.policy import ENCODER_IN
+
+        @jax.jit
+        def score(params, snap, deltas, carry, n_real):
+            def step(c, xs):
+                d, is_real = xs
+                wf = (d / kenv.FEATURE_SCALE)[:ENCODER_IN]
+                c2, emb = policy.encode_step(params, c, wf)
+                c2 = jax.tree.map(lambda a, b: jnp.where(is_real, a, b),
+                                  c2, c)
+                return c2, policy.score_set(
+                    params, afterstate_rows(snap, d, embed=emb))
+
+            is_real = jnp.arange(deltas.shape[0]) < n_real
+            carry2, q = jax.lax.scan(step, carry, (deltas, is_real))
+            return q, feasible(snap, deltas), carry2
 
         return score
 
@@ -288,6 +398,10 @@ class PlacementDaemon:
         self._clock = clock
         self._pending: collections.deque = collections.deque()
         self._scorer = substrate.make_scorer(config.fused)
+        # sequence policy classes carry their arrival-history encoder state
+        # across batches; stateless substrates (incl. ones predating
+        # init_carry) thread an empty pytree
+        self._carry = getattr(substrate, "init_carry", lambda p: ())(params)
         self._next_id = 0
         self.metrics = DaemonMetrics()
         self.decisions: List[Decision] = []
@@ -344,10 +458,15 @@ class PlacementDaemon:
         return done
 
     def warmup(self) -> None:
-        """Prime the scoring compilation outside any timing window."""
+        """Prime the scoring compilation outside any timing window.
+
+        ``n_real = 0``: every warmup row is a pad row, so a sequence
+        policy's history carry is untouched by warming up.
+        """
         snap = self._sub.snapshot()
         pods = self._sub.pack([self._dummy_pod()], self.config.batch_size)
-        jax.block_until_ready(self._scorer(self._params, snap, pods))
+        jax.block_until_ready(
+            self._scorer(self._params, snap, pods, self._carry, 0))
 
     def scorer_cache_size(self) -> int:
         """Compilations of the batched scorer (1 == every batch, at every
@@ -369,7 +488,8 @@ class PlacementDaemon:
         # live buffer keeps taking writes from here on
         snap = self._sub.snapshot()
         pods = self._sub.pack([r.pod for r in reqs], b)
-        scores, ok = self._scorer(self._params, snap, pods)  # ONE launch
+        scores, ok, self._carry = self._scorer(
+            self._params, snap, pods, self._carry, len(reqs))  # ONE launch
         self.metrics.device_launches += 1
         self.metrics.batches += 1
         scores = np.asarray(scores)

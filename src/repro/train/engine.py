@@ -39,7 +39,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import schedulers, train_rl
+from repro.core import policy as policy_mod, schedulers, train_rl
 from repro.core.types import EnvConfig
 from repro.eval import engine as eval_engine
 from repro.launch import mesh as meshmod
@@ -142,8 +142,13 @@ def train_and_select(
     ``(best_params, float(best_val_metric))``.
     """
     stacked, _ = train_seeds(key, train_cfg, rl, n_seeds, mesh=mesh)
+    # validation uses the same policy class that trained: the factory pair
+    # form threads sequence specs' history carry through each episode; for
+    # "mlp" it scores identically to make_sdqn_selector (same qvalues path)
+    spec = policy_mod.get(rl.policy)
     evaluator = eval_engine.make_multi_param_evaluator(
-        eval_cfg, lambda p: schedulers.make_sdqn_selector(p, eval_cfg), val_pods)
+        eval_cfg, lambda p: schedulers.make_policy_selector(spec, p, eval_cfg),
+        val_pods)
     val_keys = eval_engine.fixed_trial_keys(5000, val_trials)
     metrics = jnp.mean(evaluator(stacked, val_keys).metric, axis=1)   # (S,)
     best_params, best_metric, diverged = select_best(stacked, metrics)

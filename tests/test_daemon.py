@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import dqn, env as kenv, schedulers
+from repro.core import dqn, env as kenv, policy as policy_mod, schedulers
 from repro.core.types import (
     NO_PLACEMENT,
     EpisodeResult,
@@ -137,6 +137,45 @@ class TestOneLaunch:
     def test_fleet_substrate_one_compile(self, qparams):
         sub = FleetSubstrate(placement.fresh_fleet(8))
         d = PlacementDaemon(sub, qparams,
+                            DaemonConfig(batch_size=4, max_wait_s=1e9),
+                            clock=FakeClock())
+        d.warmup()
+        for _ in range(6):
+            d.submit(placement.JobSpec())
+        d.drain()
+        assert d.metrics.device_launches == d.metrics.batches == 2
+        assert d.scorer_cache_size() == 1
+
+    @pytest.mark.parametrize("policy", sorted(policy_mod.names()))
+    def test_cluster_one_launch_one_compile_per_policy_class(
+            self, state, policy):
+        """The one-launch / one-compile invariant must hold for EVERY
+        registered policy class: sequence specs advance their history carry
+        inside the single jitted launch, and the traced ``n_real`` pad mask
+        means fill levels 4/3/1 all reuse one executable."""
+        spec = policy_mod.get(policy)
+        params = spec.init(jax.random.PRNGKey(0))
+        sub = ClusterSubstrate(state, CFG, policy=spec)
+        d = PlacementDaemon(sub, params,
+                            DaemonConfig(batch_size=4, max_wait_s=1e9),
+                            clock=FakeClock())
+        d.warmup()
+        pod = kenv.default_pod(CFG)
+        for fill in (4, 3, 1):
+            for _ in range(fill):
+                d.submit(pod)
+            d.flush()
+        assert d.metrics.batches == 3
+        assert d.metrics.device_launches == d.metrics.batches
+        assert d.scorer_cache_size() == 1
+        assert d.metrics.bound + d.metrics.dropped == 8
+
+    @pytest.mark.parametrize("policy", sorted(policy_mod.names()))
+    def test_fleet_one_launch_one_compile_per_policy_class(self, policy):
+        spec = policy_mod.get(policy)
+        params = spec.init(jax.random.PRNGKey(0))
+        sub = FleetSubstrate(placement.fresh_fleet(8), policy=spec)
+        d = PlacementDaemon(sub, params,
                             DaemonConfig(batch_size=4, max_wait_s=1e9),
                             clock=FakeClock())
         d.warmup()

@@ -1,0 +1,288 @@
+"""Policy-class registry suite (``repro.core.policy``).
+
+Pins the PolicySpec contract across every layer it threads through:
+registry invariants; "mlp" bit-compatibility with the pre-registry
+``core.dqn`` paths (scoring AND the learner step); the attention scorer's
+singleton-set exactness (softmax over one key is the identity); the mamba
+step-vs-scan encoder parity; versioned checkpoint round-trips for all three
+policy classes plus the legacy-MLP manifest fallback; and the NO_PLACEMENT
+sentinel invariant — no registered policy ever places onto an infeasible
+node — as fixed cases and as a hypothesis property.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies as strat
+from repro.checkpoint import ckpt
+from repro.core import dqn, env as kenv, policy as policy_mod, schedulers, \
+    train_rl
+from repro.core.types import FEATURE_DIM, NO_PLACEMENT, paper_cluster
+
+CFG = paper_cluster()
+ALL_POLICIES = sorted(policy_mod.names())
+
+
+@pytest.fixture(scope="module")
+def state():
+    return kenv.reset(jax.random.PRNGKey(1), CFG)
+
+
+def _params(name, seed=0):
+    spec = policy_mod.get(name)
+    return spec, spec.init(jax.random.PRNGKey(seed))
+
+
+def _select_node(spec, params, key, state, pod):
+    """Run one selection through ``make_policy_selector``, whatever the
+    spec's carry protocol."""
+    select, carry0 = schedulers.make_policy_selector(spec, params, CFG)
+    if carry0 is None:
+        return select(key, state, pod)
+    node, _ = select(key, state, pod, carry0)
+    return node
+
+
+def _oversized_pod():
+    """Infeasible on every node of the paper cluster (requests >> capacity)."""
+    p = kenv.default_pod(CFG)
+    return p._replace(cpu_request=p.cpu_request * 1e6,
+                      mem_request=p.mem_request * 1e6)
+
+
+class TestRegistry:
+    def test_ships_all_three_policy_classes(self):
+        assert {"mlp", "attention", "mamba"} <= set(policy_mod.names())
+
+    def test_unknown_name_lists_registry(self):
+        with pytest.raises(KeyError, match="mlp"):
+            policy_mod.get("no-such-policy")
+
+    def test_sequence_spec_requires_encoder(self):
+        with pytest.raises(ValueError, match="no encoder"):
+            policy_mod.register(policy_mod.PolicySpec(
+                name="broken", feature_dim=8, embed_dim=2,
+                init=dqn.init_qnet, qvalues=dqn.qvalues,
+                score_set=dqn.qvalues))
+        assert "broken" not in policy_mod.names()
+
+    def test_feature_dims_are_base_plus_embed(self):
+        for name in ALL_POLICIES:
+            spec = policy_mod.get(name)
+            assert spec.feature_dim == FEATURE_DIM + spec.embed_dim
+
+    def test_only_mlp_is_fused_capable(self):
+        assert policy_mod.get("mlp").fused_kernel
+        assert not policy_mod.get("attention").fused_kernel
+        assert not policy_mod.get("mamba").fused_kernel
+
+
+class TestMlpBitCompat:
+    def test_scoring_identical_with_and_without_spec(self, state):
+        """``score_afterstates(policy=MLP)`` must be the EXACT pre-registry
+        computation — same function objects, same trace, zero drift."""
+        spec, params = _params("mlp")
+        pod = kenv.default_pod(CFG)
+        ref = schedulers.score_afterstates(params, state, pod, CFG)
+        got = schedulers.score_afterstates(params, state, pod, CFG,
+                                           policy=spec)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_spec_reuses_dqn_functions(self):
+        spec = policy_mod.get("mlp")
+        assert spec.init is dqn.init_qnet
+        assert spec.qvalues is dqn.qvalues
+
+    def test_generic_train_step_matches_dqn_train_step(self):
+        spec, params = _params("mlp")
+        _, opt_state = policy_mod.init_train_state(spec, jax.random.PRNGKey(0))
+        feats = jax.random.normal(jax.random.PRNGKey(2), (16, FEATURE_DIM))
+        targets = jax.random.normal(jax.random.PRNGKey(3), (16,))
+        w = jnp.ones((16,))
+        ref = dqn.train_step(params, opt_state, feats, targets, w)
+        got = policy_mod.make_train_step(spec)(params, opt_state, feats,
+                                               targets, w)
+        np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(ref[2]))
+        for got_leaf, ref_leaf in zip(jax.tree.leaves(got[0]),
+                                      jax.tree.leaves(ref[0])):
+            np.testing.assert_array_equal(np.asarray(got_leaf),
+                                          np.asarray(ref_leaf))
+
+
+class TestAttention:
+    def test_singleton_set_matches_pointwise_qvalues(self):
+        """softmax over one key == identity, so the set scorer on an N=1 set
+        must equal ``qvalues`` on the same row — the property that makes the
+        pointwise replay/learner path exact, not an approximation."""
+        spec, params = _params("attention")
+        row = jax.random.normal(jax.random.PRNGKey(4), (1, FEATURE_DIM))
+        set_q = spec.score_set(params, row)
+        point_q = spec.qvalues(params, row)
+        np.testing.assert_allclose(np.asarray(set_q), np.asarray(point_q),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_set_scoring_mixes_context(self):
+        """On a multi-node set, a change to node j's features must move node
+        i's score — the whole point of attending over the candidate set."""
+        spec, params = _params("attention")
+        feats = jax.random.normal(jax.random.PRNGKey(5), (4, FEATURE_DIM))
+        base = np.asarray(spec.score_set(params, feats))
+        bumped = np.asarray(spec.score_set(params, feats.at[3].add(2.0)))
+        assert abs(bumped[0] - base[0]) > 1e-7
+
+    def test_interpret_kernel_matches_xla_fallback(self):
+        spec, params = _params("attention")
+        feats = jax.random.normal(jax.random.PRNGKey(6), (4, FEATURE_DIM))
+        xla = policy_mod.attention_score_set(params, feats, mode="xla")
+        ref = policy_mod.attention_score_set(params, feats, mode="ref")
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestMambaEncoder:
+    def test_step_fold_matches_sequence_scan(self):
+        """Folding ``encode_step`` arrival-by-arrival must equal the one-shot
+        ``mamba_encode_sequence`` re-encode (the ``kernels.mamba_scan``
+        path) — embeds AND final carry."""
+        spec, params = _params("mamba")
+        t = 6
+        workloads = jax.random.uniform(jax.random.PRNGKey(7),
+                                       (t, policy_mod.ENCODER_IN))
+        carry = spec.carry_init(params)
+        stepped = []
+        for i in range(t):
+            carry, emb = spec.encode_step(params, carry, workloads[i])
+            stepped.append(emb)
+        embeds, h_final = policy_mod.mamba_encode_sequence(params, workloads)
+        np.testing.assert_allclose(np.asarray(embeds), np.asarray(stepped),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_final), np.asarray(carry),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_carry_shape_is_static(self):
+        spec, params = _params("mamba")
+        carry = spec.carry_init(params)
+        wf = jnp.zeros((policy_mod.ENCODER_IN,))
+        carry2, emb = spec.encode_step(params, carry, wf)
+        assert carry2.shape == carry.shape and carry2.dtype == carry.dtype
+        assert emb.shape == (spec.embed_dim,)
+
+    def test_history_conditions_scores(self, state):
+        """Two different arrival histories must score the same afterstates
+        differently — the sequence policy actually uses its memory."""
+        spec, params = _params("mamba")
+        pod = kenv.default_pod(CFG)
+        feats = kenv.normalize_features(
+            kenv.hypothetical_place(state, pod, CFG))
+        wf_a = jnp.full((policy_mod.ENCODER_IN,), 0.9)
+        wf_b = jnp.full((policy_mod.ENCODER_IN,), 0.1)
+        _, emb_a = spec.encode_step(params, spec.carry_init(params), wf_a)
+        _, emb_b = spec.encode_step(params, spec.carry_init(params), wf_b)
+        q_a = schedulers.score_afterstates(params, state, pod, CFG,
+                                           policy=spec, embed=emb_a)
+        q_b = schedulers.score_afterstates(params, state, pod, CFG,
+                                           policy=spec, embed=emb_b)
+        assert feats.shape[-1] == FEATURE_DIM
+        assert np.abs(np.asarray(q_a) - np.asarray(q_b)).max() > 1e-7
+
+
+class TestCheckpointRoundTrip:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_roundtrip_restores_params_and_spec(self, tmp_path, policy):
+        spec, params = _params(policy, seed=11)
+        policy_mod.save_checkpoint(str(tmp_path), 3, params, spec)
+        restored, got_spec = policy_mod.restore_checkpoint(str(tmp_path))
+        assert got_spec is spec
+        got_leaves, got_def = jax.tree.flatten(restored)
+        ref_leaves, ref_def = jax.tree.flatten(params)
+        assert got_def == ref_def
+        for got, ref in zip(got_leaves, ref_leaves):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_metadata_records_class_and_hyperparams(self, tmp_path, policy):
+        spec, params = _params(policy)
+        policy_mod.save_checkpoint(str(tmp_path), 0, params, spec)
+        meta = ckpt.read_extra(str(tmp_path))
+        assert meta["policy"] == policy
+        assert meta["feature_dim"] == spec.feature_dim
+        assert meta["hyperparams"] == dict(spec.hyperparams)
+        assert meta["policy_ckpt_version"] == policy_mod.POLICY_CKPT_VERSION
+
+    def test_legacy_manifest_falls_back_to_mlp(self, tmp_path):
+        """Checkpoints written by the pre-registry trainer (plain
+        ``ckpt.save``, no policy record) must keep restoring as the MLP."""
+        params = dqn.init_qnet(jax.random.PRNGKey(12))
+        ckpt.save(str(tmp_path), 0, params)
+        restored, spec = policy_mod.restore_checkpoint(str(tmp_path))
+        assert spec.name == "mlp"
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(restored[k]),
+                                          np.asarray(params[k]))
+
+    def test_serve_load_policy_recovers_variant(self, tmp_path):
+        from repro.launch import serve
+
+        spec, params = _params("mamba")
+        policy_mod.save_checkpoint(str(tmp_path), 0, params, spec)
+        loaded, got_spec = serve.load_policy(str(tmp_path),
+                                             jax.random.PRNGKey(0))
+        assert got_spec.name == "mamba"
+        assert jax.tree.structure(loaded) == jax.tree.structure(params)
+
+
+class TestTrainerIntegration:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_replay_row_width_follows_spec(self, policy):
+        spec = policy_mod.get(policy)
+        rl = train_rl.RLConfig(n_envs=2, buffer_capacity=64, policy=policy)
+        carry = train_rl._init_carry(jax.random.PRNGKey(0), rl)
+        assert carry.buffer.n_features == spec.feature_dim
+
+
+class TestNoPlacementSentinel:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_infeasible_burst_returns_sentinel(self, state, policy):
+        spec, params = _params(policy)
+        node = _select_node(spec, params, jax.random.PRNGKey(0), state,
+                            _oversized_pod())
+        assert int(node) == NO_PLACEMENT
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_feasible_pod_places_on_feasible_node(self, state, policy):
+        spec, params = _params(policy)
+        pod = kenv.default_pod(CFG)
+        node = _select_node(spec, params, jax.random.PRNGKey(0), state, pod)
+        ok = np.asarray(kenv.feasible(state, pod, CFG))
+        assert 0 <= int(node) < CFG.n_nodes
+        assert ok[int(node)]
+
+
+if strat.HAVE_HYPOTHESIS:
+    from hypothesis import given
+
+    @given(seed=strat.seeds(), policy=strat.st.sampled_from(ALL_POLICIES),
+           frac=strat.st.floats(0.05, 3.0, allow_nan=False,
+                                allow_infinity=False))
+    def test_property_never_places_infeasible(seed, policy, frac):
+        """For ANY pod size and ANY registered policy class, the selector
+        either returns a node the filtering phase admits or the
+        NO_PLACEMENT sentinel — an infeasible node never outranks the
+        sentinel path, whatever the Q-scores say."""
+        key = jax.random.PRNGKey(seed)
+        state = kenv.reset(key, CFG)
+        base = kenv.default_pod(CFG)
+        pod = base._replace(
+            cpu_request=base.cpu_request * frac * 20.0,
+            mem_request=base.mem_request * frac * 20.0)
+        spec, params = _params(policy, seed=seed % 7)
+        node = int(_select_node(spec, params, key, state, pod))
+        ok = np.asarray(kenv.feasible(state, pod, CFG))
+        if node == NO_PLACEMENT:
+            assert not ok.any()
+        else:
+            assert ok[node]
+else:  # pragma: no cover - exercised when the [test] extra is absent
+    def test_property_never_places_infeasible():
+        pytest.importorskip("hypothesis")

@@ -2,6 +2,7 @@
 loop, joint seed×env layout planning + mesh-constraint parity, fused in-loop
 afterstate scoring, NaN-guarded candidate selection, and replay-sampling
 regressions."""
+import dataclasses
 import json
 import os
 import subprocess
@@ -11,8 +12,10 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core import dqn, env as kenv, rewards, schedulers, train_rl
+from repro.core import dqn, env as kenv, policy as policy_mod, rewards, \
+    schedulers, train_rl
 from repro.core.replay import replay_add, replay_init, replay_sample
 from repro.core.types import fleet_cluster, paper_cluster, training_cluster
 from repro.eval import engine as eval_engine
@@ -48,6 +51,28 @@ class TestSeedParallel:
                 np.testing.assert_allclose(np.asarray(stacked[name][s]),
                                            np.asarray(leaf),
                                            atol=1e-6, rtol=1e-5, err_msg=name)
+            for m in ("loss", "reward", "avg_cpu"):
+                np.testing.assert_allclose(np.asarray(metrics[m][s]),
+                                           np.asarray(seqs[s][1][m]),
+                                           atol=1e-6, rtol=1e-5, err_msg=m)
+
+    @pytest.mark.parametrize("policy", sorted(policy_mod.names()))
+    def test_matches_sequential_per_seed_all_policy_classes(self, policy):
+        """Every registered policy class trains through the UNCHANGED
+        seed-parallel engine: one vmapped launch == the per-seed sequential
+        loop, whatever the params pytree looks like (nested for mamba)."""
+        rl = dataclasses.replace(RL, policy=policy, episodes=2)
+        key = jax.random.PRNGKey(5)
+        seqs = _train_sequential(key, 2, rl=rl)
+        stacked, metrics = engine.train_seeds(key, TCFG, rl, 2)
+        stacked_leaves, treedef = jax.tree.flatten(stacked)
+        for s in range(2):
+            seq_leaves, seq_def = jax.tree.flatten(seqs[s][0])
+            assert seq_def == treedef
+            for got, want in zip(stacked_leaves, seq_leaves):
+                np.testing.assert_allclose(np.asarray(got[s]),
+                                           np.asarray(want),
+                                           atol=1e-6, rtol=1e-5)
             for m in ("loss", "reward", "avg_cpu"):
                 np.testing.assert_allclose(np.asarray(metrics[m][s]),
                                            np.asarray(seqs[s][1][m]),
