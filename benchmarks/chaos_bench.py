@@ -1,0 +1,146 @@
+"""Chaos serving benchmark: placements/sec, p99, and lost-pod rate under
+mid-replay node failures — SDQN-with-fallback vs the kube heuristic.
+
+Sweeps an offered-rate x failure-count grid.  Each cell replays one scenario
+arrival trace through ``repro.sched.daemon`` while a deterministic chaos
+schedule fails (and later recovers) random nodes mid-replay; every failure
+evicts the node's bound pods through the daemon's health watchdog and
+auto-requeues them.  Two arms per cell:
+
+  * ``sdqn`` — the Q-net daemon with the full robustness stack on:
+    admission backpressure (``queue_cap``), conflict backoff
+    (``backoff_base_s``), and the per-batch scoring deadline with graceful
+    degradation to the kube heuristic (``score_deadline_s``).
+  * ``kube`` — ``heuristic_only=True``: every batch served by the
+    closed-form LeastRequested+Balanced scorer.  This arm doubles as the
+    degraded-mode floor — it is exactly what the sdqn arm degrades to.
+
+Rows (per arm A, rate R req/s, F injected failures):
+  * ``chaos_<A>_rate<R>_fail<F>_throughput`` — derived = requests/sec served
+  * ``chaos_<A>_rate<R>_fail<F>_p99_ms``     — decision latency p99
+  * ``chaos_<A>_rate<R>_fail<F>_lost_ratio`` — (dropped + shed) / submitted
+  * ``chaos_<A>_rate<R>_fail<F>_evictions``  — pods evicted off failed nodes
+plus ``chaos_degraded_throughput`` — the kube arm's zero-failure throughput
+at the base rate, the committed degraded-mode serving floor.
+
+CI gates (see ``check_smoke --chaos``): every ``*_lost_ratio`` row against
+the committed baseline with ABSOLUTE slack (lost ratios are legitimately 0.0
+in calm cells, so relative tolerance is meaningless), and
+``chaos_degraded_throughput`` as a ``--throughput-row`` floor.
+
+    PYTHONPATH=src python -m benchmarks.run --chaos-smoke --json out.json
+    PYTHONPATH=src python -m benchmarks.run --chaos            # nightly grid
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import dqn, env as kenv
+from repro.core.types import fleet_cluster
+from repro.scenarios import arrival_trace
+from repro.sched.daemon import (
+    ClusterSubstrate,
+    DaemonConfig,
+    PlacementDaemon,
+    replay_trace,
+)
+
+# Full (nightly) grid; the smoke grid is a single-rate subset sized for the
+# CI container.  Failure counts are absolute (injected per replay) rather
+# than rates — a replay lasts under a second, so a per-second rate would
+# round to zero events and the chaos path would never run.
+RATES_PER_S = (500.0, 2000.0)
+FAILURES = (0, 8, 32)
+MTTR_FRAC = 0.2            # node comes back after 20% of the replay window
+
+ARM_CONFIGS = {
+    "sdqn": dict(score_deadline_s=0.25, degrade_batches=4,
+                 queue_cap=256, backoff_base_s=0.0005),
+    "kube": dict(heuristic_only=True, queue_cap=256),
+}
+
+
+def chaos_events(seed: int, n_nodes: int, n_failures: int,
+                 duration_s: float) -> List[Tuple[float, str, int]]:
+    """Deterministic fail/recover schedule: ``n_failures`` distinct nodes go
+    down at times spread through the middle of the replay window, each
+    recovering ``MTTR_FRAC * duration_s`` later (possibly after the replay —
+    ``replay_trace`` applies leftovers before the final drain)."""
+    rng = np.random.default_rng(seed)
+    nodes = rng.choice(n_nodes, size=min(n_failures, n_nodes), replace=False)
+    events: List[Tuple[float, str, int]] = []
+    for node in nodes:
+        t = float(rng.uniform(0.1, 0.9) * duration_s)
+        events.append((t, "fail", int(node)))
+        events.append((t + MTTR_FRAC * duration_s, "recover", int(node)))
+    return sorted(events)
+
+
+def _serve_cell(arm: str, rate: float, n_failures: int, n_nodes: int,
+                n_requests: int, batch_size: int,
+                max_wait_s: float) -> List[Tuple[str, float, float]]:
+    qparams = dqn.init_qnet(jax.random.PRNGKey(0))
+    cfg = fleet_cluster(n_nodes)
+    state = kenv.reset(jax.random.PRNGKey(1), cfg)
+    sub = ClusterSubstrate(state, cfg)
+    daemon = PlacementDaemon(
+        sub, qparams,
+        DaemonConfig(batch_size=batch_size, max_wait_s=max_wait_s,
+                     **ARM_CONFIGS[arm]))
+    if arm != "kube":
+        daemon.warmup()          # compile outside the timing window
+    trace = arrival_trace(jax.random.PRNGKey(2), cfg, n_requests,
+                          rate_per_s=rate)
+    duration = n_requests / rate
+    events = chaos_events(seed=7 * n_failures + 3, n_nodes=n_nodes,
+                          n_failures=n_failures, duration_s=duration)
+    dur = replay_trace(daemon, trace.t_s, trace.pods, events=events)
+    m = daemon.metrics
+    assert m.bound + m.dropped + m.shed == m.submitted, \
+        "request accounting broken: every submit must resolve exactly once"
+    assert len(daemon.decisions) == m.submitted
+    tag = f"chaos_{arm}_rate{int(rate)}_fail{n_failures}"
+    return [
+        (f"{tag}_throughput", dur / n_requests * 1e6, n_requests / dur),
+        (f"{tag}_p99_ms", 0.0, m.latencies_s.p99() * 1e3),
+        (f"{tag}_lost_ratio", 0.0, (m.dropped + m.shed) / m.submitted),
+        (f"{tag}_evictions", 0.0, float(m.evictions)),
+    ]
+
+
+def grid_rows(rates: Sequence[float], failures: Sequence[int],
+              n_nodes: int = 64, n_requests: int = 400,
+              batch_size: int = 32,
+              max_wait_s: float = 0.005) -> List[Tuple[str, float, float]]:
+    rows: List[Tuple[str, float, float]] = []
+    for rate in rates:
+        for n_fail in failures:
+            for arm in ARM_CONFIGS:
+                rows += _serve_cell(arm, rate, n_fail, n_nodes, n_requests,
+                                    batch_size, max_wait_s)
+    # the committed degraded-mode serving floor: kube-heuristic throughput
+    # at the base rate with no chaos (what a fully degraded daemon sustains)
+    base = f"chaos_kube_rate{int(rates[0])}_fail0_throughput"
+    floor = next(r for r in rows if r[0] == base)
+    rows.append(("chaos_degraded_throughput", floor[1], floor[2]))
+    return rows
+
+
+def rows() -> List[Tuple[str, float, float]]:
+    """The full nightly grid."""
+    return grid_rows(RATES_PER_S, FAILURES)
+
+
+def smoke_rows() -> List[Tuple[str, float, float]]:
+    """CI-sized grid: one rate, calm + stormy cells (the sizing
+    ``benchmarks/baseline_chaos.json`` is gated at)."""
+    return grid_rows(rates=(500.0,), failures=(0, 8), n_requests=300)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in smoke_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -29,6 +29,14 @@ committed baseline — no policy class silently stops beating the default
 scheduler.  Pair it with ``--throughput-row policy_train_step_<class>`` to
 also floor each class's learner-step rate.
 
+``--chaos`` gates the fault-tolerance story: every ``chaos_*_lost_ratio``
+row (``benchmarks.run --chaos-smoke``) must stay within ``chaos_slack`` of
+the committed baseline — *absolute* slack, because a calm cell's baseline
+lost ratio is legitimately 0.0 and a relative tolerance would degenerate to
+an exact-zero gate.  Pair it with ``--throughput-row
+chaos_degraded_throughput`` to also floor the degraded-mode (kube-heuristic)
+serving rate.
+
 ``--throughput-row NAME`` (repeatable) additionally gates that row's
 ``derived`` column (a rate: transitions/s, episodes/s, ...) against the same
 row in the baseline: current below ``baseline * (1 - throughput_tolerance)``
@@ -100,6 +108,39 @@ def _row_map(rows) -> Dict[str, float]:
     return {row["name"]: float(row["derived"]) for row in rows}
 
 
+def chaos_lost_rows(rows) -> Dict[str, float]:
+    """{row_name: lost_ratio} for every ``chaos_*_lost_ratio`` bench row."""
+    return {row["name"]: float(row["derived"]) for row in rows
+            if row["name"].startswith("chaos_")
+            and row["name"].endswith("_lost_ratio")}
+
+
+def _gate_chaos(cur_rows, base_rows, slack: float,
+                failures: List[str]) -> int:
+    """Gate lost-pod ratios with ABSOLUTE slack: current must stay within
+    ``baseline + slack``.  Absolute, not relative — the calm cells' baseline
+    ratio is legitimately 0.0, where any relative tolerance degenerates to
+    an exact-zero requirement."""
+    cur, base = chaos_lost_rows(cur_rows), chaos_lost_rows(base_rows)
+    print(f"{'chaos lost-ratio row':36s} {'baseline':>10s} {'current':>10s} "
+          f"{'allowed':>10s}  verdict")
+    for name, base_ratio in sorted(base.items()):
+        allowed = base_ratio + slack
+        if name not in cur:
+            failures.append(f"{name}: missing from current run")
+            print(f"{name:36s} {base_ratio:10.3f} {'MISSING':>10s} "
+                  f"{allowed:10.3f}  FAIL")
+            continue
+        ok = cur[name] <= allowed
+        print(f"{name:36s} {base_ratio:10.3f} {cur[name]:10.3f} "
+              f"{allowed:10.3f}  {'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{name}: lost ratio {cur[name]:.3f} vs baseline "
+                f"{base_ratio:.3f} (allowed <= {allowed:.3f})")
+    return len(base)
+
+
 def _gate_ratios(label: str, cur: dict, base: dict, tolerance: float,
                  failures: List[str]) -> None:
     """Print the per-scenario ratio table (measured vs baseline vs allowed)."""
@@ -124,18 +165,27 @@ def _gate_ratios(label: str, cur: dict, base: dict, tolerance: float,
 def compare(current: dict, baseline: dict, tolerance: float,
             throughput_rows=(), throughput_tolerance: float = 0.25,
             latency_rows=(), latency_tolerance: float = 1.0,
-            lifecycle: bool = False, policy_compare: bool = False) -> int:
+            lifecycle: bool = False, policy_compare: bool = False,
+            chaos: bool = False, chaos_slack: float = 0.10) -> int:
     cur = scenario_ratios(current["rows"])
     base = scenario_ratios(baseline["rows"])
     cur_life = lifecycle_ratios(current["rows"]) if lifecycle else {}
     base_life = lifecycle_ratios(baseline["rows"]) if lifecycle else {}
     pol_classes = [p for p in POLICY_CLASSES if p != "kube"] if policy_compare else []
     base_pol = {p: policy_class_ratios(baseline["rows"], p) for p in pol_classes}
+    base_chaos = chaos_lost_rows(baseline["rows"]) if chaos else {}
     if (not base and not throughput_rows and not latency_rows and not base_life
-            and not any(base_pol.values())):
+            and not any(base_pol.values()) and not base_chaos):
         print("check_smoke: baseline has no gated rows", file=sys.stderr)
         return 2
     failures: List[str] = []
+    n_chaos = 0
+    if chaos:
+        if not base_chaos:
+            failures.append("chaos: baseline has no chaos_*_lost_ratio rows")
+        else:
+            n_chaos = _gate_chaos(current["rows"], baseline["rows"],
+                                  chaos_slack, failures)
     if base:
         _gate_ratios("sdqn/kube avg-CPU", cur, base, tolerance, failures)
     if lifecycle:
@@ -219,6 +269,9 @@ def compare(current: dict, baseline: dict, tolerance: float,
         n_pol = sum(len(v) for v in base_pol.values())
         gated.append(f"{n_pol} policy-class avg-CPU ratios within "
                      f"+{tolerance:.0%}")
+    if chaos and n_chaos:
+        gated.append(f"{n_chaos} chaos lost-pod ratios within "
+                     f"+{chaos_slack:.2f} absolute")
     if throughput_rows:
         gated.append(f"{len(throughput_rows)} throughput rows within "
                      f"-{throughput_tolerance:.0%}")
@@ -243,6 +296,16 @@ def main(argv=None) -> int:
                     help="also gate each policy class's <class>/kube avg-CPU "
                          "ratio (policy_compare_<scenario>_<class> rows from "
                          "benchmarks.run --policy-compare)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also gate every chaos_*_lost_ratio row with "
+                         "ABSOLUTE slack (benchmarks.run --chaos-smoke runs; "
+                         "pair with --throughput-row "
+                         "chaos_degraded_throughput for the degraded-mode "
+                         "serving floor)")
+    ap.add_argument("--chaos-slack", type=float, default=0.10,
+                    help="allowed absolute lost-ratio increase over baseline "
+                         "(default 0.10 — calm cells have baseline 0.0, so "
+                         "the slack must be absolute, not relative)")
     ap.add_argument("--throughput-row", action="append", default=[],
                     metavar="NAME",
                     help="also gate this row's derived rate against the "
@@ -269,7 +332,8 @@ def main(argv=None) -> int:
                    latency_rows=args.latency_row,
                    latency_tolerance=args.latency_tolerance,
                    lifecycle=args.lifecycle,
-                   policy_compare=args.policy_compare)
+                   policy_compare=args.policy_compare,
+                   chaos=args.chaos, chaos_slack=args.chaos_slack)
 
 
 if __name__ == "__main__":

@@ -60,6 +60,12 @@ def main() -> None:
                       help="placement-daemon serving benchmark: decisions/sec "
                            "and p50/p99 latency at several offered rates (the "
                            "sizing baseline_placement_serve.json is gated at)")
+    mode.add_argument("--chaos", action="store_true",
+                      help="full chaos grid (offered rate x node failures, "
+                           "SDQN-with-fallback vs kube) — the nightly lane")
+    mode.add_argument("--chaos-smoke", action="store_true",
+                      help="CI-sized chaos benchmark (the sizing "
+                           "benchmarks/baseline_chaos.json is gated at)")
     ap.add_argument("--trials", type=int, default=None,
                     help="episodes per measurement (default: 3, or 1 with --smoke)")
     ap.add_argument("--pods", type=int, default=None,
@@ -142,6 +148,14 @@ def main() -> None:
         from benchmarks import placement_serve
 
         rows += placement_serve.serve_rows()
+    elif args.chaos:
+        from benchmarks import chaos_bench
+
+        rows += chaos_bench.rows()
+    elif args.chaos_smoke:
+        from benchmarks import chaos_bench
+
+        rows += chaos_bench.smoke_rows()
     else:
         from benchmarks import roofline_report, sched_scale
 

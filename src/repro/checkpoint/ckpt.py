@@ -68,12 +68,30 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None) -> s
         },
         "checksums": {f"shard_{host:05d}.npz": digest},
     }
+    manifest["content_digest"] = content_digest(manifest)
     with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=2)
     if os.path.exists(step_dir):
         shutil.rmtree(step_dir)
     os.replace(tmp_dir, step_dir)  # atomic publish
     return step_dir
+
+
+def content_digest(manifest: dict) -> str:
+    """Whole-checkpoint integrity digest over the manifest's logical content.
+
+    sha256 of the canonical (sorted-keys) JSON of the leaf layout plus the
+    per-shard checksums — so a truncated shard, a dropped leaf, or a
+    hand-edited manifest all change the digest.  The digest itself and the
+    free-form ``extra`` metadata are excluded (extra may be legitimately
+    rewritten by tooling without touching the arrays).
+    """
+    body = {"leaves": manifest.get("leaves", {}),
+            "checksums": manifest.get("checksums", {}),
+            "step": manifest.get("step"),
+            "format": manifest.get("format")}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True).encode()).hexdigest()
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -113,6 +131,11 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
     manifest = json.load(open(os.path.join(step_dir, "manifest.json")))
+    if validate and "content_digest" in manifest:
+        if manifest["content_digest"] != content_digest(manifest):
+            raise IOError(
+                f"manifest content digest mismatch in {step_dir} "
+                "(corrupted or hand-edited checkpoint)")
 
     data: Dict[str, np.ndarray] = {}
     for fname in sorted(os.listdir(step_dir)):

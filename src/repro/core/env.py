@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core.types import (FEATURE_DIM, NO_PLACEMENT, ClusterState,
                               EnvConfig, EpisodeResult, EpisodeStats,
-                              PodLedger, PodSpec, PodTable)
+                              FailureTrace, PodLedger, PodSpec, PodTable)
 
 # ---------------------------------------------------------------------------
 # construction
@@ -63,6 +63,8 @@ def _scenario_pool(scn) -> dict:
         "req_hi": col(lambda c: c.requested_frac[1]),
         "idle_watts": col(lambda c: c.idle_watts),
         "peak_watts": col(lambda c: c.peak_watts),
+        "mtbf": col(lambda c: c.mtbf_s),
+        "mttr": col(lambda c: c.mttr_s),
     }
 
 
@@ -576,6 +578,159 @@ def has_lifecycle(cfg: EnvConfig) -> bool:
         np.isfinite(p.lifetime_mean_s) for p in scn.pod_types)
 
 
+# ---------------------------------------------------------------------------
+# chaos: mid-episode node failures (fixed-shape, jit/vmap-safe)
+# ---------------------------------------------------------------------------
+
+
+def has_chaos(cfg: EnvConfig) -> bool:
+    """True when any node class can fail mid-episode (finite ``mtbf_s``).
+
+    Like ``has_lifecycle`` this is a *static* (trace-time) property: the
+    default all-``inf`` MTBF keeps every pre-chaos scenario's episode trace
+    byte-identical — no eviction scatters, no reschedule ring in the carry.
+    """
+    scn = cfg.scenario
+    return scn is not None and any(
+        np.isfinite(c.mtbf_s) for c in scn.node_classes)
+
+
+def empty_failure_trace(n_nodes: int, cycles: int = 1) -> FailureTrace:
+    """A trace in which no node ever fails (all windows at ``inf``).
+
+    Threading this through ``run_episode`` exercises the chaos code path with
+    every mask false — the parity case the tests pin (≤1e-6 vs no trace).
+    """
+    full = jnp.full((cycles, n_nodes), jnp.inf, jnp.float32)
+    return FailureTrace(fail_s=full, recover_s=full)
+
+
+def sample_failure_trace(key: jax.Array, cfg: EnvConfig,
+                         cycles: Optional[int] = None) -> FailureTrace:
+    """Draw per-node fail/recover schedules from each class's MTBF/MTTR.
+
+    An alternating-renewal (Poisson fail / Poisson repair) process: node
+    ``n``'s ``c``-th outage starts ``Exp(mtbf)`` after its previous recovery
+    and lasts ``Exp(mttr)``.  Cycles accumulate sequentially in a *static*
+    python loop so ``mtbf = inf`` stays ``inf`` all the way down (a vectorized
+    cumsum would hit ``inf - inf`` NaNs); the unit exponentials are clamped
+    away from zero so ``inf * 0`` can never appear either.
+    """
+    cycles = cfg.chaos_cycles if cycles is None else cycles
+    if cfg.scenario is None:
+        mtbf = jnp.full((cfg.n_nodes,), jnp.inf, jnp.float32)
+        mttr = jnp.full((cfg.n_nodes,), 60.0, jnp.float32)
+    else:
+        pool = _scenario_pool(cfg.scenario)
+        mtbf = jnp.asarray(pool["mtbf"])
+        mttr = jnp.asarray(pool["mttr"])
+    n = mtbf.shape[0]
+    prev = jnp.zeros((n,), jnp.float32)
+    fails, recovers = [], []
+    for c in range(cycles):
+        ku = jax.random.fold_in(key, 2 * c)
+        kd = jax.random.fold_in(key, 2 * c + 1)
+        up = mtbf * jnp.maximum(jax.random.exponential(ku, (n,), jnp.float32), 1e-6)
+        down = mttr * jnp.maximum(jax.random.exponential(kd, (n,), jnp.float32), 1e-6)
+        f = prev + up
+        r = f + down
+        fails.append(f)
+        recovers.append(r)
+        prev = r
+    return FailureTrace(fail_s=jnp.stack(fails), recover_s=jnp.stack(recovers))
+
+
+def trace_down(trace: FailureTrace, t_s: jnp.ndarray) -> jnp.ndarray:
+    """Per-node down mask at episode time ``t_s``: (N,) bool."""
+    return jnp.any((trace.fail_s <= t_s) & (t_s < trace.recover_s), axis=0)
+
+
+class RescheduleQueue(NamedTuple):
+    """Fixed-capacity ring of evicted pods awaiting re-placement.
+
+    Each entry points back at the pod's own pre-reserved ledger slot (its
+    spec is still recorded there) plus the run time it had left when its node
+    died — re-placement restarts the pod from scratch with that remaining
+    duration (checkpoint/restart semantics).  ``head``/``count`` bound the
+    live window; pushes past capacity are *lost* (counted, never silent).
+    """
+
+    slot: jnp.ndarray         # (R,) int32 ledger slot of each queued pod
+    remaining_s: jnp.ndarray  # (R,) float32 run time left at eviction
+    head: jnp.ndarray         # int32 index of the oldest entry
+    count: jnp.ndarray        # int32 number of live entries
+
+
+def reschedule_queue_init(cap: int) -> RescheduleQueue:
+    return RescheduleQueue(
+        slot=jnp.full((cap,), -1, jnp.int32),
+        remaining_s=jnp.zeros((cap,), jnp.float32),
+        head=jnp.int32(0),
+        count=jnp.int32(0),
+    )
+
+
+def _queue_push(q: RescheduleQueue, mask: jnp.ndarray, values: jnp.ndarray,
+                cap: int) -> Tuple[RescheduleQueue, jnp.ndarray]:
+    """Push every masked ledger slot into the ring (oldest-first FIFO order).
+
+    Rank-by-cumsum turns the boolean mask into contiguous ring positions;
+    entries past the remaining space scatter to an out-of-range index and
+    are dropped by ``mode="drop"`` — returned as the overflow (lost) count.
+    """
+    space = cap - q.count
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    ok = mask & (rank < space)
+    pos = jnp.where(ok, (q.head + q.count + rank) % cap, cap)
+    slot_ids = jnp.arange(mask.shape[0], dtype=jnp.int32)
+    n_mask = jnp.sum(mask.astype(jnp.int32))
+    n_push = jnp.minimum(n_mask, space)
+    q = q._replace(
+        slot=q.slot.at[pos].set(slot_ids, mode="drop"),
+        remaining_s=q.remaining_s.at[pos].set(values, mode="drop"),
+        count=q.count + n_push,
+    )
+    return q, n_mask - n_push
+
+
+def evict_down_pods(state: ClusterState, ledger: PodLedger, q: RescheduleQueue,
+                    healthy_base: jnp.ndarray, trace: FailureTrace, cap: int
+                    ) -> Tuple[ClusterState, PodLedger, RescheduleQueue,
+                               jnp.ndarray, jnp.ndarray]:
+    """Apply the failure trace at the current episode time.
+
+    Flips ``healthy`` to ``healthy_base & ~down(t)`` and evicts every ledger
+    pod hosted on a down node through the same fused ``segment_sum`` release
+    as ``retire_expired``, pushing each into the reschedule ring with its
+    remaining run time.  Idempotent across steps: an evicted slot's node is
+    ``-1``, so a node staying down evicts nothing new.  Returns
+    ``(state, ledger, queue, n_evicted, n_overflow_lost)``.
+    """
+    n = state.n_nodes
+    down = trace_down(trace, state.time_s)
+    state = state._replace(healthy=healthy_base & jnp.logical_not(down))
+    seg = jnp.clip(ledger.node, 0, n - 1)
+    evict = (ledger.node >= 0) & down[seg]
+    w = evict.astype(jnp.float32)
+
+    def released(col):
+        return jax.ops.segment_sum(w * col, seg, num_segments=n)
+
+    cnt = jax.ops.segment_sum(evict.astype(jnp.int32), seg, num_segments=n)
+    state = state._replace(
+        num_pods=state.num_pods - cnt,
+        exp_pods=state.exp_pods - cnt,
+        cpu_requested=state.cpu_requested - released(ledger.spec.cpu_request),
+        mem_requested=state.mem_requested - released(ledger.spec.mem_request),
+        pods_cpu=state.pods_cpu - released(ledger.spec.cpu_demand),
+        mem_used=state.mem_used - released(ledger.spec.mem_demand),
+    )
+    remaining = ledger.expiry_s - state.time_s
+    ledger = ledger._replace(node=jnp.where(evict, -1, ledger.node))
+    q, n_lost = _queue_push(q, evict, remaining, cap)
+    return state, ledger, q, jnp.sum(evict).astype(jnp.int32), n_lost
+
+
 def nodes_active(state: ClusterState) -> jnp.ndarray:
     """Nodes hosting >= 1 experiment pod — the nodes our workload keeps up."""
     return jnp.sum(state.exp_pods > 0).astype(jnp.int32)
@@ -630,11 +785,15 @@ class _EpisodeAcc(NamedTuple):
     energy_j: jnp.ndarray      # sum of fleet power * dt (joules)
     peak_active: jnp.ndarray   # max nodes_active seen
     retired: jnp.ndarray       # int32 pods completed + released
+    evicted: jnp.ndarray       # int32 pods killed by node failures
+    rescheduled: jnp.ndarray   # int32 evicted pods re-placed in-episode
+    lost: jnp.ndarray          # int32 evicted pods dropped off the ring
 
 
 def _acc_init() -> _EpisodeAcc:
     z = jnp.float32(0.0)
-    return _EpisodeAcc(z, z, z, z, z, jnp.int32(0))
+    zi = jnp.int32(0)
+    return _EpisodeAcc(z, z, z, z, z, zi, zi, zi, zi)
 
 
 def run_episode(
@@ -645,6 +804,7 @@ def run_episode(
     pod_table: Optional[PodTable] = None,
     consolidate: Optional[Callable] = None,
     select_carry=None,
+    failure_trace: Optional[FailureTrace] = None,
 ) -> EpisodeResult:
     """Schedule `n_pods` arrivals with `select_action`, settle, retire.
 
@@ -673,6 +833,19 @@ def run_episode(
     the scanned arrivals.  ``None`` (the default) keeps the stateless
     three-argument selector protocol unchanged.
 
+    ``failure_trace`` injects mid-episode node failures (see
+    ``sample_failure_trace``): whenever a node's outage window opens, its
+    ``healthy`` flips off, its ledger pods are evicted through the fused
+    ``segment_sum`` release, and the evictees queue in a fixed-capacity
+    reschedule ring — each subsequent arrival step attempts one re-placement
+    back into the pod's own pre-reserved ledger slot with its remaining run
+    time.  When ``None`` and the scenario has any finite-MTBF node class, a
+    trace is auto-sampled from a dedicated ``fold_in(key, 13)`` stream (the
+    reset/arrival/action streams are untouched).  With no trace and an
+    all-``inf`` MTBF catalog the chaos path is skipped at trace time, and
+    with an ``empty_failure_trace`` every chaos mask is false — both pin the
+    pre-chaos trajectories (the parity the tests assert).
+
     Returns an ``EpisodeResult`` ``(state, placements, metric, dropped,
     stats)`` where ``metric`` is the dt-weighted cluster-average CPU% (the
     paper's objective), ``placements`` is the final (N,) pod distribution,
@@ -688,21 +861,35 @@ def run_episode(
     # retire: the scenario's catalog is all-inf AND no caller-supplied table
     # (whose lifetimes are runtime values) or consolidation pass needs slots
     do_consolidate = consolidate is not None and cfg.consolidate_every_s > 0.0
-    use_ledger = (pod_table is not None or has_lifecycle(cfg) or do_consolidate)
+    use_chaos = failure_trace is not None or has_chaos(cfg)
+    use_ledger = (pod_table is not None or has_lifecycle(cfg) or do_consolidate
+                  or use_chaos)
     if pod_table is None:
         pod_table = sample_pod_table(k_pods, cfg, n_pods)
+    if use_chaos and failure_trace is None:
+        failure_trace = sample_failure_trace(jax.random.fold_in(key, 13), cfg)
+    healthy_base = state.healthy
+    requeue_cap = cfg.chaos_requeue_cap if use_chaos else 1
 
     # the metric integrates cluster-average CPU% over wall-clock (dt-weighted),
     # so bursty arrival phases don't over-weight the average under Poisson /
     # diurnal streams; with constant gaps this reduces to the plain mean.
-    def advance(st, ledger, dt, acc: _EpisodeAcc):
-        """Shared post-placement body: tick, retire, consolidate, integrate."""
+    def advance(st, ledger, q, dt, acc: _EpisodeAcc):
+        """Shared post-placement body: tick, retire, evict, consolidate,
+        integrate."""
         t_before = st.time_s
         st = tick(st, cfg, dt)
         if use_ledger:
             st, ledger, n_ret = retire_expired(st, ledger)
         else:
             n_ret = jnp.int32(0)
+        if use_chaos:
+            # retire-then-evict: a pod both expired and on a dead node
+            # releases exactly once (retirement already freed its slot)
+            st, ledger, q, n_ev, n_lost = evict_down_pods(
+                st, ledger, q, healthy_base, failure_trace, requeue_cap)
+        else:
+            n_ev = n_lost = jnp.int32(0)
         if do_consolidate:
             period = cfg.consolidate_every_s
             crossed = jnp.floor(st.time_s / period) > jnp.floor(t_before / period)
@@ -714,15 +901,57 @@ def run_episode(
             )
         m = average_cpu_utilization(st, cfg)
         na = nodes_active(st).astype(jnp.float32)
-        acc = _EpisodeAcc(
+        acc = acc._replace(
             metric=acc.metric + m * dt,
             dt=acc.dt + dt,
             node_seconds=acc.node_seconds + na * dt,
             energy_j=acc.energy_j + fleet_power_w(st, cfg) * dt,
             peak_active=jnp.maximum(acc.peak_active, na),
             retired=acc.retired + n_ret,
+            evicted=acc.evicted + n_ev,
+            lost=acc.lost + n_lost,
         )
-        return st, ledger, acc
+        return st, ledger, q, acc
+
+    def try_reschedule(k, st, ledger, q, acc, pc):
+        """One re-placement attempt per arrival step (fixed shape).
+
+        Pops the ring head, re-scores it through the same selector as the
+        arrival stream (a dedicated ``fold_in`` of the step key, so the
+        arrival draws are untouched), and re-records into the pod's original
+        ledger slot with its remaining run time.  A failed attempt rotates
+        the entry to the tail — no head-of-line blocking while its resources
+        are still scarce.  Every branch is ``where``-masked, so with an
+        empty ring the whole block is the identity.
+        """
+        n_slots = ledger.node.shape[0]
+        has = q.count > 0
+        slot = jnp.clip(q.slot[q.head], 0, n_slots - 1)
+        remaining = q.remaining_s[q.head]
+        rpod = jax.tree.map(lambda col: col[slot], ledger.spec)
+        a, pc2 = _select(jax.random.fold_in(k, 17), st, rpod, pc)
+        pc = jax.tree.map(lambda new, old: jnp.where(has, new, old), pc2, pc)
+        placed = has & (a >= 0)
+        a_eff = jnp.where(placed, a, NO_NODE)
+        st = place(st, a_eff, rpod, cfg)
+        led2 = ledger_record(ledger, slot, a_eff, st.time_s + remaining, rpod)
+        ledger = jax.tree.map(
+            lambda new, old: jnp.where(placed, new, old), led2, ledger)
+        # ring update: success pops the head; failure rotates it to the tail
+        # (writing at (head+count) mod cap then advancing head is a correct
+        # rotation even when the ring is full)
+        tail = (q.head + q.count) % requeue_cap
+        rotated = has & jnp.logical_not(placed)
+        q = q._replace(
+            slot=jnp.where(rotated, q.slot.at[tail].set(q.slot[q.head]), q.slot),
+            remaining_s=jnp.where(
+                rotated, q.remaining_s.at[tail].set(remaining), q.remaining_s),
+            head=jnp.where(has, (q.head + 1) % requeue_cap, q.head),
+            count=jnp.where(placed, q.count - 1, q.count),
+        )
+        acc = acc._replace(
+            rescheduled=acc.rescheduled + placed.astype(jnp.int32))
+        return st, ledger, q, acc, pc
 
     # the selector's carry rides the scan as an (empty for stateless
     # selectors) pytree — the () case adds no arrays, so the trace of the
@@ -737,30 +966,33 @@ def run_episode(
         _select = select_action
 
     def sched_step(carry, xs):
-        st, ledger, acc, pc = carry
+        st, ledger, q, acc, pc = carry
         t, k, pod, dt, lifetime = xs
         a, pc = _select(k, st, pod, pc)
         st = place(st, a, pod, cfg)
         if use_ledger:
             ledger = ledger_record(ledger, t, a, st.time_s + lifetime, pod)
-        st, ledger, acc = advance(st, ledger, dt, acc)
-        return (st, ledger, acc, pc), a
+        if use_chaos:
+            st, ledger, q, acc, pc = try_reschedule(k, st, ledger, q, acc, pc)
+        st, ledger, q, acc = advance(st, ledger, q, dt, acc)
+        return (st, ledger, q, acc, pc), a
 
     keys = jax.random.split(k_act, n_pods)
-    (state, ledger, acc, _), actions = jax.lax.scan(
+    (state, ledger, q, acc, _), actions = jax.lax.scan(
         sched_step, (state, ledger_init(n_pods if use_ledger else 1),
-                     _acc_init(), sel_carry0),
+                     reschedule_queue_init(requeue_cap), _acc_init(),
+                     sel_carry0),
         (jnp.arange(n_pods), keys, pod_table.specs, pod_table.dt_s,
          pod_table.lifetime_s),
     )
 
     def settle_step(carry, _):
-        st, ledger, acc = carry
-        st, ledger, acc = advance(st, ledger, cfg.schedule_dt_s, acc)
-        return (st, ledger, acc), None
+        st, ledger, q, acc = carry
+        st, ledger, q, acc = advance(st, ledger, q, cfg.schedule_dt_s, acc)
+        return (st, ledger, q, acc), None
 
-    (state, ledger, acc), _ = jax.lax.scan(
-        settle_step, (state, ledger, acc), None, length=cfg.settle_steps
+    (state, ledger, q, acc), _ = jax.lax.scan(
+        settle_step, (state, ledger, q, acc), None, length=cfg.settle_steps
     )
     stats = EpisodeStats(
         nodes_active_mean=acc.node_seconds / acc.dt,
@@ -769,6 +1001,10 @@ def run_episode(
         node_seconds=acc.node_seconds,
         energy_wh=acc.energy_j / 3600.0,
         retired=acc.retired,
+        evicted=acc.evicted,
+        rescheduled=acc.rescheduled,
+        # still-queued evictees never re-entered before the episode ended
+        lost=acc.lost + q.count,
     )
     return EpisodeResult(
         state=state,

@@ -393,17 +393,56 @@ def save_checkpoint(ckpt_dir: str, step: int, params,
 
 
 def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
-                       default_policy: str = "mlp"):
+                       default_policy: str = "mlp",
+                       on_corrupt: str = "raise"):
     """Restore ``(params, spec)`` from a checkpoint directory.
 
     The manifest's policy record picks the spec; manifests written before
     the record existed (any pre-registry trainer run) fall back to
     ``default_policy`` — the legacy-MLP path, so old checkpoints and
     ``--qnet-path`` keep loading.
+
+    ``on_corrupt`` controls what a damaged checkpoint does.  ``"raise"``
+    (the default) propagates the integrity error.  ``"fallback"`` — the
+    serving-daemon setting — logs a warning and returns a FRESH init of the
+    declared (or default) policy class instead: a placement service must
+    come up with a sane scorer rather than crash on (or silently serve) a
+    truncated shard, a checksum mismatch, or a garbled manifest.
     """
+    import warnings
+    import zipfile
+
     from repro.checkpoint import ckpt
 
-    meta = ckpt.read_extra(ckpt_dir, step=step)
+    def fresh(spec, why: str):
+        warnings.warn(
+            f"checkpoint under {ckpt_dir!r} is unusable ({why}); "
+            f"falling back to a fresh {spec.name!r} init",
+            RuntimeWarning, stacklevel=2)
+        return spec.init(jax.random.PRNGKey(0)), spec
+
+    # integrity failure classes: shard/manifest checksum mismatch (IOError),
+    # missing leaves (KeyError), shape drift (ValueError), truncated npz
+    # (zipfile.BadZipFile), garbled manifest json (json.JSONDecodeError, a
+    # ValueError subclass).  FileNotFoundError — no checkpoint at all — is
+    # NOT integrity damage and always propagates.
+    _CORRUPT = (IOError, KeyError, ValueError, zipfile.BadZipFile)
+
+    try:
+        meta = ckpt.read_extra(ckpt_dir, step=step)
+    except FileNotFoundError:
+        raise
+    except _CORRUPT as e:
+        if on_corrupt != "fallback":
+            raise
+        return fresh(get(default_policy), f"unreadable manifest: {e}")
     spec = get(meta.get("policy", default_policy))
     template = jax.eval_shape(lambda: spec.init(jax.random.PRNGKey(0)))
-    return ckpt.restore(ckpt_dir, template, step=step), spec
+    try:
+        return ckpt.restore(ckpt_dir, template, step=step), spec
+    except FileNotFoundError:
+        raise
+    except _CORRUPT as e:
+        if on_corrupt != "fallback":
+            raise
+        return fresh(spec, str(e))

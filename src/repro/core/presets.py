@@ -112,3 +112,29 @@ SDQN_N_LIFECYCLE_PRESET = RLConfig(
     efficiency_weight=10.0,
     energy_weight=15.0,
 )
+
+# ---------------------------------------------------------------------------
+# chaos training (mid-episode node failures, eviction/reschedule churn)
+# ---------------------------------------------------------------------------
+
+# Chaos scenarios (finite-MTBF node classes): nodes fail mid-episode, their
+# pods are evicted into the reschedule ring, and EpisodeStats charges
+# evicted/rescheduled/lost — the mixture a failure-aware policy trains on.
+CHAOS_MIX_NAMES = (
+    "preemptible-flaky",
+    "batch-flaky",
+    "train-flaky",
+)
+
+# Generalist SDQN over the chaos mixture.  Placements on flaky capacity get
+# wiped mid-episode, so the realized CPU-efficiency reward already penalizes
+# parking work on short-MTBF nodes — no extra shaping term is needed for the
+# policy to learn failure-aware placement.
+SDQN_CHAOS_PRESET = RLConfig(
+    variant="sdqn",
+    episodes=720,
+    n_envs=16,
+    eps_end=0.05,
+    batch_size=256,
+    efficiency_weight=5.0,
+)

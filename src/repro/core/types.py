@@ -90,6 +90,12 @@ class NodeClass:
     image_cached_prob: float = 0.0    # chance the experiment image is pre-pulled
     idle_watts: float = 120.0         # draw of a powered-on but idle node
     peak_watts: float = 350.0         # draw at 100% CPU utilization
+    # mid-episode chaos: mean time between failures / to recovery (seconds),
+    # exponentially distributed per node (a Poisson fail/recover process).
+    # ``inf`` (the default) = the node never fails mid-episode, which keeps
+    # every pre-chaos scenario bit-identical (see env.sample_failure_trace).
+    mtbf_s: float = float("inf")
+    mttr_s: float = 60.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,12 +190,35 @@ class PodLedger(NamedTuple):
     spec: PodSpec                     # each field (K,): resources to release
 
 
+class FailureTrace(NamedTuple):
+    """Fixed-shape mid-episode node fail/recover schedule (jit/vmap-safe).
+
+    ``fail_s[c, n]`` / ``recover_s[c, n]`` bound node ``n``'s ``c``-th outage
+    window: the node is down whenever ``fail_s <= t < recover_s``.  ``inf``
+    marks an unused cycle, so node health at any time ``t`` is a pure
+    function of the trace — no event queue, no dynamic shapes.  Sampled per
+    node from each ``NodeClass``'s Poisson MTBF/MTTR
+    (``env.sample_failure_trace``); an all-``inf`` trace
+    (``env.empty_failure_trace``) injects nothing and episodes reproduce the
+    chaos-free trajectories (parity pinned in tests/test_chaos.py).
+    """
+
+    fail_s: jnp.ndarray               # (C, N) float32 outage start times
+    recover_s: jnp.ndarray            # (C, N) float32 matching recovery times
+
+
 class EpisodeStats(NamedTuple):
     """Time-resolved lifecycle metrics of one episode (all scalars).
 
     ``nodes_active`` counts nodes hosting >= 1 experiment pod — the nodes the
     workload prevents from being drained/powered down (the paper's SDQN-n
     green-consolidation objective, §1 contribution 2 / §6).
+
+    The chaos counters account for mid-episode node failures (see
+    ``env.sample_failure_trace``): every eviction resolves to exactly one of
+    rescheduled or lost, so ``evicted == rescheduled + lost`` at episode end
+    and a reward can charge failures (e.g. penalize ``lost``).  All three are
+    zero for episodes without an active failure trace.
     """
 
     nodes_active_mean: jnp.ndarray    # time-averaged active-node count
@@ -198,6 +227,9 @@ class EpisodeStats(NamedTuple):
     node_seconds: jnp.ndarray         # integral of nodes_active over wall-clock
     energy_wh: jnp.ndarray            # integral of active-node power draw
     retired: jnp.ndarray              # int32, pods that completed + released
+    evicted: jnp.ndarray = jnp.int32(0)      # pods killed by node failures
+    rescheduled: jnp.ndarray = jnp.int32(0)  # evicted pods re-placed in-episode
+    lost: jnp.ndarray = jnp.int32(0)         # evicted pods never re-placed
 
 
 class EpisodeResult(NamedTuple):
@@ -282,6 +314,12 @@ class EnvConfig:
     randomize_max_pods: int = 26
     randomize_empty_prob: float = 0.45    # chance a node starts with no pods
     randomize_cached_prob: float = 0.3    # chance an empty node has the image
+    # chaos (mid-episode node failures, see env.sample_failure_trace): the
+    # fixed capacity of the in-episode reschedule ring evicted pods re-enter
+    # the arrival stream through, and how many fail/recover cycles per node
+    # a sampled FailureTrace can hold.  Both are static shape parameters.
+    chaos_requeue_cap: int = 32
+    chaos_cycles: int = 4
     # scenario mode: when set, reset() builds the heterogeneous node pool from
     # scenario.node_classes (n_nodes/capacity fields above are overridden) and
     # episodes draw per-arrival PodSpecs from the scenario's pod catalog.

@@ -42,9 +42,27 @@ WARM_POOL = NodeClass(
     image_cached_prob=1.0, base_cpu_frac=(0.02, 0.2), requested_frac=(0.05, 0.5),
 )
 
+# preemptible capacity that FAILS MID-EPISODE (finite MTBF): on average one
+# outage every ~5 minutes of episode time, back in ~1 minute.  Pods on a dead
+# node are evicted and re-enter the arrival stream — see env.run_episode.
+PREEMPTIBLE = NodeClass(
+    name="preemptible", count=6, cpu_capacity=4000.0, mem_capacity=16384.0,
+    mtbf_s=300.0, mttr_s=60.0,
+    base_cpu_frac=(0.01, 0.1), requested_frac=(0.0, 0.3),
+)
+
+# spot capacity that both starts flaky (unhealthy_prob) AND keeps flapping
+# mid-episode — the harshest node class in the catalog.
+SPOT_CHAOS = NodeClass(
+    name="spot-chaos", count=6, cpu_capacity=4000.0, mem_capacity=16384.0,
+    unhealthy_prob=0.15, mtbf_s=180.0, mttr_s=90.0,
+    base_cpu_frac=(0.01, 0.1), requested_frac=(0.0, 0.3),
+)
+
 NODE_CLASSES = {
     c.name: c
-    for c in (PAPER_SLAVE, BIG_CPU, SMALL_EDGE, MEM_HEAVY, SPOT, WARM_POOL)
+    for c in (PAPER_SLAVE, BIG_CPU, SMALL_EDGE, MEM_HEAVY, SPOT, WARM_POOL,
+              PREEMPTIBLE, SPOT_CHAOS)
 }
 
 # ---------------------------------------------------------------------------

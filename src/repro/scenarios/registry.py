@@ -146,6 +146,46 @@ CONSOLIDATION_STRESS = _register(ScenarioConfig(
     settle_steps=75,
 ))
 
+# --- chaos scenarios (finite MTBF: nodes fail MID-EPISODE, their pods are
+# evicted and re-enter the arrival stream — see env.sample_failure_trace) ---
+
+# 13. preemptible churn: autoscaled serving replicas on a pool where most
+#     capacity is preemptible — placements must survive evictions, and the
+#     reschedule ring is exercised continuously.
+PREEMPTIBLE_FLAKY = _register(ScenarioConfig(
+    name="preemptible-flaky",
+    node_classes=(cat.PREEMPTIBLE, _c(cat.PAPER_SLAVE, count=2)),
+    pod_types=(cat.SERVE_CHURN,),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=0.6),
+    n_pods=60,
+    settle_steps=45,
+))
+
+# 14. batch jobs on chaos-grade spot: over-burning batch shards on nodes
+#     that both start NotReady and keep flapping — eviction storms hit
+#     mid-wave, so where the scheduler parks the survivors matters.
+BATCH_FLAKY = _register(ScenarioConfig(
+    name="batch-flaky",
+    node_classes=(cat.SPOT_CHAOS, _c(cat.BIG_CPU, count=1)),
+    pod_types=(cat.weighted(cat.BATCH_STRAGGLER, 0.6), cat.weighted(cat.SHORT_JOB, 0.4)),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=0.7),
+    n_pods=60,
+    settle_steps=60,
+))
+
+# 15. mixed train/serve under light chaos: long training replicas (the
+#     expensive thing to lose) next to serving churn, with a preemptible
+#     slice of the pool — the policy should learn to keep the long jobs off
+#     the flaky capacity.
+TRAIN_FLAKY = _register(ScenarioConfig(
+    name="train-flaky",
+    node_classes=(cat.BIG_CPU, _c(cat.PREEMPTIBLE, count=4)),
+    pod_types=(cat.weighted(cat.LONG_TRAIN, 0.3), cat.weighted(cat.SERVE_CHURN, 0.7)),
+    arrival=ArrivalConfig(kind="poisson", rate_per_s=0.5),
+    n_pods=60,
+    settle_steps=60,
+))
+
 # 8. fleet-scale heterogeneous pool for the scaling benchmarks.
 FLEET_HETERO = _register(ScenarioConfig(
     name="fleet-hetero",

@@ -45,10 +45,47 @@ from repro.core.types import NO_PLACEMENT, ClusterState, EnvConfig, PodSpec
 from repro.sched import placement as _placement
 from repro.sched.placement import FleetState, JobSpec
 
-__all__ = ["NO_PLACEMENT", "score", "score_batch", "select"]
+__all__ = ["DIVERGENCE_LIMIT", "NO_PLACEMENT", "heuristic_score", "score",
+           "score_batch", "scores_valid", "select"]
 
 Fleet = Union[ClusterState, FleetState]
 Workload = Union[PodSpec, JobSpec]
+
+# |Q| beyond this is treated as a diverged net (a blown-up training run or a
+# corrupted checkpoint), not a preference — the guard swaps in the heuristic
+DIVERGENCE_LIMIT = 1e6
+
+
+def heuristic_score(fleet: Fleet, pod: Workload, *,
+                    cfg: Optional[EnvConfig] = None) -> jnp.ndarray:
+    """(N,) kube-style LeastRequested+Balanced scores — no Q-net involved.
+
+    The graceful-degradation fallback: when a policy class's scores miss a
+    serving deadline, go NaN, or diverge, every dispatcher in the repo can
+    fall back to this closed-form scorer and keep placing pods.  On a
+    ``ClusterState`` it IS ``baselines.kube_scores``; on a ``FleetState`` it
+    is the same formula over the fleet's percent-utilization columns.
+    """
+    if isinstance(fleet, ClusterState):
+        if cfg is None:
+            raise ValueError("cfg (EnvConfig) is required to score a "
+                             "ClusterState fleet")
+        from repro.core import baselines
+
+        return baselines.kube_scores(fleet, pod, cfg)
+    if isinstance(fleet, FleetState):
+        delta = _placement.job_delta(pod)
+        cpu_free = (100.0 - fleet.cpu_pct - delta[0]) / 100.0
+        mem_free = (100.0 - fleet.mem_pct - delta[1]) / 100.0
+        least_requested = 10.0 * (cpu_free + mem_free) / 2.0
+        balanced = 10.0 * (1.0 - jnp.abs(cpu_free - mem_free))
+        return least_requested + balanced
+    raise TypeError(f"unsupported fleet type: {type(fleet).__name__}")
+
+
+def scores_valid(q: jnp.ndarray) -> jnp.ndarray:
+    """Scalar bool: all scores finite and inside ``DIVERGENCE_LIMIT``."""
+    return jnp.all(jnp.isfinite(q) & (jnp.abs(q) <= DIVERGENCE_LIMIT))
 
 
 def _fleet_mode(fused) -> Optional[str]:
@@ -84,7 +121,8 @@ def _fleet_policy_score(fleet: FleetState, delta: jnp.ndarray, params: dict,
 
 def score(fleet: Fleet, pod: Workload, *, params: dict,
           cfg: Optional[EnvConfig] = None, fused="auto",
-          score_fn=None, policy=None, embed=None) -> jnp.ndarray:
+          score_fn=None, policy=None, embed=None,
+          guard: bool = False) -> jnp.ndarray:
     """(N,) Q-scores of placing ``pod`` on each target in ``fleet``.
 
     See the module docstring for the dispatch rules.  ``score_fn`` swaps the
@@ -92,7 +130,23 @@ def score(fleet: Fleet, pod: Workload, *, params: dict,
     ClusterState substrate only, always the unfused path).  ``policy`` (a
     ``core.policy.PolicySpec``) swaps in a registered policy class on either
     substrate; ``embed`` is its history embedding for sequence specs.
+
+    ``guard=True`` validates the scores at this dispatch — NaN/inf or
+    ``|Q| > DIVERGENCE_LIMIT`` anywhere in the vector swaps the WHOLE vector
+    for ``heuristic_score`` (jit-safe ``where``, so it composes with every
+    policy class and both substrates).  Serving paths set it; the training
+    loop keeps the unguarded hot path.
     """
+    q = _score_raw(fleet, pod, params=params, cfg=cfg, fused=fused,
+                   score_fn=score_fn, policy=policy, embed=embed)
+    if not guard:
+        return q
+    return jnp.where(scores_valid(q), q, heuristic_score(fleet, pod, cfg=cfg))
+
+
+def _score_raw(fleet: Fleet, pod: Workload, *, params: dict,
+               cfg: Optional[EnvConfig] = None, fused="auto",
+               score_fn=None, policy=None, embed=None) -> jnp.ndarray:
     if isinstance(fleet, ClusterState):
         if cfg is None:
             raise ValueError("cfg (EnvConfig) is required to score a "
@@ -148,15 +202,17 @@ def score_batch(fleet: Fleet, pods: Workload, *, params: dict,
 
 def select(fleet: Fleet, pod: Workload, *, params: dict,
            cfg: Optional[EnvConfig] = None, fused="auto",
-           score_fn=None, policy=None) -> jnp.ndarray:
+           score_fn=None, policy=None, guard: bool = False) -> jnp.ndarray:
     """Greedy feasible argmax over ``score``; ``NO_PLACEMENT`` if none fit.
 
     The one-shot convenience wrapper (scores + k8s filtering phase in one
     call).  For continuous serving use ``sched.daemon.PlacementDaemon``,
     which batches requests and binds with optimistic concurrency.
+    ``guard=True`` falls back to the kube heuristic on NaN/diverged scores
+    (see ``score``) — invalid Q values degrade the placement, never wedge it.
     """
     q = score(fleet, pod, params=params, cfg=cfg, fused=fused,
-              score_fn=score_fn, policy=policy)
+              score_fn=score_fn, policy=policy, guard=guard)
     if isinstance(fleet, ClusterState):
         from repro.core import env as kenv
 

@@ -55,10 +55,12 @@ import numpy as np
 from repro.core import env as kenv, schedulers
 from repro.core.types import NO_PLACEMENT, ClusterState, EnvConfig, PodSpec
 from repro.sched import placement as _pl
+from repro.sched.api import DIVERGENCE_LIMIT as _DIVERGENCE_LIMIT
 
 __all__ = [
-    "ClusterSubstrate", "DaemonConfig", "DaemonMetrics", "Decision",
-    "FleetSubstrate", "PlacementDaemon", "replay_trace",
+    "ClusterSubstrate", "DaemonConfig", "DaemonMetrics", "DaemonStats",
+    "Decision", "FleetSubstrate", "LatencyReservoir", "PlacementDaemon",
+    "replay_trace",
 ]
 
 
@@ -73,6 +75,26 @@ class DaemonConfig:
     ``conflict_policy`` picks what happens when an optimistic bind loses the
     race (see module docstring).  ``fused`` threads through to the scoring
     dispatch (``repro.sched.api.score``).
+
+    Robustness knobs (all default to the legacy fail-open behavior):
+
+    * ``queue_cap`` — admission backpressure: with more than this many
+      requests pending, each new ``submit`` sheds the OLDEST pending request
+      (decided as ``shed``, counted in ``DaemonStats.shed``) rather than
+      growing the queue without bound.  ``0`` = unbounded.
+    * ``backoff_base_s`` — a request that loses its optimistic bind re-queues
+      with exponential backoff: attempt ``k`` waits
+      ``backoff_base_s * 2**(k-1)`` before it is eligible for another batch
+      (``poll`` honors the hold; ``flush``/``drain`` force it through so
+      shutdown always terminates).  ``0`` = immediate re-queue.
+    * ``score_deadline_s`` — per-batch scoring deadline.  A Q-net launch
+      exceeding it (or returning NaN/diverged scores — always checked)
+      degrades the daemon: the breached batch is re-scored with the closed-
+      form kube heuristic (``sched.api.heuristic_score`` arithmetic, numpy,
+      no device launch) and the next ``degrade_batches`` batches skip the
+      Q-net entirely before probing it again.  ``None`` = no deadline.
+    * ``heuristic_only`` — serve every batch with the kube heuristic (the
+      degraded mode pinned on; the chaos bench's kube arm).
     """
 
     batch_size: int = 32
@@ -80,6 +102,11 @@ class DaemonConfig:
     max_retries: int = 4
     conflict_policy: str = "requeue"     # "requeue" | "next-best"
     fused: object = "auto"
+    queue_cap: int = 0                   # 0 = unbounded admission queue
+    backoff_base_s: float = 0.0          # 0 = immediate conflict re-queue
+    score_deadline_s: Optional[float] = None
+    degrade_batches: int = 8
+    heuristic_only: bool = False
 
     def __post_init__(self):
         if self.batch_size < 1:
@@ -87,6 +114,12 @@ class DaemonConfig:
         if self.conflict_policy not in ("requeue", "next-best"):
             raise ValueError(f"unknown conflict_policy "
                              f"{self.conflict_policy!r}")
+        if self.queue_cap < 0:
+            raise ValueError("queue_cap must be >= 0 (0 = unbounded)")
+        if self.backoff_base_s < 0:
+            raise ValueError("backoff_base_s must be >= 0")
+        if self.degrade_batches < 0:
+            raise ValueError("degrade_batches must be >= 0")
 
 
 class Decision(NamedTuple):
@@ -96,6 +129,66 @@ class Decision(NamedTuple):
     node: int
     latency_s: float       # decision time - submission time
     attempts: int          # 1 + times the request lost an optimistic bind
+    shed: bool = False     # evicted from the admission queue (backpressure)
+
+
+class LatencyReservoir:
+    """Fixed-memory uniform sample of the decision-latency stream.
+
+    Algorithm R over a numpy buffer: every latency ever appended has equal
+    probability of being in the sample, so p50/p99 stay unbiased while a
+    days-long ``replay_trace`` run holds ``capacity`` floats instead of an
+    unbounded python list.  Deterministically seeded — two daemons fed the
+    same stream report the same percentiles.  Keeps the list surface the
+    bench relies on (``append``, ``len``, iteration, ``np.asarray``).
+    """
+
+    __slots__ = ("_buf", "_filled", "_seen", "_rng")
+
+    def __init__(self, capacity: int = 4096, seed: int = 0):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self._buf = np.zeros((capacity,), np.float64)
+        self._filled = 0      # live entries in the buffer
+        self._seen = 0        # total appends ever
+        self._rng = np.random.default_rng(seed)
+
+    def append(self, x: float) -> None:
+        cap = self._buf.shape[0]
+        if self._filled < cap:
+            self._buf[self._filled] = x
+            self._filled += 1
+        else:
+            j = int(self._rng.integers(0, self._seen + 1))
+            if j < cap:
+                self._buf[j] = x
+        self._seen += 1
+
+    @property
+    def seen(self) -> int:
+        """Total latencies observed (not just the retained sample)."""
+        return self._seen
+
+    def __len__(self) -> int:
+        return self._filled
+
+    def __iter__(self):
+        return iter(self._buf[:self._filled])
+
+    def __array__(self, dtype=None, copy=None):
+        arr = self._buf[:self._filled]
+        return arr.astype(dtype) if dtype is not None else arr.copy()
+
+    def percentile(self, q: float) -> float:
+        if self._filled == 0:
+            return float("nan")
+        return float(np.percentile(self._buf[:self._filled], q))
+
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    def p99(self) -> float:
+        return self.percentile(99.0)
 
 
 @dataclasses.dataclass
@@ -103,21 +196,30 @@ class DaemonMetrics:
     submitted: int = 0
     bound: int = 0
     dropped: int = 0
+    shed: int = 0           # evicted from the admission queue (backpressure)
     conflicts: int = 0      # optimistic binds that failed live re-validation
     requeued: int = 0       # conflicted requests sent back to the queue
+    evictions: int = 0      # bound pods auto-requeued off a failed node
     batches: int = 0
-    device_launches: int = 0  # jitted scoring calls; == batches by design
-    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    device_launches: int = 0  # jitted scoring calls (degraded batches skip)
+    fallback_batches: int = 0  # batches served by the kube heuristic
+    latencies_s: LatencyReservoir = dataclasses.field(
+        default_factory=LatencyReservoir)
+
+
+# the public name the ops surface documents; the dataclass predates it
+DaemonStats = DaemonMetrics
 
 
 class _Request:
-    __slots__ = ("req_id", "pod", "t_submit", "attempts")
+    __slots__ = ("req_id", "pod", "t_submit", "attempts", "not_before")
 
     def __init__(self, req_id, pod, t_submit):
         self.req_id = req_id
         self.pod = pod
         self.t_submit = t_submit
         self.attempts = 0
+        self.not_before = t_submit   # conflict-backoff hold (poll honors it)
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +350,42 @@ class ClusterSubstrate:
         lv.startup_cpu[node] += start
         lv.image_cached[node] = True
 
+    def unbind(self, node: int, pod: PodSpec) -> None:
+        """Release one bound pod from the live buffer: ``env.remove_pod``
+        restricted to the touched row (startup transients and the cached
+        image stay, exactly like the env's arithmetic)."""
+        lv = self.live
+        lv.num_pods[node] -= 1
+        lv.exp_pods[node] -= 1
+        lv.cpu_requested[node] -= float(pod.cpu_request)
+        lv.mem_requested[node] -= float(pod.mem_request)
+        lv.pods_cpu[node] -= float(pod.cpu_demand)
+        lv.mem_used[node] -= float(pod.mem_demand)
+
+    def set_health(self, node: int, healthy: bool) -> None:
+        """Flip one node's Ready condition in the live buffer (the health
+        watchdog's write; ``feasible_one`` and the next snapshot see it)."""
+        self.live.healthy[node] = bool(healthy)
+
+    def heuristic_batch(self, pods: Sequence[PodSpec]):
+        """(B, N) kube LeastRequested+Balanced scores + feasibility against
+        the LIVE buffer, pure numpy — the degraded-mode scorer (same formula
+        as ``sched.api.heuristic_score``, no device launch)."""
+        lv = self.live
+        creq = np.asarray([float(p.cpu_request) for p in pods])[:, None]
+        mreq = np.asarray([float(p.mem_request) for p in pods])[:, None]
+        cpu_free = (lv.cpu_capacity[None, :] - lv.cpu_requested[None, :]
+                    - creq) / lv.cpu_capacity[None, :]
+        mem_free = (lv.mem_capacity[None, :] - lv.mem_requested[None, :]
+                    - mreq) / lv.mem_capacity[None, :]
+        q = 10.0 * (cpu_free + mem_free) / 2.0 \
+            + 10.0 * (1.0 - np.abs(cpu_free - mem_free))
+        ok = (lv.healthy[None, :]
+              & (lv.cpu_requested[None, :] + creq <= lv.cpu_capacity[None, :])
+              & (lv.mem_requested[None, :] + mreq <= lv.mem_capacity[None, :])
+              & (lv.num_pods[None, :] < lv.max_pods[None, :]))
+        return q, ok
+
 
 class FleetSubstrate:
     """Job->host placement (``sched.placement``) as a daemon substrate.
@@ -372,6 +510,33 @@ class FleetSubstrate:
         lv.job_util_pct[node] += _pl.JOB_UTIL_DELTA_PCT
         lv.num_jobs[node] += 1
 
+    def unbind(self, node: int, job: _pl.JobSpec) -> None:
+        lv = self.live
+        lv.cpu_pct[node] -= job.cpu_pct_demand
+        lv.mem_pct[node] -= job.mem_pct_demand
+        lv.job_util_pct[node] -= _pl.JOB_UTIL_DELTA_PCT
+        lv.num_jobs[node] -= 1
+
+    def set_health(self, node: int, healthy: bool) -> None:
+        self.live.healthy[node] = 1.0 if healthy else 0.0
+
+    def heuristic_batch(self, jobs: Sequence[_pl.JobSpec]):
+        """(B, N) percent-utilization LeastRequested+Balanced scores against
+        the LIVE buffer (``sched.api.heuristic_score``'s FleetState arm)."""
+        lv = self.live
+        dc = np.asarray([j.cpu_pct_demand for j in jobs])[:, None]
+        dm = np.asarray([j.mem_pct_demand for j in jobs])[:, None]
+        cpu_free = (100.0 - lv.cpu_pct[None, :] - dc) / 100.0
+        mem_free = (100.0 - lv.mem_pct[None, :] - dm) / 100.0
+        q = 10.0 * (cpu_free + mem_free) / 2.0 \
+            + 10.0 * (1.0 - np.abs(cpu_free - mem_free))
+        ok = ((lv.healthy[None, :] > 0.5)
+              & (lv.cpu_pct[None, :] + dc <= self.max_host_cpu_pct)
+              & (lv.mem_pct[None, :] + dm <= 95.0)
+              & (lv.job_util_pct[None, :] + _pl.JOB_UTIL_DELTA_PCT
+                 <= 100.0 + 1e-6))
+        return q, ok
+
 
 # ---------------------------------------------------------------------------
 # the daemon
@@ -391,11 +556,15 @@ class PlacementDaemon:
 
     def __init__(self, substrate, params: dict,
                  config: DaemonConfig = DaemonConfig(),
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 timer: Callable[[], float] = time.monotonic):
         self._sub = substrate
         self._params = params
         self.config = config
         self._clock = clock
+        # the deadline stopwatch: separate from ``clock`` so tests can pin
+        # the logical clock while still faking launch durations
+        self._timer = timer
         self._pending: collections.deque = collections.deque()
         self._scorer = substrate.make_scorer(config.fused)
         # sequence policy classes carry their arrival-history encoder state
@@ -403,19 +572,68 @@ class PlacementDaemon:
         # init_carry) thread an empty pytree
         self._carry = getattr(substrate, "init_carry", lambda p: ())(params)
         self._next_id = 0
+        # req_id -> (node, pod) of every currently-bound placement: the
+        # health watchdog's index for evicting pods off a failed node
+        self._bound: dict = {}
+        # > 0: this many upcoming batches skip the Q-net launch and serve
+        # from the kube heuristic (set on a deadline breach / NaN scores)
+        self._degraded = 0
         self.metrics = DaemonMetrics()
         self.decisions: List[Decision] = []
 
     # -- admission (writes the live buffer side only) -----------------------
 
     def submit(self, pod, now: Optional[float] = None) -> int:
-        """Enqueue one placement request; returns its request id."""
+        """Enqueue one placement request; returns its request id.
+
+        With ``queue_cap`` set, admission applies backpressure: a full queue
+        sheds its OLDEST pending request (decided as ``shed=True``, node
+        ``NO_PLACEMENT``) to make room — the newest work is the most likely
+        to still matter, and the shed count is the overload signal.
+        """
         now = self._clock() if now is None else now
+        cap = self.config.queue_cap
+        if cap > 0:
+            while len(self._pending) >= cap:
+                old = self._pending.popleft()
+                lat = max(now - old.t_submit, 0.0)
+                self.decisions.append(Decision(old.req_id, NO_PLACEMENT, lat,
+                                               old.attempts, shed=True))
+                self.metrics.latencies_s.append(lat)
+                self.metrics.shed += 1
         req = _Request(self._next_id, pod, now)
         self._next_id += 1
         self._pending.append(req)
         self.metrics.submitted += 1
         return req.req_id
+
+    # -- health watchdog (fail/recover events from the node controller) -----
+
+    def fail_node(self, node: int, now: Optional[float] = None) -> int:
+        """Mark ``node`` NotReady and auto-requeue every pod bound there.
+
+        The self-healing path: each evicted pod re-enters the admission
+        queue as a NEW submission (fresh request id, so the
+        bound+dropped+shed == submitted accounting stays exact per request)
+        and will be re-scored against the updated fleet — never against the
+        dead node, whose ``healthy`` is now false in both the live buffer
+        and the next snapshot.  Returns the number of evicted pods.
+        """
+        now = self._clock() if now is None else now
+        self._sub.set_health(node, False)
+        evicted = [(rid, pod) for rid, (n, pod) in self._bound.items()
+                   if n == node]
+        for rid, pod in evicted:
+            del self._bound[rid]
+            self._sub.unbind(node, pod)
+            self.metrics.evictions += 1
+            self.submit(pod, now=now)
+        return len(evicted)
+
+    def recover_node(self, node: int) -> None:
+        """Mark ``node`` Ready again — it rejoins the feasible set at the
+        next snapshot/bind re-validation."""
+        self._sub.set_health(node, True)
 
     def set_params(self, params: dict) -> None:
         """Hot-swap policy params (same pytree structure: no recompile) —
@@ -444,11 +662,12 @@ class PlacementDaemon:
         return self._process_batch(now)
 
     def flush(self, now: Optional[float] = None) -> int:
-        """Process one batch regardless of the cut condition (0 if idle)."""
+        """Process one batch regardless of the cut condition (0 if idle).
+        Backoff holds are overridden — flush means *now*."""
         now = self._clock() if now is None else now
         if not self._pending:
             return 0
-        return self._process_batch(now)
+        return self._process_batch(now, force=True)
 
     def drain(self, now: Optional[float] = None) -> int:
         """Flush until the queue is empty (conflict re-queues included)."""
@@ -480,23 +699,62 @@ class PlacementDaemon:
             return kenv.default_pod(self._sub.cfg)
         return _pl.JobSpec()
 
-    def _process_batch(self, now: float) -> int:
+    def _take_batch(self, now: float, force: bool) -> List[_Request]:
+        """Pop up to one batch of eligible requests (backoff holds honored
+        unless forced; held requests keep their queue order)."""
         b = self.config.batch_size
-        reqs = [self._pending.popleft()
-                for _ in range(min(len(self._pending), b))]
-        # publish the admission buffer as the read (scoring) snapshot; the
-        # live buffer keeps taking writes from here on
-        snap = self._sub.snapshot()
-        pods = self._sub.pack([r.pod for r in reqs], b)
-        scores, ok, self._carry = self._scorer(
-            self._params, snap, pods, self._carry, len(reqs))  # ONE launch
-        self.metrics.device_launches += 1
+        take: List[_Request] = []
+        held: List[_Request] = []
+        while self._pending and len(take) < b:
+            req = self._pending.popleft()
+            if force or req.not_before <= now:
+                take.append(req)
+            else:
+                held.append(req)
+        for req in reversed(held):
+            self._pending.appendleft(req)
+        return take
+
+    def _process_batch(self, now: float, force: bool = False) -> int:
+        reqs = self._take_batch(now, force)
+        if not reqs:
+            return 0
+        scores = ok = None
+        degraded = self.config.heuristic_only or self._degraded > 0
+        if not degraded:
+            # publish the admission buffer as the read (scoring) snapshot;
+            # the live buffer keeps taking writes from here on
+            snap = self._sub.snapshot()
+            pods = self._sub.pack([r.pod for r in reqs],
+                                  self.config.batch_size)
+            t0 = self._timer()
+            q, okq, carry2 = self._scorer(
+                self._params, snap, pods, self._carry, len(reqs))  # 1 launch
+            q = np.asarray(q)
+            elapsed = self._timer() - t0
+            self.metrics.device_launches += 1
+            deadline = self.config.score_deadline_s
+            real = q[:len(reqs)]
+            bad = (not np.all(np.isfinite(real))
+                   or float(np.max(np.abs(real))) > _DIVERGENCE_LIMIT)
+            if bad or (deadline is not None and elapsed > deadline):
+                # degrade: discard the launch (scores AND its history-carry
+                # advance) and serve this + the next degrade_batches batches
+                # from the closed-form heuristic, no device round-trips
+                self._degraded = self.config.degrade_batches
+                degraded = True
+            else:
+                self._carry = carry2
+                scores, ok = q, np.asarray(okq)
+        if degraded:
+            if not self.config.heuristic_only and self._degraded > 0:
+                self._degraded -= 1
+            self.metrics.fallback_batches += 1
+            scores, ok = self._sub.heuristic_batch([r.pod for r in reqs])
         self.metrics.batches += 1
-        scores = np.asarray(scores)
-        ok = np.asarray(ok)
         decided = 0
         for i, req in enumerate(reqs):
-            decided += self._commit(req, scores[i], ok[i])
+            decided += self._commit(req, scores[i], ok[i], now)
         return decided
 
     def _decide(self, req: _Request, node: int) -> None:
@@ -507,8 +765,10 @@ class PlacementDaemon:
             self.metrics.dropped += 1
         else:
             self.metrics.bound += 1
+            self._bound[req.req_id] = (node, req.pod)
 
-    def _commit(self, req: _Request, row: np.ndarray, ok: np.ndarray) -> int:
+    def _commit(self, req: _Request, row: np.ndarray, ok: np.ndarray,
+                now: float) -> int:
         """Optimistic bind of one scored request; returns 1 if decided."""
         req.attempts += 1
         masked = np.where(ok, row, -np.inf)
@@ -536,14 +796,19 @@ class PlacementDaemon:
         if req.attempts > self.config.max_retries:
             self._decide(req, NO_PLACEMENT)
             return 1
-        # back to the queue head: re-scored against fresh state next batch
+        # back to the queue head (with exponential backoff when configured):
+        # re-scored against fresh state next eligible batch
         self.metrics.requeued += 1
+        if self.config.backoff_base_s > 0:
+            req.not_before = now + (self.config.backoff_base_s
+                                    * 2.0 ** (req.attempts - 1))
         self._pending.appendleft(req)
         return 0
 
 
 def replay_trace(daemon: PlacementDaemon, t_s: Sequence[float],
-                 pods: Sequence, speed: float = 1.0) -> float:
+                 pods: Sequence, speed: float = 1.0,
+                 events: Optional[Sequence] = None) -> float:
     """Replay an arrival trace in real time through the daemon.
 
     ``t_s`` are arrival offsets (seconds) from the replay start, ``pods``
@@ -553,15 +818,39 @@ def replay_trace(daemon: PlacementDaemon, t_s: Sequence[float],
     the offered-load curve the placement_serve bench measures.  ``speed``
     compresses the trace (2.0 = twice the offered rate).  Polls between
     arrivals, drains at the end; returns the wall-clock serving duration.
+
+    ``events`` injects node chaos into the replay: an optional sequence of
+    ``(t_off, kind, node)`` tuples (``kind`` in ``{"fail", "recover"}``,
+    offsets on the same clock as ``t_s``), applied in order as the replay
+    clock passes each offset — ``fail`` evicts and auto-requeues the node's
+    bound pods through the health watchdog.  Events left over when the
+    arrivals end are applied before the final drain.
     """
     clock = daemon._clock
+    ev = sorted(events or [], key=lambda e: e[0])
+    ev_i = 0
+
+    def apply_events(up_to: float):
+        nonlocal ev_i
+        while ev_i < len(ev) and ev[ev_i][0] / speed <= up_to:
+            _, kind, node = ev[ev_i]
+            if kind == "fail":
+                daemon.fail_node(int(node))
+            elif kind == "recover":
+                daemon.recover_node(int(node))
+            else:
+                raise ValueError(f"unknown chaos event kind {kind!r}")
+            ev_i += 1
+
     t0 = clock()
     for t_off, pod in zip(t_s, pods):
         due = t0 + t_off / speed
+        apply_events(due - t0)
         while clock() < due:
             if not daemon.poll():
                 time.sleep(0)        # yield; arrival gaps are sub-ms anyway
         daemon.submit(pod, now=due)
         daemon.poll()
+    apply_events(float("inf"))
     daemon.drain()
     return clock() - t0

@@ -1,18 +1,22 @@
-"""Straggler detection and evacuation for the distributed runtime.
+"""Straggler detection, evacuation, and recovery for the distributed runtime.
 
 A host whose recent step times drift beyond ``threshold``× the fleet median
 (or whose health flag drops) is declared a straggler; its jobs are re-placed
-through the SDQN engine — the Table-3 health term (−100) guarantees the
-Q-scores of unhealthy hosts are never selected, so evacuation and avoidance
-share one mechanism.
+through the unified ``sched.api.select`` dispatch — the Table-3 health term
+(−100) guarantees the Q-scores of unhealthy hosts are never selected, so
+evacuation and avoidance share one mechanism.  Evacuated hosts are tracked,
+and ``recover`` marks them healthy again once their fresh step times come
+back under the straggler line (the daemon's fail/recover cycle, host-side).
 """
 from __future__ import annotations
 
 import collections
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.core.types import NO_PLACEMENT
+from repro.sched import api
 from repro.sched.placement import (JOB_UTIL_DELTA_PCT, FleetState, JobSpec,
                                    PlacementEngine)
 
@@ -22,31 +26,51 @@ class StragglerMonitor:
         self.window = window
         self.threshold = threshold
         self._times: Dict[int, collections.deque] = {}
+        self._evacuated: Set[int] = set()
 
     def record(self, host: int, step_time_s: float):
         self._times.setdefault(host, collections.deque(maxlen=self.window)).append(step_time_s)
 
+    def _medians(self) -> Dict[int, float]:
+        return {h: float(np.median(t)) for h, t in self._times.items()
+                if len(t) >= 4}
+
     def stragglers(self) -> List[int]:
         if not self._times:
             return []
-        medians = {h: float(np.median(t)) for h, t in self._times.items() if len(t) >= 4}
+        medians = self._medians()
         if len(medians) < 2:
             return []
         fleet_median = float(np.median(list(medians.values())))
         return [h for h, m in medians.items() if m > self.threshold * fleet_median]
 
+    @property
+    def evacuated(self) -> List[int]:
+        """Hosts currently marked unhealthy by an ``evacuate`` call."""
+        return sorted(self._evacuated)
+
     def evacuate(self, engine: PlacementEngine, fleet: FleetState, job: JobSpec,
                  hosts: Optional[List[int]] = None) -> tuple:
-        """Mark stragglers unhealthy and re-place their jobs. Returns
-        (new_fleet, migrations)."""
+        """Mark stragglers unhealthy and re-place their jobs.  Returns
+        (new_fleet, migrations).
+
+        Re-placement routes through ``sched.api.select`` — the same dispatch
+        (and the same ``NO_PLACEMENT`` no-feasible-host sentinel) every other
+        serving path uses.  Jobs that find no feasible host simply drain off
+        with their dead host (no migration recorded); the host's stale step
+        samples are cleared so ``recover`` judges it on fresh times only.
+        """
         hosts = self.stragglers() if hosts is None else hosts
         migrations = []
         for host in hosts:
             n_jobs = int(fleet.num_jobs[host])
             fleet = fleet._replace(healthy=fleet.healthy.at[host].set(0.0))
+            self._evacuated.add(int(host))
+            self._times.pop(int(host), None)
             for _ in range(n_jobs):
-                tgt, scores = engine.select(fleet, job)
-                if not bool(np.isfinite(np.asarray(scores)[tgt])):
+                tgt = int(api.select(fleet, job, params=engine.qparams,
+                                     guard=True))
+                if tgt == NO_PLACEMENT:
                     break
                 fleet = engine.place(fleet, tgt, job)
                 migrations.append((host, tgt))
@@ -58,3 +82,23 @@ class StragglerMonitor:
                 num_jobs=fleet.num_jobs - (onehot * n_jobs).astype(np.int32),
             )
         return fleet, migrations
+
+    def recover(self, fleet: FleetState,
+                hosts: Optional[List[int]] = None) -> tuple:
+        """Mark recovered hosts healthy again.  Returns (new_fleet, healed).
+
+        With ``hosts=None``, heals every evacuated host that has reported
+        ≥ 4 FRESH step samples (its history was cleared at evacuation) whose
+        median is back under the straggler line — a flapping host that is
+        still slow stays out of the fleet.  Explicit ``hosts`` force-heal.
+        """
+        if hosts is None:
+            bad = set(self.stragglers())
+            hosts = [h for h in sorted(self._evacuated)
+                     if h in self._medians() and h not in bad]
+        healed = []
+        for host in hosts:
+            fleet = fleet._replace(healthy=fleet.healthy.at[host].set(1.0))
+            self._evacuated.discard(int(host))
+            healed.append(int(host))
+        return fleet, healed

@@ -110,3 +110,28 @@ def daemon_ops(max_ops: int = 24):
     flush = st.tuples(st.just("flush"), st.just(0.0))
     return st.lists(st.one_of(submit, advance, poll, flush),
                     min_size=1, max_size=max_ops)
+
+
+def chaos_daemon_ops(max_ops: int = 28, max_node: int = 8):
+    """``daemon_ops`` plus node fail/recover events (the health watchdog).
+
+    ``("fail", node)`` marks a node NotReady mid-stream and auto-requeues
+    its bound pods; ``("recover", node)`` brings it back.  Node indices are
+    taken modulo the cluster size by the checker, so one strategy serves any
+    cluster.  Interleaved with submits and polls, these drive the daemon
+    through eviction storms, shed-under-backpressure, and rebinding onto a
+    shrunken fleet — the bound+dropped+shed == submitted ledger must balance
+    through all of it.
+    """
+    submit = st.tuples(st.just("submit"),
+                       st.floats(0.05, 1.5, allow_nan=False,
+                                 allow_infinity=False))
+    advance = st.tuples(st.just("advance"),
+                        st.floats(0.0, 0.1, allow_nan=False,
+                                  allow_infinity=False))
+    poll = st.tuples(st.just("poll"), st.just(0.0))
+    flush = st.tuples(st.just("flush"), st.just(0.0))
+    fail = st.tuples(st.just("fail"), st.integers(0, max_node - 1))
+    recover = st.tuples(st.just("recover"), st.integers(0, max_node - 1))
+    return st.lists(st.one_of(submit, advance, poll, flush, fail, recover),
+                    min_size=1, max_size=max_ops)

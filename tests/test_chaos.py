@@ -1,0 +1,269 @@
+"""Chaos-hardening tests: failure traces, mid-episode eviction/reschedule,
+flaky scenarios, and checkpoint-corruption fallback.
+
+The load-bearing guarantees pinned here:
+
+  * an EMPTY failure trace reproduces the no-trace episode within 1e-6 for
+    EVERY registered policy class (the chaos path is exactly a no-op when
+    nothing fails);
+  * the eviction ledger balances — ``evicted == rescheduled + lost`` — under
+    plain calls, ``jit``, and ``vmap``;
+  * a corrupted checkpoint (truncated shard, garbled manifest, hand-edited
+    digest) degrades to a fresh init under ``on_corrupt="fallback"`` and
+    raises otherwise; a *missing* checkpoint always raises.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dqn, env as kenv, policy as policy_mod, schedulers
+from repro.core.types import NodeClass, paper_cluster
+from repro.scenarios import registry
+
+CHAOS_SCENARIOS = ("preemptible-flaky", "batch-flaky", "train-flaky")
+
+
+# ---------------------------------------------------------------------------
+# failure-trace sampling
+# ---------------------------------------------------------------------------
+
+
+class TestFailureTrace:
+    def test_no_scenario_cluster_never_fails(self):
+        cfg = paper_cluster()
+        assert not kenv.has_chaos(cfg)
+        trace = kenv.sample_failure_trace(jax.random.PRNGKey(0), cfg)
+        assert bool(jnp.all(jnp.isinf(trace.fail_s)))
+        assert not bool(jnp.any(jnp.isnan(trace.fail_s)))
+        assert not bool(jnp.any(jnp.isnan(trace.recover_s)))
+        down = kenv.trace_down(trace, jnp.float32(1e9))
+        assert not bool(jnp.any(down))
+
+    def test_flaky_scenario_samples_finite_windows(self):
+        cfg = registry.make_env("preemptible-flaky")
+        assert kenv.has_chaos(cfg)
+        trace = kenv.sample_failure_trace(jax.random.PRNGKey(1), cfg)
+        assert trace.fail_s.shape == (cfg.chaos_cycles, cfg.n_nodes)
+        # the preemptible class fails; the reliable slaves never do
+        assert bool(jnp.any(jnp.isfinite(trace.fail_s)))
+        assert bool(jnp.any(jnp.isinf(trace.fail_s)))
+        assert not bool(jnp.any(jnp.isnan(trace.recover_s)))
+        # windows are ordered and strictly positive-length where finite
+        finite = jnp.isfinite(trace.fail_s)
+        assert bool(jnp.all(jnp.where(finite,
+                                      trace.recover_s > trace.fail_s, True)))
+
+    def test_trace_down_window_semantics(self):
+        trace = kenv.FailureTrace(
+            fail_s=jnp.asarray([[10.0, jnp.inf]], jnp.float32),
+            recover_s=jnp.asarray([[20.0, jnp.inf]], jnp.float32))
+        for t, expect in ((5.0, [False, False]), (10.0, [True, False]),
+                          (19.9, [True, False]), (20.0, [False, False])):
+            got = np.asarray(kenv.trace_down(trace, jnp.float32(t)))
+            np.testing.assert_array_equal(got, expect)
+
+
+class TestRescheduleRing:
+    def test_overflow_is_counted_not_silent(self):
+        q = kenv.reschedule_queue_init(2)
+        mask = jnp.asarray([True, True, True, False], bool)
+        vals = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+        q2, lost = kenv._queue_push(q, mask, vals, 2)
+        assert int(q2.count) == 2
+        assert int(lost) == 1
+        np.testing.assert_array_equal(np.asarray(q2.slot), [0, 1])
+
+    def test_push_wraps_around_head(self):
+        q = kenv.reschedule_queue_init(3)._replace(head=jnp.int32(2))
+        mask = jnp.asarray([True, True, False], bool)
+        vals = jnp.asarray([7.0, 8.0, 0.0], jnp.float32)
+        q2, lost = kenv._queue_push(q, mask, vals, 3)
+        assert int(lost) == 0
+        assert int(q2.count) == 2
+        # ring positions 2 and 0 (wrap), oldest-first
+        assert int(q2.slot[2]) == 0 and int(q2.slot[0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# empty-trace parity across every policy class
+# ---------------------------------------------------------------------------
+
+
+def _selectors(cfg):
+    """(name, select, carry) for kube + every registered policy class."""
+    out = [("kube", schedulers.make_kube_selector(cfg), None),
+           ("sdqn", schedulers.make_sdqn_selector(
+               dqn.init_qnet(jax.random.PRNGKey(0)), cfg), None)]
+    for name in policy_mod.names():
+        spec = policy_mod.get(name)
+        params = spec.init(jax.random.PRNGKey(1))
+        select, carry = schedulers.make_policy_selector(spec, params, cfg)
+        out.append((name, select, carry))
+    return out
+
+
+class TestEmptyTraceParity:
+    N_PODS = 12
+
+    @pytest.mark.parametrize("scenario", [None, "diurnal-churn"])
+    def test_all_policy_classes(self, scenario):
+        cfg = paper_cluster() if scenario is None \
+            else registry.make_env(scenario)
+        empty = kenv.empty_failure_trace(cfg.n_nodes, cfg.chaos_cycles)
+        for name, select, carry in _selectors(cfg):
+            ref = kenv.run_episode(jax.random.PRNGKey(7), cfg, select,
+                                   self.N_PODS, select_carry=carry)
+            got = kenv.run_episode(jax.random.PRNGKey(7), cfg, select,
+                                   self.N_PODS, select_carry=carry,
+                                   failure_trace=empty)
+            assert abs(float(ref.metric) - float(got.metric)) <= 1e-6, name
+            np.testing.assert_array_equal(np.asarray(ref.placements),
+                                          np.asarray(got.placements),
+                                          err_msg=name)
+            assert int(got.stats.evicted) == 0, name
+            assert int(got.stats.lost) == 0, name
+
+
+# ---------------------------------------------------------------------------
+# eviction accounting under chaos
+# ---------------------------------------------------------------------------
+
+
+def _flaky_cfg(**overrides):
+    # aggressive MTBF so a short episode reliably sees failures
+    import dataclasses
+
+    scn = registry.get_scenario("preemptible-flaky")
+    flaky = dataclasses.replace(scn, node_classes=tuple(
+        dataclasses.replace(c, mtbf_s=60.0, mttr_s=30.0)
+        if np.isfinite(c.mtbf_s) else c
+        for c in scn.node_classes))
+    return registry.scenario_env(flaky, **overrides)
+
+
+class TestEvictionInvariant:
+    def test_evicted_balances_rescheduled_plus_lost(self):
+        cfg = _flaky_cfg()
+        select = schedulers.make_kube_selector(cfg)
+        res = kenv.run_episode(jax.random.PRNGKey(3), cfg, select, 40)
+        evicted = int(res.stats.evicted)
+        assert evicted > 0, "chaos scenario produced no evictions"
+        assert evicted == int(res.stats.rescheduled) + int(res.stats.lost)
+
+    def test_invariant_under_jit_and_vmap(self):
+        cfg = _flaky_cfg()
+        qparams = dqn.init_qnet(jax.random.PRNGKey(0))
+        select = schedulers.make_sdqn_selector(qparams, cfg)
+
+        @jax.jit
+        def run(key):
+            return kenv.run_episode(key, cfg, select, 24)
+
+        keys = jax.random.split(jax.random.PRNGKey(9), 4)
+        res = jax.vmap(run)(keys)
+        evicted = np.asarray(res.stats.evicted)
+        balance = np.asarray(res.stats.rescheduled) + np.asarray(res.stats.lost)
+        np.testing.assert_array_equal(evicted, balance)
+        assert evicted.sum() > 0
+
+    def test_reschedules_bounded_by_evictions(self):
+        cfg = _flaky_cfg()
+        select = schedulers.make_kube_selector(cfg)
+        res = kenv.run_episode(jax.random.PRNGKey(5), cfg, select, 40)
+        assert 0 <= int(res.stats.rescheduled) <= int(res.stats.evicted)
+        assert 0 <= int(res.stats.lost) <= int(res.stats.evicted)
+
+
+# ---------------------------------------------------------------------------
+# flaky scenario registration
+# ---------------------------------------------------------------------------
+
+
+class TestFlakyScenarios:
+    def test_registered_with_chaos_classes(self):
+        names = registry.scenario_names()
+        for name in CHAOS_SCENARIOS:
+            assert name in names
+            cfg = registry.make_env(name)
+            assert kenv.has_chaos(cfg)
+
+    def test_chaos_preset_exists(self):
+        from repro.core.presets import CHAOS_MIX_NAMES, SDQN_CHAOS_PRESET
+
+        assert set(CHAOS_MIX_NAMES) == set(CHAOS_SCENARIOS)
+        assert SDQN_CHAOS_PRESET.variant == "sdqn"
+
+    def test_nodeclass_defaults_are_reliable(self):
+        nc = NodeClass(name="x", count=1, cpu_capacity=4000.0,
+                       mem_capacity=8000.0)
+        assert not np.isfinite(nc.mtbf_s)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: digest + corruption fallback
+# ---------------------------------------------------------------------------
+
+
+def _save_mlp(tmp_path):
+    spec = policy_mod.get("mlp")
+    params = spec.init(jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    policy_mod.save_checkpoint(d, 3, params, spec)
+    return d, params
+
+
+def _step_dir(d):
+    return os.path.join(d, "step_00000003")
+
+
+class TestCheckpointIntegrity:
+    def test_roundtrip_with_digest(self, tmp_path):
+        d, params = _save_mlp(tmp_path)
+        manifest = json.load(open(os.path.join(_step_dir(d), "manifest.json")))
+        assert "content_digest" in manifest
+        restored, spec = policy_mod.restore_checkpoint(d)
+        assert spec.name == "mlp"
+        jax.tree.map(np.testing.assert_array_equal, restored, params)
+
+    def test_hand_edited_manifest_fails_digest(self, tmp_path):
+        d, _ = _save_mlp(tmp_path)
+        path = os.path.join(_step_dir(d), "manifest.json")
+        manifest = json.load(open(path))
+        next(iter(manifest["leaves"].values()))["shape"] = [1]
+        json.dump(manifest, open(path, "w"))
+        with pytest.raises(IOError, match="digest mismatch"):
+            policy_mod.restore_checkpoint(d)
+
+    def test_truncated_shard_raises_by_default(self, tmp_path):
+        d, _ = _save_mlp(tmp_path)
+        shard = os.path.join(_step_dir(d), "shard_00000.npz")
+        blob = open(shard, "rb").read()
+        open(shard, "wb").write(blob[: len(blob) // 2])
+        with pytest.raises(IOError):
+            policy_mod.restore_checkpoint(d)
+
+    @pytest.mark.parametrize("damage", ["manifest", "shard"])
+    def test_fallback_returns_fresh_init(self, tmp_path, damage):
+        d, _ = _save_mlp(tmp_path)
+        if damage == "manifest":
+            open(os.path.join(_step_dir(d), "manifest.json"), "w").write("{oops")
+        else:
+            shard = os.path.join(_step_dir(d), "shard_00000.npz")
+            open(shard, "wb").write(b"not an npz")
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            params, spec = policy_mod.restore_checkpoint(
+                d, on_corrupt="fallback")
+        assert spec.name == "mlp"
+        template = spec.init(jax.random.PRNGKey(0))
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.shape(a), np.shape(b)), params, template)
+
+    def test_missing_checkpoint_always_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            policy_mod.restore_checkpoint(str(tmp_path / "nope"),
+                                          on_corrupt="fallback")

@@ -415,6 +415,272 @@ class TestEpisodeResultShim:
                                "stats")
 
 
+# ---------------------------------------------------------------------------
+# self-healing: health watchdog, backpressure, backoff, degradation
+# ---------------------------------------------------------------------------
+
+
+class TickTimer:
+    """Fake deadline stopwatch: every read advances by ``step`` seconds, so
+    a scoring launch appears to take exactly ``step`` regardless of the
+    (pinned) logical clock."""
+
+    def __init__(self, step):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+class TestHealthWatchdog:
+    def test_fail_node_evicts_and_requeues(self, state, qparams):
+        d, sub, _ = make_daemon(state, qparams, batch_size=4, max_wait_s=1e9)
+        pod = kenv.default_pod(CFG)
+        for _ in range(4):
+            d.submit(pod)
+        d.poll()
+        bound = [x for x in d.decisions if x.node != NO_PLACEMENT]
+        assert bound, "setup: nothing bound"
+        victim = bound[0].node
+        n_on_victim = sum(1 for x in bound if x.node == victim)
+        pods_before = int(sub.live.num_pods[victim])
+        evicted = d.fail_node(victim)
+        assert evicted == n_on_victim
+        assert d.metrics.evictions == n_on_victim
+        assert not sub.live.healthy[victim]
+        # evicted pods released their live-buffer resources...
+        assert int(sub.live.num_pods[victim]) == pods_before - n_on_victim
+        # ...and re-entered the queue as fresh submissions
+        assert d.pending == n_on_victim
+        assert d.metrics.submitted == 4 + n_on_victim
+        d.drain()
+        # rebound decisions never land on the failed node
+        for dec in d.decisions[len(bound):]:
+            assert dec.node != victim
+        m = d.metrics
+        assert m.bound + m.dropped + m.shed == m.submitted
+        assert len(d.decisions) == m.submitted
+
+    def test_recover_node_rejoins_feasible_set(self, state, qparams):
+        d, sub, _ = make_daemon(state, qparams, batch_size=1)
+        pod = kenv.default_pod(CFG)
+        for n in range(CFG.n_nodes):
+            if n != 2:
+                d.fail_node(n)
+        d.submit(pod)
+        d.flush()
+        assert d.decisions[-1].node == 2      # only node left standing
+        d.fail_node(2)
+        d.recover_node(3)
+        assert sub.live.healthy[3]
+        d.drain()                              # the evictee rebinds onto 3
+        rebound = d.decisions[-1]
+        assert rebound.node == 3
+
+    def test_fail_empty_node_is_noop_eviction(self, state, qparams):
+        d, sub, _ = make_daemon(state, qparams)
+        assert d.fail_node(3) == 0
+        assert d.metrics.evictions == 0
+        assert not sub.live.healthy[3]
+
+
+class TestBackpressure:
+    def test_full_queue_sheds_oldest(self, state, qparams):
+        d, _, _ = make_daemon(state, qparams, batch_size=64, max_wait_s=1e9,
+                              queue_cap=2)
+        pod = kenv.default_pod(CFG)
+        first = d.submit(pod)
+        d.submit(pod)
+        d.submit(pod)                          # cap hit: oldest shed
+        assert d.metrics.shed == 1
+        assert d.pending == 2
+        shed = d.decisions[0]
+        assert shed.req_id == first
+        assert shed.shed and shed.node == NO_PLACEMENT
+        d.drain()
+        m = d.metrics
+        assert m.bound + m.dropped + m.shed == m.submitted == 3
+        assert len(d.decisions) == 3
+
+    def test_unbounded_by_default(self, state, qparams):
+        d, _, _ = make_daemon(state, qparams, batch_size=64, max_wait_s=1e9)
+        pod = kenv.default_pod(CFG)
+        for _ in range(100):
+            d.submit(pod)
+        assert d.metrics.shed == 0
+        assert d.pending == 100
+
+
+class TestConflictBackoff:
+    def _conflicted(self, state, qparams, **cfg_kw):
+        d, sub, clock = make_daemon(state, qparams, batch_size=1,
+                                    max_wait_s=0.0, **cfg_kw)
+        real = sub.feasible_one
+        sub.feasible_one = lambda node, pod: False   # every bind loses
+        d.submit(kenv.default_pod(CFG))
+        assert d.poll() == 0                   # conflicted; re-queued
+        sub.feasible_one = real
+        return d, clock
+
+    def test_poll_honors_backoff_hold(self, state, qparams):
+        d, clock = self._conflicted(state, qparams, backoff_base_s=5.0)
+        assert d.pending == 1
+        clock.t = 4.9
+        assert d.poll() == 0                   # still inside the hold
+        clock.t = 5.0
+        assert d.poll() == 1                   # hold expired: re-scored
+        assert d.decisions[0].attempts == 2
+
+    def test_flush_overrides_hold(self, state, qparams):
+        d, clock = self._conflicted(state, qparams, backoff_base_s=1e9)
+        assert d.flush() == 1                  # force: shutdown terminates
+        assert d.metrics.bound == 1
+
+    def test_backoff_doubles_per_attempt(self, state, qparams):
+        d, sub, clock = make_daemon(state, qparams, batch_size=1,
+                                    max_wait_s=0.0, max_retries=3,
+                                    backoff_base_s=1.0)
+        sub.feasible_one = lambda node, pod: False
+        d.submit(kenv.default_pod(CFG))
+        d.poll()                               # attempt 1 -> hold 1s
+        assert d._pending[0].not_before == pytest.approx(1.0)
+        clock.t = 1.0
+        d.poll()                               # attempt 2 -> hold 2s
+        assert d._pending[0].not_before == pytest.approx(3.0)
+        clock.t = 3.0
+        d.poll()                               # attempt 3 -> hold 4s
+        assert d._pending[0].not_before == pytest.approx(7.0)
+
+
+class TestRetryExhaustion:
+    @pytest.mark.parametrize("policy", ["requeue", "next-best"])
+    def test_exhausted_retries_drop_under_both_policies(
+            self, state, qparams, policy):
+        d, sub, _ = make_daemon(state, qparams, batch_size=1, max_wait_s=0.0,
+                                max_retries=2, conflict_policy=policy)
+        sub.feasible_one = lambda node, pod: False   # permanent bind race
+        d.submit(kenv.default_pod(CFG))
+        d.drain()
+        assert d.metrics.dropped == 1
+        assert d.metrics.conflicts == 3        # initial + 2 retries
+        assert d.metrics.requeued == 2
+        dec = d.decisions[0]
+        assert dec.node == NO_PLACEMENT
+        assert dec.attempts == 3
+        m = d.metrics
+        assert m.bound + m.dropped + m.shed == m.submitted == 1
+
+
+class TestGracefulDegradation:
+    def test_deadline_breach_degrades_to_heuristic(self, state, qparams):
+        clock = FakeClock()
+        sub = ClusterSubstrate(state, CFG)
+        d = PlacementDaemon(
+            sub, qparams,
+            DaemonConfig(batch_size=2, max_wait_s=1e9, score_deadline_s=0.5,
+                         degrade_batches=2),
+            clock=clock, timer=TickTimer(1.0))   # every launch "takes" 1s
+        pod = kenv.default_pod(CFG)
+        for batch in range(4):
+            d.submit(pod)
+            d.submit(pod)
+            d.flush()
+        m = d.metrics
+        assert m.batches == 4
+        # batch 1 probes the net (breach), 2-3 skip it, 4 probes again
+        assert m.device_launches == 2
+        assert m.fallback_batches == 4
+        assert m.bound + m.dropped + m.shed == m.submitted == 8
+
+    def test_nan_scores_fall_back_same_batch(self, state, qparams):
+        bad_fn = lambda params, feats: jnp.full((feats.shape[0],), jnp.nan)
+        d, _, _ = make_daemon(state, qparams, score_fn=bad_fn, batch_size=2,
+                              max_wait_s=1e9)
+        pod = kenv.default_pod(CFG)
+        d.submit(pod)
+        d.submit(pod)
+        assert d.flush() == 2
+        assert d.metrics.fallback_batches == 1
+        # NaN scores still place pods: the heuristic served the batch
+        assert d.metrics.bound == 2
+
+    def test_diverged_scores_fall_back(self, state, qparams):
+        hot_fn = lambda params, feats: jnp.full((feats.shape[0],), 1e9)
+        d, _, _ = make_daemon(state, qparams, score_fn=hot_fn, batch_size=1)
+        d.submit(kenv.default_pod(CFG))
+        assert d.flush() == 1
+        assert d.metrics.fallback_batches == 1
+        assert d.metrics.bound == 1
+
+    def test_heuristic_only_never_launches(self, state, qparams):
+        d, _, _ = make_daemon(state, qparams, heuristic_only=True,
+                              batch_size=4, max_wait_s=1e9)
+        pod = kenv.default_pod(CFG)
+        for _ in range(9):
+            d.submit(pod)
+        d.drain()
+        m = d.metrics
+        assert m.device_launches == 0
+        assert m.fallback_batches == m.batches == 3
+        assert m.bound + m.dropped == 9
+
+    def test_healthy_scores_never_degrade(self, state, qparams):
+        d, _, _ = make_daemon(state, qparams, batch_size=2, max_wait_s=1e9,
+                              score_deadline_s=1e9)
+        pod = kenv.default_pod(CFG)
+        d.submit(pod)
+        d.submit(pod)
+        d.flush()
+        assert d.metrics.fallback_batches == 0
+        assert d.metrics.device_launches == d.metrics.batches == 1
+
+
+class TestLatencyReservoir:
+    def test_memory_stays_bounded(self):
+        from repro.sched.daemon import LatencyReservoir
+
+        r = LatencyReservoir(capacity=8, seed=1)
+        for i in range(1000):
+            r.append(float(i))
+        assert len(r) == 8
+        assert r.seen == 1000
+        assert np.asarray(r).shape == (8,)
+
+    def test_percentiles_exact_below_capacity(self):
+        from repro.sched.daemon import LatencyReservoir
+
+        r = LatencyReservoir(capacity=256)
+        vals = np.arange(100, dtype=np.float64)
+        for v in vals:
+            r.append(float(v))
+        assert r.p50() == pytest.approx(np.percentile(vals, 50))
+        assert r.p99() == pytest.approx(np.percentile(vals, 99))
+        assert r.percentile(0.0) == 0.0
+
+    def test_empty_reservoir_is_nan(self):
+        from repro.sched.daemon import LatencyReservoir
+
+        r = LatencyReservoir()
+        assert np.isnan(r.p99())
+
+    def test_sample_stays_representative(self):
+        from repro.sched.daemon import LatencyReservoir
+
+        r = LatencyReservoir(capacity=512, seed=7)
+        for v in np.linspace(0.0, 1.0, 20_000):
+            r.append(float(v))
+        # uniform stream: the retained sample's median stays near 0.5
+        assert abs(r.p50() - 0.5) < 0.1
+
+    def test_daemon_metrics_use_reservoir(self, state, qparams):
+        from repro.sched.daemon import LatencyReservoir
+
+        d, _, _ = make_daemon(state, qparams)
+        assert isinstance(d.metrics.latencies_s, LatencyReservoir)
+
+
 class TestServeCheckpointLoading:
     def test_load_qnet_roundtrips_through_ckpt(self, tmp_path, qparams):
         from repro.checkpoint import ckpt

@@ -55,6 +55,51 @@ class TestFailureRecoveryLoop:
         plan = consolidation_plan(engine, fleet, job, idle_threshold_jobs=2)
         assert plan.projected_avg_cpu_after <= plan.projected_avg_cpu_before + 1e-3
 
+    def test_evacuated_host_heals_on_fresh_fast_samples(self):
+        engine = PlacementEngine(dqn.init_qnet(jax.random.PRNGKey(0)))
+        fleet = fresh_fleet(8, jax.random.PRNGKey(1))
+        job = JobSpec(cpu_pct_demand=3.0)
+        mon = StragglerMonitor(window=8, threshold=1.5)
+        for _ in range(8):
+            for h in range(8):
+                mon.record(h, 3.0 if h == 5 else 1.0)
+        fleet, _ = mon.evacuate(engine, fleet, job)
+        assert mon.evacuated == [5]
+        assert float(fleet.healthy[5]) == 0.0
+        # no fresh samples yet: auto-heal refuses
+        fleet, healed = mon.recover(fleet)
+        assert healed == []
+        # still-slow fresh samples: stays out of the fleet
+        for _ in range(4):
+            mon.record(5, 3.0)
+            mon.record(0, 1.0)
+        fleet, healed = mon.recover(fleet)
+        assert healed == []
+        # fast fresh samples: rejoins
+        for _ in range(8):
+            mon.record(5, 1.0)
+        fleet, healed = mon.recover(fleet)
+        assert healed == [5]
+        assert mon.evacuated == []
+        assert float(fleet.healthy[5]) == 1.0
+
+    def test_evacuation_honors_no_placement_sentinel(self):
+        """With no feasible target anywhere, evacuated jobs drain off with
+        their host instead of being force-placed."""
+        engine = PlacementEngine(dqn.init_qnet(jax.random.PRNGKey(0)))
+        fleet = fresh_fleet(4, jax.random.PRNGKey(2))
+        job = JobSpec(cpu_pct_demand=3.0)
+        for _ in range(3):                     # pin jobs onto host 0
+            fleet = engine.place(fleet, 0, job)
+        # every OTHER host is already down: nothing can take host 0's jobs
+        fleet = fleet._replace(healthy=jnp.asarray([1.0, 0.0, 0.0, 0.0]))
+        mon = StragglerMonitor()
+        assert int(fleet.num_jobs[0]) > 0
+        fleet, migrations = mon.evacuate(engine, fleet, job, hosts=[0])
+        assert migrations == []
+        assert int(fleet.num_jobs[0]) == 0
+        assert mon.evacuated == [0]
+
     def test_unhealthy_fleet_rejects_placement(self):
         engine = PlacementEngine(dqn.init_qnet(jax.random.PRNGKey(0)))
         fleet = fresh_fleet(4)

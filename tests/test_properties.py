@@ -396,6 +396,84 @@ def test_daemon_invariants_fixed_cases():
         7, [("submit", 0.25), ("advance", 0.06)] * 5)
 
 
+def _check_daemon_chaos_accounting(seed, ops):
+    """Injected node fail/recover events never break the request ledger.
+
+    The self-healing contract under arbitrary interleavings of submits,
+    clock advances, polls, node failures and recoveries:
+
+      * the daemon NEVER binds onto a node while it is failed — a failed
+        node's pod count only falls (watchdog evictions) until it recovers;
+      * with ``queue_cap`` set, the pending queue never exceeds the cap;
+      * after the final drain every submitted request (including the
+        watchdog's eviction resubmits) resolved to exactly ONE of
+        {bound, dropped, shed}: ``bound + dropped + shed == submitted`` and
+        one ``Decision`` per submission.
+    """
+    cfg = paper_cluster()
+    state = kenv.reset(jax.random.PRNGKey(seed), cfg)
+    sub = sched_daemon.ClusterSubstrate(state, cfg)
+    t = [0.0]
+    d = sched_daemon.PlacementDaemon(
+        sub, _DAEMON_Q,
+        sched_daemon.DaemonConfig(batch_size=3, max_wait_s=0.05,
+                                  max_retries=2, queue_cap=6),
+        clock=lambda: t[0])
+    cap = float(np.min(np.asarray(sub.live.cpu_capacity)))
+    mem_cap = float(np.min(np.asarray(sub.live.mem_capacity)))
+    failed = {}          # node -> num_pods at failure time
+
+    def check():
+        lv = sub.live
+        for node, pods_at_fail in failed.items():
+            assert not lv.healthy[node]
+            assert lv.num_pods[node] <= pods_at_fail, \
+                "bound onto a failed node"
+        assert d.pending <= 6
+
+    for op, arg in ops:
+        if op == "submit":
+            d.submit(PodSpec(cpu_request=arg * cap,
+                             cpu_demand=0.5 * arg * cap,
+                             mem_request=arg * mem_cap,
+                             mem_demand=0.2 * arg * mem_cap))
+        elif op == "advance":
+            t[0] += arg
+            d.poll()
+        elif op == "poll":
+            d.poll()
+        elif op == "flush":
+            d.flush()
+        elif op == "fail":
+            node = int(arg) % cfg.n_nodes
+            d.fail_node(node)
+            failed[node] = int(sub.live.num_pods[node])
+        elif op == "recover":
+            node = int(arg) % cfg.n_nodes
+            d.recover_node(node)
+            failed.pop(node, None)
+        check()
+    d.drain()
+    check()
+    m = d.metrics
+    assert m.bound + m.dropped + m.shed == m.submitted
+    assert len(d.decisions) == m.submitted
+
+
+def test_daemon_chaos_accounting_fixed_cases():
+    # fail mid-stream, keep submitting, recover, drain
+    _check_daemon_chaos_accounting(
+        1, [("submit", 0.3)] * 4 + [("flush", 0.0), ("fail", 2)]
+           + [("submit", 0.3)] * 3 + [("recover", 2), ("flush", 0.0)])
+    # eviction storm: bind a burst, then fail several nodes back to back
+    _check_daemon_chaos_accounting(
+        5, [("submit", 0.4)] * 6 + [("flush", 0.0)]
+           + [("fail", 0), ("fail", 1), ("fail", 2), ("flush", 0.0)])
+    # backpressure under chaos: more submits than queue_cap while failed
+    _check_daemon_chaos_accounting(
+        9, [("fail", 3)] + [("submit", 0.2)] * 10 + [("flush", 0.0)])
+
+
 # ---------------------------------------------------------------------------
 # the hypothesis tier (randomized versions of everything above)
 # ---------------------------------------------------------------------------
@@ -427,6 +505,10 @@ if strat.HAVE_HYPOTHESIS:
     @given(seed=strat.seeds(), ops=strat.daemon_ops())
     def test_property_daemon_never_binds_infeasible(seed, ops):
         _check_daemon_never_binds_infeasible(seed, ops)
+
+    @given(seed=strat.seeds(), ops=strat.chaos_daemon_ops())
+    def test_property_daemon_chaos_accounting(seed, ops):
+        _check_daemon_chaos_accounting(seed, ops)
 
 else:  # pragma: no cover - the [test] extra is installed in CI
 
