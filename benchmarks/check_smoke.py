@@ -8,6 +8,14 @@
     PYTHONPATH=src python -m benchmarks.check_smoke BENCH_lifecycle.json \
         benchmarks/baseline_lifecycle.json --lifecycle \
         --throughput-row lifecycle_episode_throughput
+    PYTHONPATH=src python -m benchmarks.check_smoke \
+        --manifest benchmarks/gates.json          # gate EVERY smoke suite
+
+``--manifest`` is how CI runs this: benchmarks/gates.json names every
+suite's run flag, committed baseline, and gated rows in one place; the
+workflow runs ``benchmarks.run --manifest`` once, uploads the
+``BENCH_*.json`` artifacts, and gates them all with one call here, instead
+of maintaining a run→upload→gate step triplet per suite.
 
 For every scenario present in both runs, compares the sdqn/kube ratio of the
 avg-CPU metric (``derived`` column of the ``scenario_<name>_<policy>`` rows).
@@ -282,10 +290,80 @@ def compare(current: dict, baseline: dict, tolerance: float,
     return 0
 
 
+def check_manifest(path: str, bench_dir: str = ".",
+                   only: str = None) -> int:
+    """Gate every suite of a gates manifest (benchmarks/gates.json).
+
+    For each manifest suite, loads ``<bench_dir>/BENCH_<name>.json`` (the
+    file ``benchmarks.run --manifest`` wrote) and the suite's committed
+    baseline, then runs :func:`compare` with the suite's gating fields —
+    the manifest is the ONE place a suite's run flag, baseline file, and
+    gated rows live, instead of six copy-pasted run→upload→gate step
+    triplets in the workflow.  ``only`` restricts to a single suite.
+    Returns 1 if any suite regressed (or a bench/baseline file is
+    missing), else 0.
+    """
+    import os
+
+    with open(path) as f:
+        manifest = json.load(f)
+    suites = [s for s in manifest["suites"]
+              if only is None or s["name"] == only]
+    if only is not None and not suites:
+        print(f"check_smoke: no suite named {only!r} in {path}",
+              file=sys.stderr)
+        return 2
+    failed = []
+    for suite in suites:
+        name = suite["name"]
+        bench = os.path.join(bench_dir, f"BENCH_{name}.json")
+        print(f"\n=== gate {name}: {bench} vs {suite['baseline']} ===")
+        try:
+            with open(bench) as f:
+                current = json.load(f)
+            with open(suite["baseline"]) as f:
+                baseline = json.load(f)
+        except OSError as e:
+            print(f"check_smoke: {name}: {e}", file=sys.stderr)
+            failed.append(name)
+            continue
+        rc = compare(current, baseline,
+                     tolerance=suite.get("tolerance", 0.10),
+                     throughput_rows=suite.get("throughput_rows", ()),
+                     throughput_tolerance=suite.get("throughput_tolerance",
+                                                    0.25),
+                     latency_rows=suite.get("latency_rows", ()),
+                     latency_tolerance=suite.get("latency_tolerance", 1.0),
+                     lifecycle=suite.get("lifecycle", False),
+                     policy_compare=suite.get("policy_compare", False),
+                     chaos=suite.get("chaos", False),
+                     chaos_slack=suite.get("chaos_slack", 0.10))
+        if rc != 0:
+            failed.append(name)
+    if failed:
+        print(f"\ncheck_smoke: {len(failed)}/{len(suites)} suites FAILED: "
+              f"{', '.join(failed)}", file=sys.stderr)
+        return 1
+    print(f"\ncheck_smoke: all {len(suites)} manifest suites within baseline")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="JSON from benchmarks.run --smoke --json")
-    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("current", nargs="?",
+                    help="JSON from benchmarks.run --smoke --json "
+                         "(omit with --manifest)")
+    ap.add_argument("baseline", nargs="?", help="committed baseline JSON")
+    ap.add_argument("--manifest", metavar="PATH",
+                    help="gate every suite of a gates manifest "
+                         "(benchmarks/gates.json) against its committed "
+                         "baseline — replaces the positional current/baseline "
+                         "pair")
+    ap.add_argument("--suite", metavar="NAME",
+                    help="with --manifest: gate only this suite")
+    ap.add_argument("--bench-dir", default=".", metavar="DIR",
+                    help="with --manifest: directory holding the "
+                         "BENCH_<suite>.json files (default: cwd)")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative regression of gated ratios "
                          "(default 0.10)")
@@ -322,6 +400,11 @@ def main(argv=None) -> int:
                          "p99 on a shared CI runner is noisy; the gate is for "
                          "order-of-magnitude blowups)")
     args = ap.parse_args(argv)
+    if args.manifest:
+        return check_manifest(args.manifest, bench_dir=args.bench_dir,
+                              only=args.suite)
+    if args.current is None or args.baseline is None:
+        ap.error("current and baseline are required without --manifest")
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:

@@ -29,6 +29,38 @@ def _write_json(path: str, rows) -> None:
     print(f"wrote {len(payload['rows'])} rows to {path}")
 
 
+def _run_manifest(path: str, nightly: bool = False) -> int:
+    """Run every suite of a gates manifest (benchmarks/gates.json).
+
+    Each suite runs as its own subprocess — ``python -m benchmarks.run
+    <run_args> --json BENCH_<suite>.json`` — so one suite's crash (or
+    memory) cannot poison the others, and each bench JSON lands where the
+    CI gate step (``check_smoke --manifest``) and the artifact upload
+    expect it.  Suites that fail to run are reported at the end; the exit
+    code is the number of failed suites.
+    """
+    import subprocess
+
+    with open(path) as f:
+        manifest = json.load(f)
+    suites = manifest["nightly"] if nightly else manifest["suites"]
+    lane = "nightly" if nightly else "smoke"
+    failed = []
+    for suite in suites:
+        name, run_args = suite["name"], list(suite["run_args"])
+        cmd = [sys.executable, "-m", "benchmarks.run", *run_args,
+               "--json", f"BENCH_{name}.json"]
+        print(f"\n=== [{lane}] suite {name}: {' '.join(cmd)} ===", flush=True)
+        if subprocess.call(cmd) != 0:
+            failed.append(name)
+    if failed:
+        print(f"\nmanifest: {len(failed)}/{len(suites)} suites failed: "
+              f"{', '.join(failed)}", file=sys.stderr)
+    else:
+        print(f"\nmanifest: all {len(suites)} {lane} suites completed")
+    return len(failed)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     mode = ap.add_mutually_exclusive_group()
@@ -66,6 +98,18 @@ def main() -> None:
     mode.add_argument("--chaos-smoke", action="store_true",
                       help="CI-sized chaos benchmark (the sizing "
                            "benchmarks/baseline_chaos.json is gated at)")
+    mode.add_argument("--fleet-scale", action="store_true",
+                      help="two-stage hierarchical sharded scoring sweep over "
+                           "the cluster-of-clusters family, 4k -> 128k nodes "
+                           "(the sizing baseline_fleet_scale.json is gated at)")
+    mode.add_argument("--manifest", metavar="PATH",
+                      help="run every suite in a benchmarks/gates.json "
+                           "manifest (each as a subprocess, writing "
+                           "BENCH_<suite>.json next to the cwd); gate the "
+                           "results separately with check_smoke --manifest")
+    ap.add_argument("--nightly", action="store_true",
+                    help="with --manifest: run the manifest's nightly lane "
+                         "instead of the gated smoke suites")
     ap.add_argument("--trials", type=int, default=None,
                     help="episodes per measurement (default: 3, or 1 with --smoke)")
     ap.add_argument("--pods", type=int, default=None,
@@ -83,6 +127,11 @@ def main() -> None:
     if args.fast and (args.pods is not None or args.train_episodes is not None):
         ap.error("--fast skips the training/scenario benches; "
                  "--pods/--train-episodes have no effect with it")
+    if args.nightly and not args.manifest:
+        ap.error("--nightly only applies to --manifest runs")
+
+    if args.manifest:
+        raise SystemExit(_run_manifest(args.manifest, nightly=args.nightly))
 
     if args.list_scenarios:
         from repro import scenarios
@@ -156,6 +205,10 @@ def main() -> None:
         from benchmarks import chaos_bench
 
         rows += chaos_bench.smoke_rows()
+    elif args.fleet_scale:
+        from benchmarks import fleet_scale
+
+        rows += fleet_scale.rows()
     else:
         from benchmarks import roofline_report, sched_scale
 

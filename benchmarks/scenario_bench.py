@@ -68,10 +68,15 @@ def sweep(
     policies: Tuple[str, ...] = ("kube", "sdqn"),
     names: Optional[Tuple[str, ...]] = None,
 ) -> List[Tuple[str, float, float]]:
-    """Every registry scenario under every policy."""
+    """Every registry scenario under every policy (scoring-only scenarios —
+    the cluster-of-clusters fleet-scale family — are excluded: they are
+    driven per-decision by benchmarks/fleet_scale.py, not as episodes)."""
     rows = []
     print("\n--- scenario sweep (avg CPU %, lower = better) ---")
-    for name in names or scenarios.scenario_names():
+    if names is None:
+        names = tuple(n for n in scenarios.scenario_names()
+                      if n not in scenarios.SCORING_ONLY)
+    for name in names:
         rows += bench_scenario(name, trials=trials, n_pods=n_pods,
                                train_episodes=train_episodes, policies=policies)
     return rows
@@ -87,6 +92,7 @@ def smoke_rows(
     Excludes fleet-hetero (1024 nodes) to keep the smoke job under a minute
     of compute; the full sweep covers it.
     """
-    names = tuple(n for n in scenarios.scenario_names() if n != "fleet-hetero")
+    names = tuple(n for n in scenarios.scenario_names()
+                  if n != "fleet-hetero" and n not in scenarios.SCORING_ONLY)
     return sweep(trials=trials, n_pods=n_pods, train_episodes=train_episodes,
                  names=names)

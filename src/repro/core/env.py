@@ -411,7 +411,8 @@ def place(state: ClusterState, action: jnp.ndarray, pod: PodSpec, cfg: EnvConfig
     )
 
 
-def hypothetical_place(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp.ndarray:
+def hypothetical_place(state: ClusterState, pod: PodSpec, cfg: EnvConfig,
+                       pull_cost: jnp.ndarray | None = None) -> jnp.ndarray:
     """Afterstate features for *every* candidate node: (N, 6).
 
     Row i = Table-2 features of node i as if the pod were placed there.
@@ -425,9 +426,15 @@ def hypothetical_place(state: ClusterState, pod: PodSpec, cfg: EnvConfig) -> jnp
     The ops mirror ``place``/``cpu_used``/``features`` exactly so the result
     is bit-identical to ``hypothetical_place_reference``.
     """
-    # placement deltas (same arithmetic as `place` restricted to the chosen row)
+    # placement deltas (same arithmetic as `place` restricted to the chosen
+    # row).  ``pull_cost`` overrides the in-flight pull-contention scalar:
+    # it is a GLOBAL reduction over startup transients, so sharded scoring
+    # (sched.shard) computes it ONCE from the full fleet and threads it into
+    # every per-shard call — a per-shard recompute would silently diverge
+    # from the unsharded program.
+    pull = pull_cost_now(state, cfg) if pull_cost is None else pull_cost
     start_cost = jnp.where(jnp.logical_not(state.image_cached),
-                           pull_cost_now(state, cfg), cfg.warm_start_cost)
+                           pull, cfg.warm_start_cost)
     num_pods = state.num_pods + 1
     exp_pods = state.exp_pods + 1
     pods_cpu = state.pods_cpu + 1.0 * pod.cpu_demand

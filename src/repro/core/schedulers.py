@@ -46,7 +46,7 @@ def masked_argmax(key: jax.Array, scores: jnp.ndarray, ok: jnp.ndarray,
 def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
                       cfg: EnvConfig, score_fn=None,
                       fused: bool | str = "auto", policy=None,
-                      embed=None) -> jnp.ndarray:
+                      embed=None, pull_cost=None) -> jnp.ndarray:
     """(N,) scores: Q(afterstate_i) for each candidate node i.
 
     This is the ONE scoring dispatch the trainer, the serving daemon, the
@@ -71,6 +71,12 @@ def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
     other spec — like a custom ``score_fn`` (LSTM/Transformer baselines) —
     always takes the jnp path, since it cannot be fused into the afterstate
     kernel.
+
+    ``pull_cost`` pins the image-pull contention scalar instead of reducing
+    it from ``state`` — sharded scoring (``sched.shard``) computes this
+    GLOBAL reduction once over the full fleet and threads it into each
+    per-shard call, keeping shard-local scores identical to the unsharded
+    program.
     """
     if score_fn is not None and policy is not None:
         raise ValueError("pass either score_fn or policy, not both")
@@ -85,8 +91,10 @@ def score_afterstates(qparams: dict, state: ClusterState, pod: PodSpec,
         from repro.kernels import ops
 
         mode = "interpret" if fused == "interpret" else None
-        return ops.sdqn_score_afterstate(state, pod, cfg, qparams, mode=mode)
-    after = kenv.hypothetical_place(state, pod, cfg)        # (N, 6) raw
+        return ops.sdqn_score_afterstate(state, pod, cfg, qparams, mode=mode,
+                                         pull_cost=pull_cost)
+    after = kenv.hypothetical_place(state, pod, cfg,
+                                    pull_cost=pull_cost)   # (N, 6) raw
     feats = kenv.normalize_features(after)
     if policy is not None:
         if embed is not None:

@@ -95,8 +95,41 @@ def sdqn_score(feats, params, *, mode: Optional[str] = None, block_n: int = 1024
     return ref.sdqn_score_ref(feats, w1, b1, w2, b2)
 
 
+def _afterstate_inputs(state, pod, cfg, params, pull_cost=None):
+    """(12 raw columns, scalar pack, w1, b1, w2) for the afterstate kernels.
+
+    ``pull_cost`` overrides the in-flight pull-contention scalar — a GLOBAL
+    reduction over ``startup_cpu`` that sharded scoring (``sched.shard``)
+    must compute once from the full fleet and thread into every shard.
+    """
+    from repro.core import env as kenv
+
+    cols = (
+        state.base_cpu, state.pods_cpu, state.startup_cpu,
+        state.num_pods, state.exp_pods, state.mem_used,
+        state.image_cached, state.healthy, state.uptime_hours,
+        state.cpu_capacity, state.mem_capacity, state.max_pods,
+    )
+    pull = kenv.pull_cost_now(state, cfg) if pull_cost is None else pull_cost
+    scalars = jnp.zeros((_ss._N_SCALARS,), jnp.float32)
+    scalars = scalars.at[_ss._S_CPU_DEMAND].set(pod.cpu_demand)
+    scalars = scalars.at[_ss._S_MEM_DEMAND].set(pod.mem_demand)
+    scalars = scalars.at[_ss._S_PULL].set(pull)
+    scalars = scalars.at[_ss._S_WARM].set(cfg.warm_start_cost)
+    scalars = scalars.at[_ss._S_OVERHEAD].set(cfg.node_active_overhead)
+    scalars = scalars.at[_ss._S_CROWD_KNEE].set(cfg.crowd_knee)
+    scalars = scalars.at[_ss._S_CROWD_COEFF].set(cfg.crowd_coeff)
+    scalars = scalars.at[_ss._S_CONT_KNEE].set(cfg.contention_knee)
+    scalars = scalars.at[_ss._S_CONT_COEFF].set(cfg.contention_coeff)
+    scalars = scalars.at[_ss._S_UPTIME_SCALE].set(kenv.FEATURE_SCALE[4])
+    scalars = scalars.at[_ss._S_EXP_SCALE].set(kenv.FEATURE_SCALE[5])
+    w1, b1, w2, b2 = _mlp_weights(params)
+    scalars = scalars.at[_ss._S_B2].set(jnp.reshape(b2, ()))
+    return cols, scalars, w1, b1, w2
+
+
 def sdqn_score_afterstate(state, pod, cfg, params, *, mode: Optional[str] = None,
-                          block_n: int = 1024):
+                          block_n: int = 1024, pull_cost=None):
     """Q-values (N,) of every candidate afterstate, features fused in-kernel.
 
     Accepts the raw ``ClusterState`` columns plus the pod's placement delta
@@ -112,35 +145,54 @@ def sdqn_score_afterstate(state, pod, cfg, params, *, mode: Optional[str] = None
     if mode == "ref":
         from repro.core import dqn
 
-        after = kenv.hypothetical_place(state, pod, cfg)
+        after = kenv.hypothetical_place(state, pod, cfg, pull_cost=pull_cost)
         return dqn.qvalues(params, kenv.normalize_features(after))
 
-    cols = (
-        state.base_cpu, state.pods_cpu, state.startup_cpu,
-        state.num_pods, state.exp_pods, state.mem_used,
-        state.image_cached, state.healthy, state.uptime_hours,
-        state.cpu_capacity, state.mem_capacity, state.max_pods,
-    )
-    scalars = jnp.zeros((_ss._N_SCALARS,), jnp.float32)
-    scalars = scalars.at[_ss._S_CPU_DEMAND].set(pod.cpu_demand)
-    scalars = scalars.at[_ss._S_MEM_DEMAND].set(pod.mem_demand)
-    scalars = scalars.at[_ss._S_PULL].set(kenv.pull_cost_now(state, cfg))
-    scalars = scalars.at[_ss._S_WARM].set(cfg.warm_start_cost)
-    scalars = scalars.at[_ss._S_OVERHEAD].set(cfg.node_active_overhead)
-    scalars = scalars.at[_ss._S_CROWD_KNEE].set(cfg.crowd_knee)
-    scalars = scalars.at[_ss._S_CROWD_COEFF].set(cfg.crowd_coeff)
-    scalars = scalars.at[_ss._S_CONT_KNEE].set(cfg.contention_knee)
-    scalars = scalars.at[_ss._S_CONT_COEFF].set(cfg.contention_coeff)
-    scalars = scalars.at[_ss._S_UPTIME_SCALE].set(kenv.FEATURE_SCALE[4])
-    scalars = scalars.at[_ss._S_EXP_SCALE].set(kenv.FEATURE_SCALE[5])
-    w1, b1, w2, b2 = _mlp_weights(params)
-    scalars = scalars.at[_ss._S_B2].set(jnp.reshape(b2, ()))
-
+    cols, scalars, w1, b1, w2 = _afterstate_inputs(state, pod, cfg, params,
+                                                   pull_cost)
     if mode == "xla":
         return _ss.sdqn_score_afterstate_xla(cols, scalars, w1, b1, w2)
     return _ss.sdqn_score_afterstate(cols, scalars, w1, b1, w2,
                                      block_n=block_n,
                                      interpret=(mode == "interpret"))
+
+
+def sdqn_topk_afterstate(state, pod, cfg, params, *, k: int = 4,
+                         mode: Optional[str] = None, block_n: int = 1024,
+                         pull_cost=None):
+    """((k,) scores, (k,) node indices): the feasible top-k of one shard's
+    candidate afterstates, scored AND reduced in-kernel.
+
+    The per-shard stage of two-stage hierarchical scoring (``sched.shard``):
+    the k8s filtering phase (``env.feasible``) and the Q-net both run inside
+    the kernel, and only k candidates per shard ever reach HBM.  Infeasible
+    nodes carry ``-inf``; ties break to the lowest index (``jnp.argmax``'s
+    first-occurrence rule), so merging shard candidates reproduces the flat
+    masked argmax exactly.  ``mode="ref"`` is the unfused oracle:
+    ``hypothetical_place`` + ``qvalues`` + ``feasible`` + ``lax.top_k``.
+    """
+    from repro.core import env as kenv
+
+    mode = mode or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    if mode == "ref":
+        from repro.core import dqn
+
+        after = kenv.hypothetical_place(state, pod, cfg, pull_cost=pull_cost)
+        q = dqn.qvalues(params, kenv.normalize_features(after))
+        ok = kenv.feasible(state, pod, cfg)
+        return jax.lax.top_k(jnp.where(ok, q, -jnp.inf), min(k, q.shape[0]))
+
+    cols, scalars, w1, b1, w2 = _afterstate_inputs(state, pod, cfg, params,
+                                                   pull_cost)
+    cols = cols + (state.cpu_requested, state.mem_requested)
+    scalars = scalars.at[_ss._S_CPU_REQ].set(pod.cpu_request)
+    scalars = scalars.at[_ss._S_MEM_REQ].set(pod.mem_request)
+    if mode == "xla":
+        return _ss.sdqn_score_afterstate_topk_xla(cols, scalars, w1, b1, w2,
+                                                  k=k)
+    return _ss.sdqn_score_afterstate_topk(cols, scalars, w1, b1, w2, k=k,
+                                          block_n=block_n,
+                                          interpret=(mode == "interpret"))
 
 
 def sdqn_score_delta(cols, deltas, params, *, mode: Optional[str] = None,
@@ -164,3 +216,36 @@ def sdqn_score_delta(cols, deltas, params, *, mode: Optional[str] = None,
     return _ss.sdqn_score_cols(tuple(cols), deltas, kenv.FEATURE_SCALE, w1, b1,
                                w2, b2, block_n=block_n,
                                interpret=(mode == "interpret"))
+
+
+def sdqn_topk_delta(cols, deltas, params, *, k: int = 4,
+                    mode: Optional[str] = None, block_n: int = 1024,
+                    ceilings=(88.0, 95.0, 100.0 + 1e-6)):
+    """((k,) scores, (k,) host indices): feasible top-k of the column scorer.
+
+    The FleetState arm of per-shard top-k scoring: the
+    ``PlacementEngine.feasible`` predicates (healthy + post-delta cpu / mem /
+    job-util ceilings) and the Q-net both run in-kernel, emitting only k
+    candidates per shard.  ``ceilings`` are the three predicate bounds (the
+    default mirrors ``PlacementEngine``'s 88 / 95 / 100).
+    """
+    from repro.core import env as kenv
+
+    mode = mode or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    w1, b1, w2, b2 = _mlp_weights(params)
+    if mode == "ref":
+        feats = (jnp.stack(cols, axis=-1) + deltas[None, :]) / kenv.FEATURE_SCALE
+        q = ref.sdqn_score_ref(feats, w1, b1, w2, b2)
+        cl = jnp.asarray(ceilings, jnp.float32)
+        ok = ((cols[3] > 0.5) & (cols[0] + deltas[0] <= cl[0])
+              & (cols[1] + deltas[1] <= cl[1])
+              & (cols[2] + deltas[2] <= cl[2]))
+        return jax.lax.top_k(jnp.where(ok, q, -jnp.inf), min(k, q.shape[0]))
+    if mode == "xla":
+        return _ss.sdqn_score_cols_topk_xla(tuple(cols), deltas,
+                                            kenv.FEATURE_SCALE, w1, b1, w2,
+                                            b2, ceilings, k=k)
+    return _ss.sdqn_score_cols_topk(tuple(cols), deltas, kenv.FEATURE_SCALE,
+                                    w1, b1, w2, b2, ceilings, k=k,
+                                    block_n=block_n,
+                                    interpret=(mode == "interpret"))

@@ -93,6 +93,9 @@ def sdqn_score(
 _S_CPU_DEMAND, _S_MEM_DEMAND, _S_PULL, _S_WARM, _S_OVERHEAD = 0, 1, 2, 3, 4
 _S_CROWD_KNEE, _S_CROWD_COEFF, _S_CONT_KNEE, _S_CONT_COEFF = 5, 6, 7, 8
 _S_UPTIME_SCALE, _S_EXP_SCALE, _S_B2 = 9, 10, 11
+# the top-k variants also filter in-kernel, so the pod's *requests* (the k8s
+# filtering phase operates on requests, not demands) ride in the pack too
+_S_CPU_REQ, _S_MEM_REQ = 12, 13
 _N_SCALARS = 16  # padded pack width
 
 
@@ -296,3 +299,244 @@ def sdqn_score_cols_xla(cols: tuple, deltas: jnp.ndarray, scale: jnp.ndarray,
     for f in range(6):
         hid = hid + (cols[f].astype(jnp.float32) + deltas[f])[:, None] * w1n[f][None, :]
     return jnp.sum(jnp.maximum(hid, 0.0) * w2[:, 0][None, :], axis=-1) + b2[0]
+
+
+# ---------------------------------------------------------------------------
+# in-kernel per-shard top-k: score + filter + reduce without ever writing the
+# shard's full score vector to HBM.  The two-stage hierarchical dispatch
+# (``sched.shard``) runs one of these per node shard and merges the tiny
+# (shards, k) candidate sets globally.
+# ---------------------------------------------------------------------------
+
+# tie-break sentinel: "no index".  A plain Python literal on purpose — a
+# jnp constant here would be captured by the Pallas kernel closure as a
+# traced value, which pallas_call rejects.
+_IDX_INF = 2**31 - 1
+
+
+def _iter_topk(scores, idx, k: int):
+    """k iterative (max, first-index) extractions over the last axis.
+
+    Ties break to the LOWEST index — exactly ``jnp.argmax``'s first-
+    occurrence rule, applied k times — so a hierarchical merge of these
+    candidates reproduces the flat argmax bit-for-bit.  Elementwise max /
+    where / min only (no sort, no gather), so the same definition runs
+    inside a Pallas TPU kernel body on (1, block_n) tiles and in the XLA
+    twins on (N,) columns.  Returns ((..., k) values, (..., k) indices);
+    exhausted positions carry ``-inf`` / ``_IDX_INF``.
+    """
+    vals, ids = [], []
+    for _ in range(k):
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        a = jnp.min(jnp.where(scores == m, idx, _IDX_INF), axis=-1,
+                    keepdims=True)
+        vals.append(m)
+        ids.append(a)
+        scores = jnp.where(idx == a, -jnp.inf, scores)
+    return jnp.concatenate(vals, axis=-1), jnp.concatenate(ids, axis=-1)
+
+
+def _merge_topk(vals, idx, k: int):
+    """Merge (G, k) per-block candidates into the global (k,) top-k.
+
+    ``lax.top_k`` over the block-major flatten keeps ties in ascending flat
+    position; blocks cover ascending index ranges and ``_iter_topk`` emits
+    within-block ties in ascending index, so the merged ties stay in
+    ascending GLOBAL index — the first-occurrence argmax rule survives the
+    hierarchy.  Same routine merges shard candidates in ``sched.shard``.
+    """
+    flat_v, flat_i = vals.reshape(-1), idx.reshape(-1)
+    top_v, pos = jax.lax.top_k(flat_v, k)
+    return top_v, flat_i[pos]
+
+
+def _afterstate_topk_kernel(k, base_ref, pcpu_ref, scpu_ref, npod_ref,
+                            epod_ref, mem_ref, cached_ref, health_ref, up_ref,
+                            cap_ref, mcap_ref, mpod_ref, creq_ref, mreq_ref,
+                            scal_ref, w1t_ref, b1_ref, w2_ref, ov_ref, oi_ref):
+    def s(i):
+        return scal_ref[0, i]
+
+    feats = _afterstate_norm_features(
+        base_ref[...], pcpu_ref[...], scpu_ref[...], npod_ref[...],
+        epod_ref[...], mem_ref[...], cached_ref[...], health_ref[...],
+        up_ref[...], cap_ref[...], mcap_ref[...], mpod_ref[...], s,
+    )
+    w1t = w1t_ref[...]
+    h = b1_ref[...]
+    for f in range(6):
+        h = h + w1t[:, f:f + 1] * feats[f]
+    q = jnp.sum(jnp.maximum(h, 0.0) * w2_ref[...], axis=0, keepdims=True)
+    q = q + s(_S_B2)                                 # (1, bn)
+    # k8s filtering phase, in-kernel (env.feasible): padded lanes arrive with
+    # healthy == 0 and capacity == 1, so they are masked right here
+    ok = ((health_ref[...] > 0.5)
+          & (creq_ref[...] + s(_S_CPU_REQ) <= cap_ref[...])
+          & (mreq_ref[...] + s(_S_MEM_REQ) <= mcap_ref[...])
+          & (npod_ref[...] < mpod_ref[...]))
+    bn = q.shape[-1]
+    gidx = (pl.program_id(0) * bn
+            + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1))
+    vals, ids = _iter_topk(jnp.where(ok, q, -jnp.inf), gidx, k)
+    ov_ref[...] = vals
+    oi_ref[...] = ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def sdqn_score_afterstate_topk(
+    node_cols: tuple,      # 14 x (N,): the 12 afterstate columns (see
+    #                        ``sdqn_score_afterstate``) + cpu_requested,
+    #                        mem_requested (filtering-phase columns)
+    scalars: jnp.ndarray,  # (_N_SCALARS,) pack incl. _S_CPU_REQ/_S_MEM_REQ
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    *,
+    k: int = 4,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """((k,) scores, (k,) indices): the shard's feasible top-k, in-kernel.
+
+    Each grid step reduces its block to k candidates before anything leaves
+    the kernel, so HBM traffic is O(G * k) instead of O(N) — the full score
+    vector never materializes.  Infeasible nodes score ``-inf``; an
+    all-infeasible shard returns all ``-inf`` (the merge layer maps that to
+    the NO_PLACEMENT sentinel).
+    """
+    n = node_cols[0].shape[0]
+    h = w1.shape[1]
+    block_n = max(min(block_n, n), k)
+    grids = _grid_cols(node_cols[:9], n, block_n) + _grid_cols(
+        node_cols[9:12], n, block_n, pad_value=1.0) + _grid_cols(
+        node_cols[12:], n, block_n)
+    g = grids[0].shape[0]
+    col_spec = pl.BlockSpec((1, block_n), lambda i: (i, 0))
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_afterstate_topk_kernel, k),
+        grid=(g,),
+        in_specs=[col_spec] * 14 + [
+            _scalar_spec(),
+            pl.BlockSpec((h, 6), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((g, k), jnp.float32),
+                   jax.ShapeDtypeStruct((g, k), jnp.int32)],
+        interpret=interpret,
+    )(*grids, scalars.reshape(1, _N_SCALARS), w1.T, b1.reshape(h, 1), w2)
+    return _merge_topk(vals, idx, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def sdqn_score_afterstate_topk_xla(node_cols: tuple, scalars: jnp.ndarray,
+                                   w1: jnp.ndarray, b1: jnp.ndarray,
+                                   w2: jnp.ndarray, *, k: int = 4):
+    """XLA twin: fused scoring + in-register filtering + ``lax.top_k``.
+
+    ``lax.top_k`` breaks ties to the lowest index, matching the kernel's
+    iterative extraction exactly; the shard-local (N,) intermediate lives
+    only inside this fused computation.
+    """
+    cols = [c.astype(jnp.float32) for c in node_cols]
+    q = sdqn_score_afterstate_xla(tuple(cols[:12]), scalars, w1, b1, w2)
+    ok = ((cols[7] > 0.5)
+          & (cols[12] + scalars[_S_CPU_REQ] <= cols[9])
+          & (cols[13] + scalars[_S_MEM_REQ] <= cols[10])
+          & (cols[3] < cols[11]))
+    k = min(k, q.shape[0])
+    return jax.lax.top_k(jnp.where(ok, q, -jnp.inf), k)
+
+
+def _cols_topk_kernel(k, c0, c1, c2, c3, c4, c5, scal_ref, w1t_ref, b1_ref,
+                      w2_ref, ov_ref, oi_ref):
+    cols = (c0, c1, c2, c3, c4, c5)
+    w1t = w1t_ref[...]
+    h = b1_ref[...]
+    for f in range(6):
+        h = h + w1t[:, f:f + 1] * (cols[f][...] + scal_ref[0, f])
+    q = jnp.sum(jnp.maximum(h, 0.0) * w2_ref[...], axis=0, keepdims=True)
+    q = q + scal_ref[0, 6]
+    # PlacementEngine.feasible, in-kernel: healthy + post-delta ceilings on
+    # the cpu / mem / job-util percent columns (scalars 7..9)
+    ok = ((c3[...] > 0.5)
+          & (c0[...] + scal_ref[0, 0] <= scal_ref[0, 7])
+          & (c1[...] + scal_ref[0, 1] <= scal_ref[0, 8])
+          & (c2[...] + scal_ref[0, 2] <= scal_ref[0, 9]))
+    bn = q.shape[-1]
+    gidx = (pl.program_id(0) * bn
+            + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1))
+    vals, ids = _iter_topk(jnp.where(ok, q, -jnp.inf), gidx, k)
+    ov_ref[...] = vals
+    oi_ref[...] = ids
+
+
+def _cols_topk_scalars(deltas, b2, ceilings):
+    scal = jnp.zeros((_N_SCALARS,), jnp.float32)
+    scal = scal.at[:6].set(deltas.astype(jnp.float32))
+    scal = scal.at[6].set(jnp.reshape(b2, ()))
+    scal = scal.at[7:10].set(jnp.asarray(ceilings, jnp.float32))
+    return scal
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def sdqn_score_cols_topk(
+    cols: tuple,
+    deltas: jnp.ndarray,
+    scale: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    ceilings,          # (3,): max cpu_pct, max mem_pct, max job_util_pct
+    *,
+    k: int = 4,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """Per-shard feasible top-k of ``sdqn_score_cols``, reduced in-kernel."""
+    n = cols[0].shape[0]
+    h = w1.shape[1]
+    block_n = max(min(block_n, n), k)
+    # healthy (col 3) pads 0 -> infeasible; the rest pad 0 and stay finite
+    grids = _grid_cols(cols, n, block_n)
+    g = grids[0].shape[0]
+    col_spec = pl.BlockSpec((1, block_n), lambda i: (i, 0))
+    scal = _cols_topk_scalars(deltas, b2, ceilings)
+    w1n = w1 / scale[:, None]
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_cols_topk_kernel, k),
+        grid=(g,),
+        in_specs=[col_spec] * 6 + [
+            _scalar_spec(),
+            pl.BlockSpec((h, 6), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((g, k), jnp.float32),
+                   jax.ShapeDtypeStruct((g, k), jnp.int32)],
+        interpret=interpret,
+    )(*grids, scal.reshape(1, _N_SCALARS), w1n.T, b1.reshape(h, 1), w2)
+    return _merge_topk(vals, idx, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def sdqn_score_cols_topk_xla(cols: tuple, deltas: jnp.ndarray,
+                             scale: jnp.ndarray, w1: jnp.ndarray,
+                             b1: jnp.ndarray, w2: jnp.ndarray,
+                             b2: jnp.ndarray, ceilings, *, k: int = 4):
+    """XLA twin of ``sdqn_score_cols_topk`` (fused score + mask + top_k)."""
+    q = sdqn_score_cols_xla(cols, deltas, scale, w1, b1, w2, b2)
+    cl = jnp.asarray(ceilings, jnp.float32)
+    ok = ((cols[3] > 0.5)
+          & (cols[0] + deltas[0] <= cl[0])
+          & (cols[1] + deltas[1] <= cl[1])
+          & (cols[2] + deltas[2] <= cl[2]))
+    k = min(k, q.shape[0])
+    return jax.lax.top_k(jnp.where(ok, q, -jnp.inf), k)

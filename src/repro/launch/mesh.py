@@ -86,6 +86,70 @@ def _split_seed_env(n_seeds: int, n_envs: int, n_dev: int) -> Optional[tuple]:
     return s, e
 
 
+# ---------------------------------------------------------------------------
+# fleet-axis layout planning for two-stage hierarchical sharded scoring
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetLayout:
+    """How a fleet's N node columns map onto shards for two-stage scoring.
+
+    The node axis splits into ``shards`` contiguous slices of ``shard_size``
+    nodes (the last slice padded with infeasible filler up to
+    ``padded = shards * shard_size``); each shard scores its own columns and
+    reduces to a per-shard top-k in-kernel, and only the tiny
+    ``shards × k`` candidate set is merged globally — no full N-length score
+    vector ever materializes on one device (``sched.shard``).
+
+    ``mesh`` is an optional 1-D ``("data",)`` device mesh: when present the
+    shard axis is pinned to it with sharding constraints so each device
+    holds ``shard_size`` node columns; when ``None`` the same two-stage
+    program runs on one device (forced-shard benchmarking / tests — the
+    reduction tree is identical, only the placement differs).  Hashable, so
+    a layout can ride along as a jit static.
+    """
+
+    shards: int
+    shard_size: int
+    n_nodes: int
+    mesh: Optional[jax.sharding.Mesh] = None
+
+    @property
+    def padded(self) -> int:
+        return self.shards * self.shard_size
+
+
+def plan_fleet_layout(n_nodes: int, mesh=None, *,
+                      shards: Optional[int] = None) -> Optional[FleetLayout]:
+    """Pick the node-column sharding for a two-stage scoring launch.
+
+    ``shards`` forces an explicit shard count (any ``n_nodes``, padded to
+    divisibility — the single-device benchmarking/test path).  Otherwise the
+    plan follows ``mesh``: one shard per device of its flattened device set.
+    Returns ``None`` — run today's unsharded program, bit-identically —
+    when the result would be a single shard: no mesh and no forced count, a
+    1-device mesh, or a fleet smaller than the device count.
+    """
+    if shards is not None:
+        if shards <= 1 or n_nodes < shards:
+            return None
+        size = -(-n_nodes // shards)
+        lmesh = None
+        if mesh is not None and int(mesh.devices.size) == shards:
+            lmesh = jax.sharding.Mesh(mesh.devices.reshape(shards), ("data",))
+        return FleetLayout(shards=shards, shard_size=size, n_nodes=n_nodes,
+                           mesh=lmesh)
+    if mesh is None:
+        return None
+    n_dev = int(mesh.devices.size)
+    if n_dev <= 1 or n_nodes < n_dev:
+        return None
+    lmesh = jax.sharding.Mesh(mesh.devices.reshape(n_dev), ("data",))
+    return FleetLayout(shards=n_dev, shard_size=-(-n_nodes // n_dev),
+                       n_nodes=n_nodes, mesh=lmesh)
+
+
 def plan_seed_env_layout(n_seeds: int, n_envs: int, mesh) -> Optional[SeedEnvLayout]:
     """Pick the joint seed×env sharding for a ``train_seeds`` launch.
 

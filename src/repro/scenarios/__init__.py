@@ -10,6 +10,7 @@ from repro.scenarios.catalog import NODE_CLASSES, POD_TYPES
 from repro.scenarios.engine import batch_episode, evaluate_scenario, scenario_episode
 from repro.scenarios.registry import (
     SCENARIOS,
+    SCORING_ONLY,
     get_scenario,
     make_env,
     scenario_names,
@@ -20,6 +21,7 @@ __all__ = [
     "NODE_CLASSES",
     "POD_TYPES",
     "SCENARIOS",
+    "SCORING_ONLY",
     "ArrivalTrace",
     "arrival_trace",
     "trace_from_table",

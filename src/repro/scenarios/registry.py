@@ -203,6 +203,49 @@ FLEET_HETERO = _register(ScenarioConfig(
     n_pods=200,
 ))
 
+# --- cluster-of-clusters family (16–18): N identical 4096-node regional
+# clusters federated into one scheduling domain, 4k → 128k nodes.  These
+# exist to exercise the two-stage hierarchical sharded scoring path
+# (``sched.shard``) — an episode rollout at 128k nodes is not the point, so
+# the pod stream is small and the scoring benchmarks (benchmarks/
+# fleet_scale.py) drive them per-decision.  They are registered like any
+# scenario (make_env works) but excluded from the episode-sweep benches via
+# SCORING_ONLY. -------------------------------------------------------------
+
+_COC_CLUSTER = (          # one 4096-node regional cluster
+    _c(cat.BIG_CPU, count=512),
+    _c(cat.PAPER_SLAVE, count=2048),
+    _c(cat.SMALL_EDGE, count=1536),
+)
+
+
+def _cluster_of_clusters(n_clusters: int, label: str) -> ScenarioConfig:
+    return ScenarioConfig(
+        name=f"cluster-of-clusters-{label}",
+        node_classes=tuple(
+            _c(nc, name=f"coc{i}-{nc.name}")
+            for i in range(n_clusters) for nc in _COC_CLUSTER),
+        pod_types=(
+            cat.weighted(cat.TRAIN_HEAVY, 0.2),
+            cat.weighted(cat.SERVE_LIGHT, 0.6),
+            cat.weighted(cat.BATCH_BURST, 0.2),
+        ),
+        arrival=ArrivalConfig(kind="poisson", rate_per_s=5.0),
+        n_pods=32,
+    )
+
+
+COC_4K = _register(_cluster_of_clusters(1, "4k"))
+COC_16K = _register(_cluster_of_clusters(4, "16k"))
+COC_64K = _register(_cluster_of_clusters(16, "64k"))
+COC_128K = _register(_cluster_of_clusters(32, "128k"))
+
+# scenarios meant for per-decision scoring benches, not episode sweeps:
+# scenario_bench.sweep/smoke_rows skip them (episode physics at 10^5 nodes
+# adds nothing the 1k fleet-hetero rollout doesn't already cover)
+SCORING_ONLY = frozenset(
+    n for n in SCENARIOS if n.startswith("cluster-of-clusters-"))
+
 
 def scenario_names() -> List[str]:
     return sorted(SCENARIOS)

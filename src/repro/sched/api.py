@@ -33,11 +33,21 @@ sweeps), ``False`` (force the unfused reference path).
 ``NO_PLACEMENT`` (== ``env.NO_NODE`` == ``placement.NO_HOST``) is the
 sentinel every selector in the repo returns when the filtering phase leaves
 no feasible target.
+
+``shard`` mirrors ``fused`` as the *fleet-axis* knob: ``"auto"`` (default)
+shards node columns across the visible devices' ``data`` axis when there is
+more than one device and runs two-stage hierarchical scoring
+(``sched.shard``: per-shard in-kernel top-k, then a tiny global merge — no
+full N-length score vector on one device); on a single device it resolves
+to the unsharded program, bit-identically.  ``False`` disables sharding; an
+int forces that shard count (single-device two-stage execution, for tests
+and benchmarks); a ``launch.mesh.FleetLayout`` pins an explicit layout.
 """
 from __future__ import annotations
 
 from typing import Optional, Union
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import schedulers
@@ -46,7 +56,7 @@ from repro.sched import placement as _placement
 from repro.sched.placement import FleetState, JobSpec
 
 __all__ = ["DIVERGENCE_LIMIT", "NO_PLACEMENT", "heuristic_score", "score",
-           "score_batch", "scores_valid", "select"]
+           "score_batch", "scores_valid", "select", "topk"]
 
 Fleet = Union[ClusterState, FleetState]
 Workload = Union[PodSpec, JobSpec]
@@ -119,8 +129,13 @@ def _fleet_policy_score(fleet: FleetState, delta: jnp.ndarray, params: dict,
     return policy.score_set(params, feats)
 
 
+def _fleet_size(fleet: Fleet) -> int:
+    return (fleet.n_nodes if isinstance(fleet, ClusterState)
+            else fleet.cpu_pct.shape[0])
+
+
 def score(fleet: Fleet, pod: Workload, *, params: dict,
-          cfg: Optional[EnvConfig] = None, fused="auto",
+          cfg: Optional[EnvConfig] = None, fused="auto", shard="auto",
           score_fn=None, policy=None, embed=None,
           guard: bool = False) -> jnp.ndarray:
     """(N,) Q-scores of placing ``pod`` on each target in ``fleet``.
@@ -131,14 +146,29 @@ def score(fleet: Fleet, pod: Workload, *, params: dict,
     ``core.policy.PolicySpec``) swaps in a registered policy class on either
     substrate; ``embed`` is its history embedding for sequence specs.
 
+    ``shard`` (module docstring) distributes the fleet axis: with a
+    resolved layout the vector is computed shard-by-shard and stays
+    device-sharded along ``data`` — logically (N,), physically never
+    gathered until the caller syncs it.  Selection-only callers should
+    prefer ``topk``/``select``, which never build the vector at all.
+
     ``guard=True`` validates the scores at this dispatch — NaN/inf or
     ``|Q| > DIVERGENCE_LIMIT`` anywhere in the vector swaps the WHOLE vector
     for ``heuristic_score`` (jit-safe ``where``, so it composes with every
     policy class and both substrates).  Serving paths set it; the training
     loop keeps the unguarded hot path.
     """
-    q = _score_raw(fleet, pod, params=params, cfg=cfg, fused=fused,
-                   score_fn=score_fn, policy=policy, embed=embed)
+    from repro.sched import shard as _shard
+
+    layout = _shard.resolve_layout(shard, _fleet_size(fleet))
+    if layout is None:
+        q = _score_raw(fleet, pod, params=params, cfg=cfg, fused=fused,
+                       score_fn=score_fn, policy=policy, embed=embed)
+    else:
+        q = _shard.sharded_scores(fleet, pod, params=params, cfg=cfg,
+                                  layout=layout, fused=fused,
+                                  score_fn=score_fn, policy=policy,
+                                  embed=embed)
     if not guard:
         return q
     return jnp.where(scores_valid(q), q, heuristic_score(fleet, pod, cfg=cfg))
@@ -200,8 +230,44 @@ def score_batch(fleet: Fleet, pods: Workload, *, params: dict,
     raise TypeError(f"unsupported fleet type: {type(fleet).__name__}")
 
 
+def topk(fleet: Fleet, pod: Workload, *, params: dict,
+         cfg: Optional[EnvConfig] = None, k: int = 4, fused="auto",
+         shard="auto", score_fn=None, policy=None, embed=None):
+    """The ``k`` best feasible targets: ``(values, indices)`` sorted
+    descending, ties by ascending index.  Infeasible slots carry ``-inf`` /
+    index ``-1``; element 0 matches ``select`` exactly (modulo the sentinel).
+
+    With a resolved shard layout this is the two-stage hierarchical path —
+    per-shard in-kernel top-k, global merge over ``shards × k`` candidates —
+    and the result may hold up to ``shards * k`` entries (all candidates
+    that survived stage 1, the daemon's conflict-fallback depth).  Unsharded
+    it is a plain masked ``lax.top_k``.
+    """
+    from repro.sched import shard as _shard
+
+    n = _fleet_size(fleet)
+    layout = _shard.resolve_layout(shard, n)
+    if layout is not None:
+        return _shard.topk(fleet, pod, params=params, cfg=cfg, layout=layout,
+                           k=k, fused=fused, score_fn=score_fn,
+                           policy=policy, embed=embed)
+    q = _score_raw(fleet, pod, params=params, cfg=cfg, fused=fused,
+                   score_fn=score_fn, policy=policy, embed=embed)
+    ok = _feasible(fleet, pod, cfg, params)
+    vals, idx = jax.lax.top_k(jnp.where(ok, q, -jnp.inf), max(1, min(k, n)))
+    return vals, jnp.where(jnp.isfinite(vals), idx, -1)
+
+
+def _feasible(fleet: Fleet, pod: Workload, cfg, params: dict) -> jnp.ndarray:
+    if isinstance(fleet, ClusterState):
+        from repro.core import env as kenv
+
+        return kenv.feasible(fleet, pod, cfg)
+    return _placement.PlacementEngine(params).feasible(fleet, pod)
+
+
 def select(fleet: Fleet, pod: Workload, *, params: dict,
-           cfg: Optional[EnvConfig] = None, fused="auto",
+           cfg: Optional[EnvConfig] = None, fused="auto", shard="auto",
            score_fn=None, policy=None, guard: bool = False) -> jnp.ndarray:
     """Greedy feasible argmax over ``score``; ``NO_PLACEMENT`` if none fit.
 
@@ -210,15 +276,23 @@ def select(fleet: Fleet, pod: Workload, *, params: dict,
     which batches requests and binds with optimistic concurrency.
     ``guard=True`` falls back to the kube heuristic on NaN/diverged scores
     (see ``score``) — invalid Q values degrade the placement, never wedge it.
-    """
-    q = score(fleet, pod, params=params, cfg=cfg, fused=fused,
-              score_fn=score_fn, policy=policy, guard=guard)
-    if isinstance(fleet, ClusterState):
-        from repro.core import env as kenv
 
-        ok = kenv.feasible(fleet, pod, cfg)
-    else:
-        ok = _placement.PlacementEngine(params).feasible(fleet, pod)
+    With a resolved ``shard`` layout (module docstring) selection goes
+    through the two-stage candidate merge and the full score vector is
+    never materialized on one device; the winner is identical to the flat
+    masked argmax (ties break to the lowest index at every merge stage).
+    """
+    from repro.sched import shard as _shard
+
+    layout = _shard.resolve_layout(shard, _fleet_size(fleet))
+    if layout is not None:
+        return _shard.select_candidates(fleet, pod, params=params, cfg=cfg,
+                                        layout=layout, fused=fused,
+                                        score_fn=score_fn, policy=policy,
+                                        guard=guard)
+    q = score(fleet, pod, params=params, cfg=cfg, fused=fused, shard=False,
+              score_fn=score_fn, policy=policy, guard=guard)
+    ok = _feasible(fleet, pod, cfg, params)
     masked = jnp.where(ok, q, -jnp.inf)
     choice = jnp.argmax(masked).astype(jnp.int32)
     return jnp.where(jnp.any(ok), choice, jnp.int32(NO_PLACEMENT))

@@ -237,16 +237,30 @@ class ClusterSubstrate:
     """
 
     def __init__(self, state: ClusterState, cfg: EnvConfig,
-                 score_fn: Optional[Callable] = None, policy=None):
+                 score_fn: Optional[Callable] = None, policy=None,
+                 layout=None, topk: int = 8):
         if score_fn is not None and policy is not None:
             raise ValueError("pass either score_fn or policy, not both")
         self.cfg = cfg
         self.score_fn = score_fn
         self.policy = policy
+        # a launch.mesh.FleetLayout switches the substrate to two-stage
+        # sharded scoring (sched.shard): the snapshot is published PRE-SHARDED
+        # — (shards, shard_size) columns, device-distributed when the layout
+        # carries a mesh — and stays that way between batches; the scorer
+        # returns per-request candidate lists (topk per shard, merged)
+        # instead of full (B, N) score rows
+        self.layout = layout
+        self.topk = topk
         self.live = jax.tree.map(lambda x: np.array(x), state)
 
     def snapshot(self) -> ClusterState:
-        return jax.tree.map(jnp.asarray, self.live)
+        snap = jax.tree.map(jnp.asarray, self.live)
+        if self.layout is not None:
+            from repro.sched import shard as _shard
+
+            snap = _shard.shard_cluster(snap, self.layout)
+        return snap
 
     def init_carry(self, params: dict):
         """The daemon-lifetime arrival-history carry: the policy's encoder
@@ -283,8 +297,58 @@ class ClusterSubstrate:
         re-encodes on its next batch — the history sees it twice, which is
         faithful to a kube scheduling queue (the pod really does arrive at
         the scheduler again).
+
+        With a ``layout`` the contract becomes ``(params, snap, pods, carry,
+        n_real) -> (cand_vals, cand_idx, carry)``, both (B, C) with
+        ``C = shards * topk``: each request's two-stage candidate merge
+        (sorted descending, ``-inf``/``-1`` past the feasible set) — the full
+        (B, N) score matrix is never materialized on one device.  The
+        ``pull_cost_now`` global reduction is computed once per batch from
+        the sharded snapshot and threaded into every per-shard call.
         """
         cfg, score_fn, policy = self.cfg, self.score_fn, self.policy
+
+        if self.layout is not None:
+            from repro.core import policy as policy_mod
+            from repro.sched import shard as _shard
+
+            layout, k = self.layout, self.topk
+
+            if policy is None or policy.embed_dim == 0:
+
+                @jax.jit
+                def score(params, snap, pods, carry, n_real):
+                    pull = kenv.pull_cost_now(snap, cfg)
+                    cv, ci = jax.vmap(
+                        lambda p: _shard.cluster_topk(
+                            params, snap, p, cfg, layout, k=k, fused=fused,
+                            score_fn=score_fn, policy=policy,
+                            pull_cost=pull))(pods)
+                    return cv, ci, carry
+
+                return score
+
+            @jax.jit
+            def score(params, snap, pods, carry, n_real):
+                pull = kenv.pull_cost_now(snap, cfg)
+
+                def step(c, xs):
+                    pod, is_real = xs
+                    c2, emb = policy.encode_step(
+                        params, c, policy_mod.pod_workload_features(pod))
+                    c2 = jax.tree.map(lambda a, b: jnp.where(is_real, a, b),
+                                      c2, c)
+                    cv, ci = _shard.cluster_topk(
+                        params, snap, pod, cfg, layout, k=k, fused=fused,
+                        policy=policy, embed=emb, pull_cost=pull)
+                    return c2, (cv, ci)
+
+                n_b = jax.tree.leaves(pods)[0].shape[0]
+                is_real = jnp.arange(n_b) < n_real
+                carry2, (cv, ci) = jax.lax.scan(step, carry, (pods, is_real))
+                return cv, ci, carry2
+
+            return score
 
         if policy is None or policy.embed_dim == 0:
 
@@ -396,13 +460,23 @@ class FleetSubstrate:
     """
 
     def __init__(self, fleet: _pl.FleetState,
-                 max_host_cpu_pct: float = 88.0, policy=None):
+                 max_host_cpu_pct: float = 88.0, policy=None,
+                 layout=None, topk: int = 8):
         self.live = jax.tree.map(lambda x: np.array(x, np.float64), fleet)
         self.max_host_cpu_pct = max_host_cpu_pct
         self.policy = policy
+        # same sharded-substrate switch as ClusterSubstrate: pre-sharded
+        # snapshot, candidate-list scorer contract (see there)
+        self.layout = layout
+        self.topk = topk
 
     def snapshot(self) -> _pl.FleetState:
-        return jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), self.live)
+        snap = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), self.live)
+        if self.layout is not None:
+            from repro.sched import shard as _shard
+
+            snap = _shard.shard_fleet(snap, self.layout)
+        return snap
 
     def pack(self, jobs: Sequence[_pl.JobSpec], size: int) -> jnp.ndarray:
         jobs = list(jobs) + [jobs[-1]] * (size - len(jobs))
@@ -433,6 +507,44 @@ class FleetSubstrate:
         from repro.sched.api import _fleet_mode
 
         mode = _fleet_mode(fused)
+
+        if self.layout is not None:
+            from repro.core.policy import ENCODER_IN
+            from repro.sched import shard as _shard
+
+            layout, k = self.layout, self.topk
+
+            def shard_topk(params, snap, d, emb=None):
+                return _shard.fleet_topk(params, snap, None, layout, k=k,
+                                         fused=fused, policy=policy,
+                                         embed=emb, delta=d,
+                                         max_host_cpu_pct=max_cpu)
+
+            if policy is None or policy.embed_dim == 0:
+
+                @jax.jit
+                def score(params, snap, deltas, carry, n_real):
+                    cv, ci = jax.vmap(
+                        lambda d: shard_topk(params, snap, d))(deltas)
+                    return cv, ci, carry
+
+                return score
+
+            @jax.jit
+            def score(params, snap, deltas, carry, n_real):
+                def step(c, xs):
+                    d, is_real = xs
+                    wf = (d / kenv.FEATURE_SCALE)[:ENCODER_IN]
+                    c2, emb = policy.encode_step(params, c, wf)
+                    c2 = jax.tree.map(lambda a, b: jnp.where(is_real, a, b),
+                                      c2, c)
+                    return c2, shard_topk(params, snap, d, emb)
+
+                is_real = jnp.arange(deltas.shape[0]) < n_real
+                carry2, (cv, ci) = jax.lax.scan(step, carry, (deltas, is_real))
+                return cv, ci, carry2
+
+            return score
 
         def feasible(snap, deltas):
             return (
@@ -567,6 +679,10 @@ class PlacementDaemon:
         self._timer = timer
         self._pending: collections.deque = collections.deque()
         self._scorer = substrate.make_scorer(config.fused)
+        # sharded substrates score to (B, C) candidate lists (two-stage
+        # top-k merge) instead of full (B, N) rows — the commit path reads
+        # candidates in merged order and never sees a fleet-length vector
+        self._cand_mode = getattr(substrate, "layout", None) is not None
         # sequence policy classes carry their arrival-history encoder state
         # across batches; stateless substrates (incl. ones predating
         # init_carry) thread an empty pytree
@@ -719,7 +835,7 @@ class PlacementDaemon:
         reqs = self._take_batch(now, force)
         if not reqs:
             return 0
-        scores = ok = None
+        scores = ok = cand_idx = None
         degraded = self.config.heuristic_only or self._degraded > 0
         if not degraded:
             # publish the admission buffer as the read (scoring) snapshot;
@@ -735,8 +851,17 @@ class PlacementDaemon:
             self.metrics.device_launches += 1
             deadline = self.config.score_deadline_s
             real = q[:len(reqs)]
-            bad = (not np.all(np.isfinite(real))
-                   or float(np.max(np.abs(real))) > _DIVERGENCE_LIMIT)
+            if self._cand_mode:
+                # candidate lists legitimately carry -inf (infeasible /
+                # exhausted slots) — divergence means NaN, or a FINITE
+                # candidate outside the limit
+                finite = np.isfinite(real)
+                bad = bool(np.isnan(real).any()
+                           or (np.where(finite, np.abs(real), 0.0)
+                               > _DIVERGENCE_LIMIT).any())
+            else:
+                bad = (not np.all(np.isfinite(real))
+                       or float(np.max(np.abs(real))) > _DIVERGENCE_LIMIT)
             if bad or (deadline is not None and elapsed > deadline):
                 # degrade: discard the launch (scores AND its history-carry
                 # advance) and serve this + the next degrade_batches batches
@@ -745,16 +870,31 @@ class PlacementDaemon:
                 degraded = True
             else:
                 self._carry = carry2
-                scores, ok = q, np.asarray(okq)
+                if self._cand_mode:
+                    scores, cand_idx = q, np.asarray(okq)
+                else:
+                    scores, ok = q, np.asarray(okq)
         if degraded:
             if not self.config.heuristic_only and self._degraded > 0:
                 self._degraded -= 1
             self.metrics.fallback_batches += 1
             scores, ok = self._sub.heuristic_batch([r.pod for r in reqs])
+            if self._cand_mode:
+                # degraded mode is host-side numpy by design (no device
+                # launches while degraded), so the full-N heuristic rows are
+                # sorted here into the same candidate contract; the stable
+                # sort keeps the lowest-index-first tie rule of the merge
+                masked = np.where(ok, scores, -np.inf)
+                cand_idx = np.argsort(-masked, axis=1, kind="stable")
+                scores = np.take_along_axis(masked, cand_idx, axis=1)
         self.metrics.batches += 1
         decided = 0
         for i, req in enumerate(reqs):
-            decided += self._commit(req, scores[i], ok[i], now)
+            if self._cand_mode:
+                decided += self._commit_candidates(req, scores[i],
+                                                   cand_idx[i], now)
+            else:
+                decided += self._commit(req, scores[i], ok[i], now)
         return decided
 
     def _decide(self, req: _Request, node: int) -> None:
@@ -793,6 +933,39 @@ class PlacementDaemon:
                     self._sub.bind(int(cand), req.pod)
                     self._decide(req, int(cand))
                     return 1
+        return self._requeue_or_drop(req, now)
+
+    def _commit_candidates(self, req: _Request, vals: np.ndarray,
+                           idx: np.ndarray, now: float) -> int:
+        """Optimistic bind from a merged candidate list (sharded substrates).
+
+        ``vals``/``idx`` are the two-stage merge output: descending scores
+        with global node indices, ``-inf`` past the feasible set.  Same
+        semantics as ``_commit`` — element 0 is exactly the full argmax
+        winner; ``next-best`` walks the remaining candidates (depth
+        ``shards * topk`` instead of N, the price of never materializing the
+        fleet)."""
+        req.attempts += 1
+        if not np.isfinite(vals[0]):
+            self._decide(req, NO_PLACEMENT)
+            return 1
+        choice = int(idx[0])
+        if self._sub.feasible_one(choice, req.pod):
+            self._sub.bind(choice, req.pod)
+            self._decide(req, choice)
+            return 1
+        self.metrics.conflicts += 1
+        if self.config.conflict_policy == "next-best":
+            for v, cand in zip(vals[1:], idx[1:]):
+                if not np.isfinite(v):
+                    break
+                if self._sub.feasible_one(int(cand), req.pod):
+                    self._sub.bind(int(cand), req.pod)
+                    self._decide(req, int(cand))
+                    return 1
+        return self._requeue_or_drop(req, now)
+
+    def _requeue_or_drop(self, req: _Request, now: float) -> int:
         if req.attempts > self.config.max_retries:
             self._decide(req, NO_PLACEMENT)
             return 1

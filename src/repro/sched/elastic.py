@@ -128,7 +128,10 @@ def consolidation_plan(engine: PlacementEngine, fleet: FleetState,
         )
         ok_all = True
         for _ in range(jobs_here):
+            # this planner is a host-side loop: syncing the 0-d choice here
+            # IS the API boundary select defers to
             tgt, scores = engine.select(trial, job)
+            tgt = int(tgt)
             if not bool(jnp.isfinite(scores[tgt])):
                 ok_all = False
                 break

@@ -99,7 +99,7 @@ class PlacementEngine:
             & (fleet.job_util_pct + JOB_UTIL_DELTA_PCT <= 100.0 + 1e-6)
         )
 
-    def select(self, fleet: FleetState, job: JobSpec) -> Tuple[int, jnp.ndarray]:
+    def select(self, fleet: FleetState, job: JobSpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Pick the host for one job. Returns (host index, scores).
 
         Afterstate scoring streams the six fleet columns through the fused
@@ -109,6 +109,12 @@ class PlacementEngine:
         feature matrix in HBM.  The delta matches ``place`` exactly —
         including the ``job_util_pct`` advance of JOB_UTIL_DELTA_PCT, which
         previously stayed stale at its reset value.
+
+        The host index comes back as a 0-d int32 device array, not a Python
+        int: ``int(argmax)``/``bool(any)`` here forced a device sync on
+        EVERY decision, serializing ``place_batch`` on dispatch latency.
+        ``place`` consumes the device scalar as-is; callers that need a
+        Python int sync once at their own API boundary.
         """
         from repro.sched import api  # lazy: api imports this module
 
@@ -119,9 +125,9 @@ class PlacementEngine:
         scores = jnp.where(ok, scores, -jnp.inf)
         # all-infeasible fleet: argmax over all -inf would bind host 0 —
         # return the NO_HOST sentinel instead (place() ignores it)
-        if not bool(jnp.any(ok)):
-            return NO_HOST, scores
-        return int(jnp.argmax(scores)), scores
+        choice = jnp.where(jnp.any(ok), jnp.argmax(scores),
+                           NO_HOST).astype(jnp.int32)
+        return choice, scores
 
     def place(self, fleet: FleetState, host: int, job: JobSpec) -> FleetState:
         onehot = (jnp.arange(fleet.cpu_pct.shape[0]) == host)
