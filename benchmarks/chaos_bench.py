@@ -105,7 +105,7 @@ def _serve_cell(arm: str, rate: float, n_failures: int, n_nodes: int,
     tag = f"chaos_{arm}_rate{int(rate)}_fail{n_failures}"
     return [
         (f"{tag}_throughput", dur / n_requests * 1e6, n_requests / dur),
-        (f"{tag}_p99_ms", 0.0, m.latencies_s.p99() * 1e3),
+        (f"{tag}_p99_ms", 0.0, m.bind_latencies_s.p99() * 1e3),
         (f"{tag}_lost_ratio", 0.0, (m.dropped + m.shed) / m.submitted),
         (f"{tag}_evictions", 0.0, float(m.evictions)),
     ]

@@ -1,0 +1,248 @@
+"""Online-learning serving benchmark: adaptation gain + refresh overhead.
+
+Two claims from the online-refresh loop (``repro.sched.online``), each gated
+through ``benchmarks/gates.json`` against ``baseline_online.json``:
+
+**Adaptation gain** — a daemon serving with a *stale* policy adapts to the
+cluster it is actually serving.  The stale Q-net is trained on yesterday's
+cluster economics (image pulls free: every node warm, so spreading a burst
+was harmless) and then serves a cluster where cold pulls are expensive and
+super-additive under concurrency (``env.pull_cost_now``).  Frozen, it keeps
+spreading pods across cold nodes; with the ``OnlineRefresher`` training on
+the realized transitions the daemon records, it learns pull-avoidance /
+consolidation from the live reward stream.  Rows (avg-CPU over the trace,
+lower = better, as a ratio vs the kube-heuristic daemon on the same trace):
+
+  * ``online_serve_kube_cpu``       — kube-arm avg-CPU%, the denominator
+  * ``online_serve_frozen_ratio``   — stale policy, refresher off
+  * ``online_serve_refreshed_ratio``— same policy + online refresh
+  * ``online_avg_cpu_gain``         — frozen_ratio - refreshed_ratio (GATED
+                                      floor: the refreshed daemon must keep
+                                      beating its frozen self)
+
+**Refresh overhead** — the refresher must not block serving: transitions are
+recorded as O(1) host-side appends (zero added scoring launches) and params
+swap by atomic reference flip at batch-cut boundaries, so p99 decision
+latency with the refresher thread running must stay within ~1.1x of the
+refresher-off daemon.  Rows:
+
+  * ``online_off_p99_ms`` / ``online_on_p99_ms`` — informational
+  * ``online_refresh_overhead``     — p99 on / p99 off (GATED ceiling)
+
+    PYTHONPATH=src python -m benchmarks.run --online-serve \
+        --json BENCH_online.json
+"""
+from __future__ import annotations
+
+import dataclasses
+import gc
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dqn, env as kenv, presets, rewards, train_rl
+from repro.core.types import fleet_cluster
+from repro.scenarios import arrival_trace
+from repro.sched.daemon import (
+    ClusterSubstrate,
+    DaemonConfig,
+    PlacementDaemon,
+    replay_trace,
+)
+from repro.sched.online import OnlineRefresher, TransitionRecorder
+
+# Serving trace sizing: 400 pods in waves of 32 onto a 64-node cluster stays
+# comfortably below saturation (no drops in any arm, so the avg-CPU ratios
+# compare equal served load), while the per-wave tick lets pull transients
+# decay exactly as wall-clock would.
+N_NODES = 64
+N_PODS = 400
+WAVE = 32
+BATCH = 8
+TICK_DT_S = 10.0
+REFRESH_STEPS_PER_WAVE = 8
+REFRESH_BATCH = 256
+# the online reward: consolidation (Table 5) plus a heavy shaping term on the
+# paper's objective itself, so the realized-reward stream the refresher
+# trains on points at exactly what the bench measures (cluster-average CPU)
+EFFICIENCY_WEIGHT = 50.0
+
+
+def _stale_policy() -> dict:
+    """A competent-but-stale Q-net: trained where image pulls cost nothing.
+
+    On that cluster the Table-3 distribution reward makes spreading optimal;
+    served against default pull economics the same policy is systematically
+    wrong — the headroom the online refresher is expected to recover.
+    """
+    cfg_old = dataclasses.replace(fleet_cluster(N_NODES),
+                                  image_pull_cost=0.0, warm_start_cost=0.0)
+    rl = dataclasses.replace(presets.SDQN_PRESET, episodes=24)
+    qp, _ = train_rl.train(jax.random.PRNGKey(7), cfg_old, rl)
+    return qp
+
+
+def _serve_arm(arm: str, qp: dict, state0, cfg) -> Tuple[float, int, int]:
+    """One wave-driven serving run; returns (mean avg-CPU%, dropped, steps).
+
+    Deterministic by construction: submissions carry a fixed ``now``, the
+    refresher runs inline between waves (no thread scheduling in the metric),
+    and the wave tick advances wall-clock physics by a fixed dt.
+    """
+    table = kenv.sample_pod_table(jax.random.PRNGKey(101), cfg, N_PODS)
+    pods = [jax.tree.map(lambda x: x[i], table.specs) for i in range(N_PODS)]
+    sub = ClusterSubstrate(state0, cfg)
+    rec = ref = hook = None
+    dc = DaemonConfig(batch_size=BATCH, max_wait_s=0.0,
+                      conflict_policy="next-best",
+                      heuristic_only=(arm == "kube"))
+    if arm == "online":
+        rec = TransitionRecorder(
+            state0, cfg,
+            reward_fn=rewards.make_reward_fn(
+                "sdqn_n", efficiency_weight=EFFICIENCY_WEIGHT))
+        hook = rec.record
+    daemon = PlacementDaemon(sub, qp, dc, decision_hook=hook)
+    if arm != "kube":
+        daemon.warmup()
+    if arm == "online":
+        ref = OnlineRefresher(daemon, rec, batch_size=REFRESH_BATCH)
+    tick = jax.jit(kenv.tick, static_argnums=(1,))
+    cpus: List[float] = []
+    for i, pod in enumerate(pods):
+        daemon.submit(pod, now=0.0)
+        if (i + 1) % BATCH == 0:
+            daemon.flush(now=0.0)
+        if (i + 1) % WAVE == 0:
+            live = tick(jax.tree.map(jnp.asarray, sub.live), cfg, TICK_DT_S)
+            sub.live = jax.tree.map(lambda x: np.array(x), live)
+            if rec is not None:
+                rec.resync(live)
+            if ref is not None:
+                for _ in range(REFRESH_STEPS_PER_WAVE):
+                    ref.step()
+            cpus.append(float(kenv.average_cpu_utilization(live, cfg)))
+    daemon.drain()
+    m = daemon.metrics
+    assert m.bound + m.dropped == N_PODS
+    if arm == "online":
+        # the recorder is pure host-side bookkeeping on the serving path:
+        # enabling online learning must add no scoring launches
+        assert m.device_launches == m.batches, "online recorder added launches"
+    return float(np.mean(cpus)), m.dropped, (ref.steps if ref else 0)
+
+
+def gain_rows() -> List[Tuple[str, float, float]]:
+    cfg = fleet_cluster(N_NODES)
+    state0 = kenv.reset(jax.random.PRNGKey(1), cfg)
+    qp = _stale_policy()
+    out = {}
+    for arm in ("kube", "frozen", "online"):
+        cpu, dropped, steps = _serve_arm(arm, qp, state0, cfg)
+        out[arm] = cpu
+        print(f"  online-serve {arm:7s} avg_cpu={cpu:6.2f}%"
+              f"  dropped={dropped}  refresh_steps={steps}")
+    kube = out["kube"]
+    frozen_ratio = out["frozen"] / kube
+    refreshed_ratio = out["online"] / kube
+    print(f"  online-serve gain: frozen={frozen_ratio:.3f} "
+          f"refreshed={refreshed_ratio:.3f} "
+          f"gain={frozen_ratio - refreshed_ratio:+.3f}")
+    return [
+        ("online_serve_kube_cpu", 0.0, kube),
+        ("online_serve_frozen_ratio", 0.0, frozen_ratio),
+        ("online_serve_refreshed_ratio", 0.0, refreshed_ratio),
+        ("online_avg_cpu_gain", 0.0, frozen_ratio - refreshed_ratio),
+    ]
+
+
+def overhead_rows(rate_per_s: float = 500.0,
+                  n_requests: int = 2500,
+                  n_nodes: int = 256) -> List[Tuple[str, float, float]]:
+    """p99 decision latency with the refresher thread on vs off.
+
+    Same offered rate as the gated ``placement_serve_rate500`` row, over a
+    ~5s trace on a 256-node cluster (sized so the trace never saturates —
+    a requeue backlog would swamp both arms and measure queueing, not the
+    refresher).  The on-run records every decision AND trains concurrently.
+    On the shared CPU device a refresh cycle's launches queue ahead of
+    scoring launches, so the fraction of requests a cycle can delay is
+    ~``cycle_window / min_interval`` — the refresher is sized (warm-compiled
+    via ``warmup()``, drain bounded to 2 chunks/cycle, 3s throttle) to keep
+    that under the p99 index, and the on/off ratio is gated at a ~1.1x
+    ceiling.
+    """
+    cfg = fleet_cluster(n_nodes)
+    state0 = kenv.reset(jax.random.PRNGKey(1), cfg)
+    qp = dqn.init_qnet(jax.random.PRNGKey(0))
+    trace = arrival_trace(jax.random.PRNGKey(2), cfg, n_requests,
+                          rate_per_s=rate_per_s)
+
+    def one_run(mode: str) -> float:
+        sub = ClusterSubstrate(state0, cfg)
+        rec = ref = hook = None
+        if mode == "on":
+            rec = TransitionRecorder(
+                state0, cfg, capacity=8192,
+                reward_fn=rewards.make_reward_fn(
+                    "sdqn_n", efficiency_weight=EFFICIENCY_WEIGHT))
+            hook = rec.record
+        # 20ms batch-cut: ~10-pod batches at 500/s keep service throughput
+        # well above the offered rate (tiny 5ms batches sit exactly at the
+        # sustainable edge and random-walk into a backlog on long traces)
+        daemon = PlacementDaemon(
+            sub, qp, DaemonConfig(batch_size=32, max_wait_s=0.02),
+            decision_hook=hook)
+        daemon.warmup()
+        if mode == "on":
+            ref = OnlineRefresher(daemon, rec, batch_size=REFRESH_BATCH,
+                                  min_interval_s=3.0,
+                                  drain_chunks_per_step=1)
+            ref.warmup()         # compile drain/train paths off the clock
+            ref.start()
+        # GC pauses are the dominant latency pollutant on a long paced
+        # trace (a gen-2 pass over a bench-inflated heap stalls for
+        # hundreds of ms); collect up front, then keep the collector out
+        # of the measurement window for both arms alike
+        gc.collect()
+        gc.disable()
+        try:
+            replay_trace(daemon, trace.t_s, trace.pods)
+        finally:
+            gc.enable()
+            if ref is not None:
+                ref.stop()
+        m = daemon.metrics
+        assert m.device_launches == m.batches, "refresher added scoring launches"
+        assert m.bound + m.dropped == n_requests
+        if mode == "on":
+            assert ref.steps > 0, "refresher thread never ran"
+        return float(np.percentile(np.asarray(m.bind_latencies_s), 99)) * 1e3
+
+    # best-of-2 per arm: a one-off machine stall (noisy CI neighbor, THP
+    # compaction) inflates one trace by seconds; it must not decide a
+    # gated ~1.1x ratio in either direction
+    p99 = {mode: min(one_run(mode) for _ in range(2))
+           for mode in ("off", "on")}
+    print(f"  online-overhead off: p99={p99['off']:.3f}ms / "
+          f"on: p99={p99['on']:.3f}ms")
+    return [
+        ("online_off_p99_ms", 0.0, p99["off"]),
+        ("online_on_p99_ms", 0.0, p99["on"]),
+        ("online_refresh_overhead", 0.0, p99["on"] / p99["off"]),
+    ]
+
+
+def rows() -> List[Tuple[str, float, float]]:
+    print("\n--- online-learning serving bench ---")
+    # latency first: the gain arms inflate the heap and compile caches, and
+    # p99 measurement deserves the cleanest process state available
+    return overhead_rows() + gain_rows()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -62,7 +62,7 @@ def serve_rows(n_nodes: int = 64, n_requests: int = 400,
         m = daemon.metrics
         assert m.device_launches == m.batches, "batched scoring de-fused"
         assert m.bound + m.dropped == n_requests
-        lat = np.asarray(m.latencies_s)
+        lat = np.asarray(m.bind_latencies_s)   # served decisions only
         tag = f"placement_serve_rate{int(rate)}"
         rows += [
             (f"{tag}_throughput", dur / n_requests * 1e6, n_requests / dur),

@@ -83,6 +83,18 @@ def main() -> None:
     mode.add_argument("--lifecycle-smoke", action="store_true",
                       help="CI-sized lifecycle benchmark (the sizing "
                            "benchmarks/baseline_lifecycle.json is gated at)")
+    mode.add_argument("--pareto", action="store_true",
+                      help="full green-Pareto-frontier sweep: kube / TOPSIS / "
+                           "SDQN-n across the energy_weight grid on every "
+                           "churn scenario — the nightly lane")
+    mode.add_argument("--pareto-smoke", action="store_true",
+                      help="CI-sized Pareto sweep (the sizing "
+                           "benchmarks/baseline_pareto.json is gated at)")
+    mode.add_argument("--online-serve", action="store_true",
+                      help="online-learning serving benchmark: p99 with the "
+                           "refresher on/off (overhead ratio) + served "
+                           "avg-CPU gain of the refreshed policy (the sizing "
+                           "baseline_online.json is gated at)")
     mode.add_argument("--policy-compare", action="store_true",
                       help="CI-sized policy-class comparison: every "
                            "core.policy registry class vs kube on two "
@@ -187,6 +199,20 @@ def main() -> None:
         from benchmarks import lifecycle_bench
 
         rows += lifecycle_bench.smoke_rows()
+    elif args.pareto:
+        from benchmarks import lifecycle_bench
+
+        rows += lifecycle_bench.pareto_rows(
+            trials=args.trials or 3, n_pods=args.pods,
+            train_episodes=args.train_episodes or 120)
+    elif args.pareto_smoke:
+        from benchmarks import lifecycle_bench
+
+        rows += lifecycle_bench.pareto_smoke_rows()
+    elif args.online_serve:
+        from benchmarks import online_bench
+
+        rows += online_bench.rows()
     elif args.policy_compare:
         from benchmarks import policy_compare
 

@@ -54,7 +54,8 @@ from repro.optim import adam_init, adam_update
 
 __all__ = [
     "ENCODER_IN", "PolicySpec", "checkpoint_metadata", "get",
-    "init_train_state", "make_train_step", "mse_loss", "names",
+    "init_train_state", "make_opt_state", "make_train_step", "mse_loss",
+    "names",
     "pod_workload_features", "register", "restore_checkpoint",
     "save_checkpoint",
 ]
@@ -138,6 +139,13 @@ def mse_loss(spec: PolicySpec, params, feats, targets, weights=None):
 def init_train_state(spec: PolicySpec, key: jax.Array):
     params = spec.init(key)
     return params, adam_init(params, ADAM)
+
+
+def make_opt_state(params) -> dict:
+    """Fresh Adam moments for an EXISTING parameter pytree — warm-starting a
+    learner from served/checkpointed params (the online refresher starts
+    from the daemon's deployed policy, not a fresh init)."""
+    return adam_init(params, ADAM)
 
 
 def make_train_step(spec: PolicySpec) -> Callable:

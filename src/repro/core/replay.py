@@ -82,7 +82,8 @@ def replay_init(capacity: int, n_features: int = FEATURE_DIM,
 
 
 def replay_add(buf: Replay, feats: jnp.ndarray, targets: jnp.ndarray,
-               weights: jnp.ndarray = None) -> Replay:
+               weights: jnp.ndarray = None,
+               n_valid: jnp.ndarray = None) -> Replay:
     """feats: (B, F); targets: (B,); weights: (B,) or None (= all 1).
 
     A zero weight stores a transition that never contributes to the loss —
@@ -94,6 +95,13 @@ def replay_add(buf: Replay, feats: jnp.ndarray, targets: jnp.ndarray,
     row never straddles the wrap.  Any other ``B`` (multiples of ``lane``
     only; enforced) falls back to the general modular scatter on the flat
     transition view, which stores to the identical linear positions.
+
+    ``n_valid`` (a traced () int32) stores only the FIRST ``n_valid`` of the
+    ``B`` rows: pad rows leave the ring bit-untouched and the pointer/size
+    advance by ``n_valid``.  This is how fixed-shape producers (the online
+    recorder's padded drain chunks, ``sched.online``) add a variable number
+    of transitions through ONE jitted executable.  Lane-1 rings only: a
+    partial add would break the lane alignment invariant otherwise.
     """
     b = feats.shape[0]
     lane = buf.lane
@@ -108,6 +116,24 @@ def replay_add(buf: Replay, feats: jnp.ndarray, targets: jnp.ndarray,
          targets.astype(jnp.float32)[:, None],
          weights.astype(jnp.float32)[:, None]], axis=1)
     cap = buf.capacity
+    if n_valid is not None:
+        if lane != 1:
+            raise ValueError("n_valid masked adds require a lane-1 ring")
+        if b > cap:
+            raise ValueError(f"masked add of {b} rows exceeds capacity {cap}")
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        # gather-then-select: pad rows write back the value already there,
+        # so the ring (and its wrap order) is bit-identical to n_valid
+        # sequential one-row adds
+        idx = (buf.ptr + jnp.arange(b, dtype=jnp.int32)) % cap
+        flat = buf.data.reshape(cap, -1)
+        keep = (jnp.arange(b) < n_valid)[:, None]
+        data = flat.at[idx].set(jnp.where(keep, rows, flat[idx]))
+        return Replay(
+            data=data.reshape(buf.data.shape),
+            ptr=(buf.ptr + n_valid) % cap,
+            size=jnp.minimum(buf.size + n_valid, cap),
+        )
     if b == lane and lane > 1:
         # one aligned slot: contiguous in-place update, no per-element indices
         slot = (buf.ptr // lane) % buf.data.shape[0]

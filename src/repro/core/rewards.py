@@ -120,6 +120,17 @@ def energy_term(exp_pods_before: jnp.ndarray, exp_pods_after: jnp.ndarray) -> jn
     return after - before
 
 
+def _validate_energy_weight(w) -> float:
+    """Coerce ``energy_weight`` to a plain float; reject bools, arrays, < 0."""
+    if isinstance(w, bool) or not isinstance(w, (int, float)):
+        raise TypeError(
+            f"energy_weight must be a plain Python number, got {type(w).__name__}")
+    w = float(w)
+    if w < 0.0:
+        raise ValueError(f"energy_weight must be >= 0, got {w}")
+    return w
+
+
 def make_reward_fn(variant: str = "sdqn", consolidation_n: int = 2,
                    efficiency_weight: float = 0.0,
                    energy_weight: float = 0.0):
@@ -136,7 +147,14 @@ def make_reward_fn(variant: str = "sdqn", consolidation_n: int = 2,
     ``energy_term``), so packing onto already-active nodes is rewarded over
     waking idle ones — the node-count analogue of the avg-CPU efficiency
     shaping.
+
+    ``energy_weight`` must be a plain non-negative Python number (exactly
+    ``0.0`` disables the term).  Bools and 0-d arrays are rejected: a
+    ``jnp.float32(0.)`` is truthy under ``not`` on some paths and an array
+    weight would silently bake a traced constant into the closure during the
+    Pareto sweep.
     """
+    energy_weight = _validate_energy_weight(energy_weight)
     if variant == "sdqn":
 
         def base_fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):
@@ -154,7 +172,7 @@ def make_reward_fn(variant: str = "sdqn", consolidation_n: int = 2,
     else:
         raise ValueError(f"unknown reward variant: {variant!r}")
 
-    if not energy_weight:
+    if energy_weight == 0.0:
         return base_fn
 
     def fn(after_feats, before_feats, ok, action, exp_pods_before, exp_pods_after):

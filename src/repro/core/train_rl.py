@@ -97,6 +97,36 @@ class TrainCarry(NamedTuple):
     learn_step: jnp.ndarray
 
 
+def realized_transition(env_state, pod, action, env_cfg: EnvConfig,
+                        reward_fn):
+    """The action-agnostic transition body: bind a REALIZED action, shape the
+    reward, build the stored replay row.
+
+    Returns (new_env_state, stored_feats (6,), scaled reward).  Shared by the
+    training loops (which pick ``action`` via a selector) and the serving
+    daemon's online recorder (``sched.online.TransitionRecorder``, which
+    replays the daemon's committed decisions) — using one body is what makes
+    the online ring stream bit-identical to the offline one.
+
+    action == NO_NODE (drop): there is no realized afterstate — the gather
+    is clamped (a negative index would wrap to the LAST node's features) and
+    the caller must zero-weight the stored transition.
+    """
+    before_feats = kenv.features(env_state, env_cfg)
+    ok = kenv.feasible(env_state, pod, env_cfg)
+    new_state = kenv.place(env_state, action, pod, env_cfg)
+    after_feats = kenv.features(new_state, env_cfg)
+    r = reward_fn(after_feats, before_feats, ok, action,
+                  env_state.exp_pods, new_state.exp_pods)
+    # only the realized afterstate is stored: a single row, never the (N, 6)
+    # matrix (any scoring pass that picked `action` goes through the fused
+    # kernel dispatch and does not materialize it either)
+    stored = kenv.normalize_features(
+        kenv.hypothetical_place_one(env_state, pod, env_cfg,
+                                    jnp.maximum(action, 0)))
+    return new_state, stored, r * REWARD_SCALE
+
+
 def transition_step(key, select, env_state, pod, dt_s, env_cfg: EnvConfig,
                     reward_fn):
     """One pod arrival in one env, shared by the RL and supervised loops:
@@ -106,27 +136,12 @@ def transition_step(key, select, env_state, pod, dt_s, env_cfg: EnvConfig,
     ``select(key, state, pod) -> node`` is any episode-compatible selector
     (epsilon-greedy SDQN for RL, ``kube_select`` for behavior cloning);
     ``reward_fn`` follows the ``rewards.make_reward_fn`` interface.
-
-    action == NO_NODE (drop): there is no realized afterstate — the gather
-    is clamped (a negative index would wrap to the LAST node's features) and
-    the caller must zero-weight the stored transition.
     """
-    before_feats = kenv.features(env_state, env_cfg)
-    ok = kenv.feasible(env_state, pod, env_cfg)
     action = select(key, env_state, pod)
-
-    new_state = kenv.place(env_state, action, pod, env_cfg)
-    after_feats = kenv.features(new_state, env_cfg)
-    r = reward_fn(after_feats, before_feats, ok, action,
-                  env_state.exp_pods, new_state.exp_pods)
-    # only the realized afterstate is stored: a single row, never the (N, 6)
-    # matrix (the scoring pass inside `select` goes through the fused kernel
-    # dispatch and does not materialize it either)
-    stored = kenv.normalize_features(
-        kenv.hypothetical_place_one(env_state, pod, env_cfg,
-                                    jnp.maximum(action, 0)))
+    new_state, stored, r = realized_transition(env_state, pod, action,
+                                               env_cfg, reward_fn)
     new_state = kenv.tick(new_state, env_cfg, dt_s)
-    return new_state, stored, r * REWARD_SCALE, action
+    return new_state, stored, r, action
 
 
 def _transition(key, qparams, env_state, pod, dt_s, env_cfg: EnvConfig,

@@ -76,6 +76,15 @@ def main(argv=None):
                     help="policy class (core.policy registry) when --qnet-path "
                          "is empty or carries no policy metadata; checkpoint "
                          "metadata wins otherwise")
+    ap.add_argument("--online", action="store_true",
+                    help="close the loop: record every realized routing "
+                         "decision (FleetTransitionRecorder) and fine-tune "
+                         "the routing policy on the realized rewards "
+                         "(OnlineRefresher; params hot-swap atomically at "
+                         "batch-cut boundaries)")
+    ap.add_argument("--online-steps", type=int, default=4,
+                    help="refresh cycles to run after the routing burst "
+                         "(with --online)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -100,9 +109,21 @@ def main(argv=None):
     fleet = fresh_fleet(args.replicas, jax.random.fold_in(key, 2))
     waves = args.requests // args.wave_size
     sub = FleetSubstrate(fleet, policy=qspec)
+    recorder = None
+    if args.online:
+        from repro.core.types import FEATURE_DIM
+        from repro.sched.online import FleetTransitionRecorder
+
+        if qspec.feature_dim != FEATURE_DIM:
+            raise SystemExit(
+                f"--online needs a policy with the canonical afterstate "
+                f"feature width ({FEATURE_DIM}); {qspec.name} trains on "
+                f"{qspec.feature_dim}-wide rows")
+        recorder = FleetTransitionRecorder(fleet)
     daemon = PlacementDaemon(
         sub, qparams,
-        DaemonConfig(batch_size=max(min(waves, 8), 1), max_wait_s=0.0))
+        DaemonConfig(batch_size=max(min(waves, 8), 1), max_wait_s=0.0),
+        decision_hook=recorder.record if recorder else None)
     daemon.warmup()
     job = JobSpec(cpu_pct_demand=100.0 / max(waves, 1), kind="serve")
 
@@ -110,6 +131,21 @@ def main(argv=None):
         daemon.submit(job)
     daemon.drain()
     assignments = [d.node for d in sorted(daemon.decisions)]
+
+    if args.online:
+        # after external churn (replica restarts, manual unbinds) the shadow
+        # must be rebased first: recorder.resync(sub.live) — this burst is a
+        # pure submit/bind trace, so a plain drain/train/publish cycle works
+        from repro.sched.online import OnlineRefresher
+
+        ref = OnlineRefresher(daemon, recorder, spec=qspec)
+        ref.warmup()
+        for _ in range(args.online_steps):
+            ref.step()
+        loss = "n/a" if ref.last_loss is None else f"{ref.last_loss:.4f}"
+        print(f"[serve] online refresh: {recorder.drained} transitions "
+              f"recorded, {ref.steps} refresh steps, {ref.swaps} param "
+              f"swaps, last_loss={loss}")
 
     t0 = time.time()
     generated = 0

@@ -10,3 +10,9 @@ from repro.sched.daemon import (  # noqa: F401
     PlacementDaemon,
     replay_trace,
 )
+from repro.sched.online import (  # noqa: F401
+    FleetTransitionRecorder,
+    OnlineRefresher,
+    TransitionRecorder,
+)
+from repro.sched.topsis import make_topsis_selector, topsis_scores  # noqa: F401

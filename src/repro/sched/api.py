@@ -56,7 +56,7 @@ from repro.sched import placement as _placement
 from repro.sched.placement import FleetState, JobSpec
 
 __all__ = ["DIVERGENCE_LIMIT", "NO_PLACEMENT", "heuristic_score", "score",
-           "score_batch", "scores_valid", "select", "topk"]
+           "score_batch", "scores_valid", "select", "topk", "topsis_score"]
 
 Fleet = Union[ClusterState, FleetState]
 Workload = Union[PodSpec, JobSpec]
@@ -91,6 +91,20 @@ def heuristic_score(fleet: Fleet, pod: Workload, *,
         balanced = 10.0 * (1.0 - jnp.abs(cpu_free - mem_free))
         return least_requested + balanced
     raise TypeError(f"unsupported fleet type: {type(fleet).__name__}")
+
+
+def topsis_score(fleet: Fleet, pod: Workload, *,
+                 cfg: Optional[EnvConfig] = None,
+                 weights=None) -> jnp.ndarray:
+    """(N,) TOPSIS closeness coefficients — the multi-objective non-RL
+    baseline (``sched.topsis``, GreenPod-shaped: CPU / memory / wake-energy
+    / imbalance cost columns, distance-to-ideal ranking).  Same substrate
+    dispatch as ``heuristic_score``; higher = better, mask feasibility at
+    the caller like every other scorer."""
+    from repro.sched import topsis as _topsis
+
+    weights = _topsis.DEFAULT_WEIGHTS if weights is None else weights
+    return _topsis.topsis_scores(fleet, pod, cfg=cfg, weights=weights)
 
 
 def scores_valid(q: jnp.ndarray) -> jnp.ndarray:

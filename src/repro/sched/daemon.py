@@ -203,8 +203,26 @@ class DaemonMetrics:
     batches: int = 0
     device_launches: int = 0  # jitted scoring calls (degraded batches skip)
     fallback_batches: int = 0  # batches served by the kube heuristic
-    latencies_s: LatencyReservoir = dataclasses.field(
+    # decision latency of SERVED requests (bound or dropped) — the p50/p99
+    # the placement_serve gate measures.  Shed requests live in shed_wait_s:
+    # mixing the two meant that under backpressure the p99 gate measured
+    # time-to-shed, not decision latency.
+    bind_latencies_s: LatencyReservoir = dataclasses.field(
         default_factory=LatencyReservoir)
+    shed_wait_s: LatencyReservoir = dataclasses.field(
+        default_factory=LatencyReservoir)
+
+    @property
+    def latencies_s(self) -> LatencyReservoir:
+        """Deprecated alias of ``bind_latencies_s`` (the pre-split field
+        mixed shed wait times into the decision-latency stream)."""
+        import warnings
+
+        warnings.warn("DaemonMetrics.latencies_s is deprecated: use "
+                      "bind_latencies_s (served decisions) or shed_wait_s "
+                      "(backpressure evictions)", DeprecationWarning,
+                      stacklevel=2)
+        return self.bind_latencies_s
 
 
 # the public name the ops surface documents; the dataclass predates it
@@ -669,8 +687,13 @@ class PlacementDaemon:
     def __init__(self, substrate, params: dict,
                  config: DaemonConfig = DaemonConfig(),
                  clock: Callable[[], float] = time.monotonic,
-                 timer: Callable[[], float] = time.monotonic):
+                 timer: Callable[[], float] = time.monotonic,
+                 decision_hook: Optional[Callable] = None):
         self._sub = substrate
+        # ``decision_hook(pod, node)`` observes every SERVED decision (bound
+        # or dropped; shed requests are never scored, so they produce no
+        # transition) — the online-learning recorder attaches here
+        self.decision_hook = decision_hook
         self._params = params
         self.config = config
         self._clock = clock
@@ -715,7 +738,7 @@ class PlacementDaemon:
                 lat = max(now - old.t_submit, 0.0)
                 self.decisions.append(Decision(old.req_id, NO_PLACEMENT, lat,
                                                old.attempts, shed=True))
-                self.metrics.latencies_s.append(lat)
+                self.metrics.shed_wait_s.append(lat)
                 self.metrics.shed += 1
         req = _Request(self._next_id, pod, now)
         self._next_id += 1
@@ -900,12 +923,17 @@ class PlacementDaemon:
     def _decide(self, req: _Request, node: int) -> None:
         lat = max(self._clock() - req.t_submit, 0.0)
         self.decisions.append(Decision(req.req_id, node, lat, req.attempts))
-        self.metrics.latencies_s.append(lat)
+        self.metrics.bind_latencies_s.append(lat)
         if node == NO_PLACEMENT:
             self.metrics.dropped += 1
         else:
             self.metrics.bound += 1
             self._bound[req.req_id] = (node, req.pod)
+        if self.decision_hook is not None:
+            # O(1) host-side append inside the hook (sched.online's
+            # TransitionRecorder): no device work on the serving hot path,
+            # so enabling online learning adds zero scoring launches
+            self.decision_hook(req.pod, node)
 
     def _commit(self, req: _Request, row: np.ndarray, ok: np.ndarray,
                 now: float) -> int:

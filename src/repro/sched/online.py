@@ -1,0 +1,388 @@
+"""Online learning in the serving path: realized transitions -> replay ring
+-> background policy refresh with double-buffered params.
+
+The serving daemon (``sched.daemon.PlacementDaemon``) runs a frozen policy;
+this module closes the loop so the deployed policy adapts to the traffic it
+actually serves:
+
+  * **TransitionRecorder** observes every SERVED decision through the
+    daemon's ``decision_hook`` — an O(1) host-side deque append, zero device
+    work on the serving hot path, so attaching a recorder adds **zero
+    scoring launches** and leaves decision latency untouched.  ``drain()``
+    converts the recorded ``(pod, action)`` stream into replay rows with the
+    EXACT offline arithmetic: a jnp shadow state advanced by ``env.place``
+    through ``core.train_rl.realized_transition`` (afterstate features,
+    realized Table-3/5 reward from the state delta, ``REWARD_SCALE``
+    targets, weight-0 drops), written into the fused PR-5 ring via one
+    jitted fixed-chunk scan per drain (``replay_add(..., n_valid=...)``).
+    The stream a recorder produces is bit-identical to feeding the same
+    ``(pod, action)`` trace through the offline transition body — pinned in
+    tests/test_online.py.
+
+  * **OnlineRefresher** runs ``policy.make_train_step`` batches off that
+    ring against a **back** parameter buffer while the daemon keeps scoring
+    from its **front** buffer.  Params are immutable jax pytrees, so the
+    double-buffer is two *references*: the refresher's gradient step builds
+    a new back pytree off-path, then publishes it with one atomic reference
+    assignment (``daemon.set_params``).  The daemon reads its front pointer
+    ONCE per batch (at batch cut), so a batch's scores never mix old and new
+    params — stale reads are allowed (a batch cut just before a publish
+    scores on the previous params), serving never blocks on a gradient
+    step.  Targets are the realized rewards (bandit semantics, the literal
+    Table-4 update): the online stream has no epsilon exploration, so
+    bootstrapped max-Q targets would feed back the net's own optimism on
+    exactly the states it already prefers.
+
+Staleness model: scoring params lag the learner by at most one published
+step plus whatever is in-flight; transitions lag the live cluster by the
+un-drained tail of the deque.  External churn the decision stream does not
+carry (``fail_node`` evictions, manual ``unbind``) desyncs the shadow state
+— call ``resync(substrate.live)`` after such events (`serve.py --online`
+does; a pure submit/bind/drop trace needs none).
+
+    rec = TransitionRecorder(state, cfg)
+    daemon = PlacementDaemon(sub, params, decision_hook=rec.record)
+    ref = OnlineRefresher(daemon, rec)
+    ... replay_trace(daemon, t_s, pods) ...   # serving thread
+    ref.step()                                # or ref.start()/stop()
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import env as kenv, policy as policy_mod, rewards, train_rl
+from repro.core.replay import Replay, replay_add, replay_init, replay_sample
+from repro.core.types import FEATURE_DIM, EnvConfig, PodSpec
+from repro.sched import placement as _pl
+
+__all__ = [
+    "FleetTransitionRecorder", "OnlineRefresher", "TransitionRecorder",
+]
+
+# transitions converted per jitted drain call: one executable serves every
+# fill level (the last chunk pads with no-op rows masked out of the ring)
+DRAIN_CHUNK = 64
+
+
+def _pack_pods(pods: Sequence[PodSpec], size: int) -> PodSpec:
+    """Stack + pad a pod list to the static (size,) drain-chunk shape."""
+    pods = list(pods) + [pods[-1]] * (size - len(pods))
+
+    def col(get):
+        return jnp.asarray([float(get(p)) for p in pods], jnp.float32)
+
+    return PodSpec(cpu_request=col(lambda p: p.cpu_request),
+                   cpu_demand=col(lambda p: p.cpu_demand),
+                   mem_request=col(lambda p: p.mem_request),
+                   mem_demand=col(lambda p: p.mem_demand))
+
+
+class TransitionRecorder:
+    """Daemon decisions -> fused replay ring, with the offline arithmetic.
+
+    ``state``/``cfg`` are the substrate's initial ``ClusterState``/
+    ``EnvConfig``; the recorder keeps its own jnp *shadow* of the cluster,
+    advanced by ``env.place`` with the realized actions at drain time, so
+    rewards and stored afterstates are computed by exactly the code the
+    offline trainer scans (``train_rl.realized_transition``).  ``record`` is
+    the hot-path half (attach it as the daemon's ``decision_hook``): one
+    deque append, no device work.
+    """
+
+    def __init__(self, state, cfg: EnvConfig, capacity: int = 4096,
+                 reward_fn: Optional[Callable] = None,
+                 chunk: int = DRAIN_CHUNK):
+        self.cfg = cfg
+        self.buffer: Replay = replay_init(capacity, n_features=FEATURE_DIM,
+                                          lane=1)
+        self._shadow = jax.tree.map(jnp.asarray, state)
+        self._pending: collections.deque = collections.deque()
+        self._chunk = chunk
+        self.recorded = 0
+        self.drained = 0
+        reward_fn = reward_fn if reward_fn is not None \
+            else rewards.make_reward_fn()
+
+        @jax.jit
+        def drain_chunk(shadow, buf, pods, actions, n_valid):
+            def step(st, xs):
+                pod, action = xs
+                st2, stored, r = train_rl.realized_transition(
+                    st, pod, action, cfg, reward_fn)
+                # drops store with weight 0, exactly like the trainer: their
+                # afterstate is fabricated (clamped gather) and must not
+                # train the net
+                return st2, (stored, r, (action >= 0).astype(jnp.float32))
+
+            shadow2, (feats, targets, weights) = jax.lax.scan(
+                step, shadow, (pods, actions))
+            return shadow2, replay_add(buf, feats, targets, weights,
+                                       n_valid=n_valid)
+
+        self._drain_chunk = drain_chunk
+
+    def record(self, pod, action: int) -> None:
+        """The daemon's ``decision_hook``: O(1), no device work."""
+        self._pending.append((pod, int(action)))
+        self.recorded += 1
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def warmup(self) -> None:
+        """Compile the drain executable before traffic arrives.
+
+        Pushes one all-pad chunk through the jitted drain: every action is
+        NO_NODE (``place`` is a one-hot no-op) and ``n_valid=0`` writes
+        nothing to the ring and advances no pointer, so the shadow and
+        buffer are bit-identical afterwards — only the compile cache warms.
+        """
+        zero = PodSpec(cpu_request=0.0, cpu_demand=0.0,
+                       mem_request=0.0, mem_demand=0.0)
+        pods = _pack_pods([zero], self._chunk)
+        actions = jnp.full((self._chunk,), -1, jnp.int32)
+        self._shadow, self.buffer = self._drain_chunk(
+            self._shadow, self.buffer, pods, actions, 0)
+
+    def drain(self, max_chunks: Optional[int] = None) -> int:
+        """Convert recorded decisions into ring rows (jitted chunks).
+        Returns the number of transitions written.
+
+        ``max_chunks`` bounds the device work of one call (a background
+        refresh cycle must have bounded stall potential on a shared
+        device); the remainder stays pending for the next cycle."""
+        n_total = 0
+        n_chunks = 0
+        while self._pending and (max_chunks is None or n_chunks < max_chunks):
+            n_chunks += 1
+            take = [self._pending.popleft()
+                    for _ in range(min(len(self._pending), self._chunk))]
+            pods = _pack_pods([p for p, _ in take], self._chunk)
+            # pad actions are NO_NODE: `place` is a one-hot no-op, so the
+            # shadow only advances through the real prefix; n_valid keeps
+            # the pad rows out of the ring entirely
+            actions = jnp.asarray(
+                [a for _, a in take] + [-1] * (self._chunk - len(take)),
+                jnp.int32)
+            self._shadow, self.buffer = self._drain_chunk(
+                self._shadow, self.buffer, pods, actions, len(take))
+            n_total += len(take)
+        self.drained += n_total
+        return n_total
+
+    def resync(self, live) -> None:
+        """Rebase the shadow on the daemon's live buffer after external
+        churn the decision stream does not carry (``fail_node`` evictions,
+        manual ``unbind``).  Drains first, so already-recorded decisions are
+        charged against the pre-churn state they were served under."""
+        self.drain()
+        self._shadow = jax.tree.map(jnp.asarray, live)
+
+
+class FleetTransitionRecorder:
+    """The job->host analogue of ``TransitionRecorder`` (FleetSubstrate).
+
+    The shadow is a ``FleetState``; a bind adds the job's six-column
+    afterstate delta (``placement.job_delta``) to the chosen host, and the
+    reward is the literal Table-3 ``rewards.sdqn_reward`` over the raw
+    fleet feature rows (feature 5 = running jobs plays the pod-distribution
+    role, exactly as ``sched.api.score`` treats it when scoring a fleet).
+    """
+
+    def __init__(self, fleet: _pl.FleetState, capacity: int = 4096,
+                 efficiency_weight: float = 5.0, chunk: int = DRAIN_CHUNK):
+        self.buffer: Replay = replay_init(capacity, n_features=FEATURE_DIM,
+                                          lane=1)
+        self._shadow = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                                    fleet)
+        self._pending: collections.deque = collections.deque()
+        self._chunk = chunk
+        self.recorded = 0
+        self.drained = 0
+
+        @jax.jit
+        def drain_chunk(shadow, buf, deltas, actions, n_valid):
+            def step(fl, xs):
+                delta, action = xs
+                onehot = (jnp.arange(fl.cpu_pct.shape[0]) == action
+                          ).astype(jnp.float32)   # action < 0 -> all-zero
+                fl2 = fl._replace(
+                    cpu_pct=fl.cpu_pct + onehot * delta[0],
+                    mem_pct=fl.mem_pct + onehot * delta[1],
+                    job_util_pct=fl.job_util_pct + onehot * delta[2],
+                    num_jobs=fl.num_jobs + onehot * delta[5],
+                )
+                before, after = fl.features(), fl2.features()
+                a = jnp.maximum(action, 0)
+                r = rewards.sdqn_reward(after, a,
+                                        efficiency_weight=efficiency_weight,
+                                        before_feats=before)
+                stored = kenv.normalize_features(after[a])
+                w = (action >= 0).astype(jnp.float32)
+                return fl2, (stored, r * train_rl.REWARD_SCALE, w)
+
+            shadow2, (feats, targets, weights) = jax.lax.scan(
+                step, shadow, (deltas, actions))
+            return shadow2, replay_add(buf, feats, targets, weights,
+                                       n_valid=n_valid)
+
+        self._drain_chunk = drain_chunk
+
+    def record(self, job, action: int) -> None:
+        self._pending.append((job, int(action)))
+        self.recorded += 1
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def warmup(self) -> None:
+        """Compile the drain executable (all-pad no-op chunk; see
+        ``TransitionRecorder.warmup``)."""
+        deltas = jnp.zeros((self._chunk, 6))
+        actions = jnp.full((self._chunk,), -1, jnp.int32)
+        self._shadow, self.buffer = self._drain_chunk(
+            self._shadow, self.buffer, deltas, actions, 0)
+
+    def drain(self, max_chunks: Optional[int] = None) -> int:
+        n_total = 0
+        n_chunks = 0
+        while self._pending and (max_chunks is None or n_chunks < max_chunks):
+            n_chunks += 1
+            take = [self._pending.popleft()
+                    for _ in range(min(len(self._pending), self._chunk))]
+            deltas = jnp.stack(
+                [_pl.job_delta(j) for j, _ in take]
+                + [jnp.zeros((6,))] * (self._chunk - len(take)))
+            actions = jnp.asarray(
+                [a for _, a in take] + [-1] * (self._chunk - len(take)),
+                jnp.int32)
+            self._shadow, self.buffer = self._drain_chunk(
+                self._shadow, self.buffer, deltas, actions, len(take))
+            n_total += len(take)
+        self.drained += n_total
+        return n_total
+
+    def resync(self, live) -> None:
+        self.drain()
+        self._shadow = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                                    live)
+
+
+class OnlineRefresher:
+    """Background policy refresh off a recorder's ring, double-buffered.
+
+    ``step()`` is one refresh cycle — drain the recorder, sample a batch,
+    run ``policy.make_train_step`` on the BACK params, publish the result to
+    the daemon's front pointer (``set_params``; one atomic reference
+    assignment at a batch-cut boundary — the daemon reads params once per
+    batch, so mid-batch scores never mix buffers).  Call it inline for
+    deterministic tests/benches, or ``start()`` a daemon thread that cycles
+    with ``min_interval_s`` throttling (CPython reference assignment is
+    atomic under the GIL; ``deque`` append/popleft are thread-safe, so the
+    serving thread never takes a lock either).
+
+    Adam moments warm-start from the served params (``policy.make_opt_state``)
+    and persist across cycles — this is fine-tuning the deployed policy, not
+    retraining it.
+    """
+
+    def __init__(self, daemon, recorder, spec=None, batch_size: int = 128,
+                 min_interval_s: float = 0.0, seed: int = 0,
+                 drain_chunks_per_step: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.daemon = daemon
+        self.recorder = recorder
+        spec = spec if spec is not None else policy_mod.get("mlp")
+        self._step_fn = policy_mod.make_train_step(spec)
+        self._back = daemon._params          # back buffer starts == front
+        self._opt = policy_mod.make_opt_state(self._back)
+        self._key = jax.random.PRNGKey(seed)
+        self.batch_size = batch_size
+        self.min_interval_s = min_interval_s
+        # on a shared device, refresher launches queue ahead of scoring
+        # launches — bounding the per-cycle drain bounds how long one cycle
+        # can stall a serving batch (the tail stays pending for next cycle)
+        self.drain_chunks_per_step = drain_chunks_per_step
+        self._clock = clock
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.steps = 0
+        self.swaps = 0
+        self.last_loss: Optional[float] = None
+
+    @property
+    def params(self) -> dict:
+        """The back buffer (the freshest learned params)."""
+        return self._back
+
+    def warmup(self) -> None:
+        """Compile the drain AND train executables off the serving clock.
+
+        The recorder warms with an all-pad no-op chunk; the sample + train
+        path runs on the (possibly empty) ring with a throwaway key —
+        ``replay_sample`` clamps an empty ring to index 0 with zero weights
+        — and its outputs are DISCARDED: nothing is published, the back
+        buffer, opt state and RNG stream are untouched.  Call before
+        ``start()`` so the first real cycle costs a warm step (~tens of
+        ms), not a trace-blocking compile."""
+        self.recorder.warmup()
+        k = jax.random.split(jax.random.PRNGKey(0))[0]
+        feats, targets, w = replay_sample(self.recorder.buffer, k,
+                                          self.batch_size)
+        self._step_fn(self._back, self._opt, feats, targets, w)
+
+    def step(self) -> Optional[float]:
+        """One drain/train/publish cycle; returns the batch loss, or None
+        when the ring is still empty (nothing to learn from yet)."""
+        self.recorder.drain(max_chunks=self.drain_chunks_per_step)
+        buf = self.recorder.buffer
+        if int(buf.size) == 0:
+            return None
+        self._key, k = jax.random.split(self._key)
+        feats, targets, w = replay_sample(buf, k, self.batch_size)
+        # the gradient step runs entirely against the back buffer; the
+        # serving path keeps scoring from whatever front pointer it last
+        # read — no lock, no stall
+        self._back, self._opt, loss, _ = self._step_fn(
+            self._back, self._opt, feats, targets, w)
+        self.daemon.set_params(self._back)   # the atomic pointer flip
+        self.steps += 1
+        self.swaps += 1
+        self.last_loss = float(loss)
+        return self.last_loss
+
+    def start(self) -> None:
+        """Spawn the background refresh thread (idempotent)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                t0 = self._clock()
+                self.step()
+                lag = self.min_interval_s - (self._clock() - t0)
+                if lag > 0:
+                    self._stop.wait(lag)
+                else:
+                    time.sleep(0)            # yield to the serving thread
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="online-refresher")
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop and join the refresh thread (no-op when not running)."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None

@@ -1,0 +1,129 @@
+"""TOPSIS multi-objective placement scorer — the GreenPod-shaped non-RL
+baseline for the green Pareto frontier.
+
+GreenPod (PAPERS.md, arXiv 2506.04902) ranks candidate nodes by the classic
+TOPSIS procedure over a normalized criteria matrix; this module is that
+scorer over the repo's substrates.  Each candidate node's row is its
+*afterstate* under the arriving workload, reduced to four cost criteria:
+
+  * ``cpu``      — the node's CPU% after placement (the paper's objective:
+                   minimize average CPU; GreenPod's utilization column)
+  * ``mem``      — memory% after placement
+  * ``energy``   — wake indicator: 1 when the node currently runs none of
+                   the experiment's pods, so placing there activates an
+                   idle node (the node-count quantity
+                   ``rewards.energy_term`` / ``EpisodeStats.energy_wh``
+                   integrate; GreenPod's power-draw column)
+  * ``balance``  — |cpu% - mem%| after placement: resource imbalance, the
+                   closed-form overload/drop-risk proxy (GreenPod's
+                   drop-rate column)
+
+The procedure is the textbook one: vector (L2) column normalization,
+weighting, ideal/anti-ideal reference points (all criteria are costs, so
+the ideal is the column-wise minimum), Euclidean distances, and the
+closeness coefficient ``d- / (d+ + d-)`` — higher is better, so the scores
+drop into ``masked_argmax``/``api.select`` exactly like Q-scores.
+
+Deliberately NOT a ``core.policy`` registry entry: the registry contract is
+trainable parametric policies (init/qvalues/train_step); TOPSIS has no
+params and no learner.  It plugs in as a *selector* (``make_topsis_selector``
+for episodes, ``topsis_scores`` wherever a score vector is wanted) and as
+the ``topsis`` arm of the lifecycle/Pareto benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import env as kenv, schedulers
+from repro.core.types import ClusterState, EnvConfig, PodSpec
+from repro.sched import placement as _pl
+from repro.sched.placement import FleetState, JobSpec
+
+__all__ = ["DEFAULT_WEIGHTS", "closeness", "make_topsis_selector",
+           "topsis_scores"]
+
+# (cpu, mem, energy, balance) criterion weights.  CPU leads (it is the
+# paper's stated objective), the wake indicator carries the green story,
+# memory and imbalance temper pathological packings.  Renormalized inside
+# `closeness`, so callers may pass any positive mix — the Pareto sweep
+# scales the energy entry.
+DEFAULT_WEIGHTS = (0.40, 0.20, 0.30, 0.10)
+
+_EPS = 1e-9
+
+
+def closeness(criteria: jnp.ndarray,
+              weights: Sequence[float] = DEFAULT_WEIGHTS) -> jnp.ndarray:
+    """TOPSIS closeness coefficients of an all-cost criteria matrix.
+
+    ``criteria``: (N, C) raw cost columns (lower = better).  Returns (N,)
+    in [0, 1], higher = better.  Degenerate columns (all candidates equal)
+    contribute zero distance either way and drop out, as they should.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), _EPS)
+    # vector normalization: each column scaled by its L2 norm
+    norm = criteria / (jnp.linalg.norm(criteria, axis=0, keepdims=True) + _EPS)
+    v = norm * w
+    ideal = jnp.min(v, axis=0)       # all-cost: best is the minimum
+    anti = jnp.max(v, axis=0)
+    d_pos = jnp.linalg.norm(v - ideal, axis=1)
+    d_neg = jnp.linalg.norm(v - anti, axis=1)
+    return d_neg / (d_pos + d_neg + _EPS)
+
+
+def _cluster_criteria(state: ClusterState, pod: PodSpec,
+                      cfg: EnvConfig) -> jnp.ndarray:
+    """(N, 4) cost criteria of every candidate afterstate (ClusterState)."""
+    n = state.cpu_capacity.shape[0]
+    # each candidate's own afterstate row — the same single-row arithmetic
+    # the replay stores, vmapped over candidates (N rows, never (N, N, 6))
+    rows = jax.vmap(
+        lambda a: kenv.hypothetical_place_one(state, pod, cfg, a)
+    )(jnp.arange(n))
+    cpu, mem = rows[:, 0], rows[:, 1]
+    wake = (state.exp_pods == 0).astype(jnp.float32)
+    return jnp.stack([cpu, mem, wake, jnp.abs(cpu - mem)], axis=1)
+
+
+def _fleet_criteria(fleet: FleetState, job: JobSpec) -> jnp.ndarray:
+    """(N, 4) cost criteria of every candidate afterstate (FleetState)."""
+    delta = _pl.job_delta(job)
+    cpu = fleet.cpu_pct + delta[0]
+    mem = fleet.mem_pct + delta[1]
+    wake = (fleet.num_jobs == 0).astype(jnp.float32)
+    return jnp.stack([cpu, mem, wake, jnp.abs(cpu - mem)], axis=1)
+
+
+def topsis_scores(fleet: Union[ClusterState, FleetState],
+                  pod: Union[PodSpec, JobSpec], *,
+                  cfg: Optional[EnvConfig] = None,
+                  weights: Sequence[float] = DEFAULT_WEIGHTS) -> jnp.ndarray:
+    """(N,) TOPSIS closeness of placing ``pod`` on each target (higher =
+    better).  Mirrors ``sched.api.heuristic_score``'s substrate dispatch;
+    feasibility masking stays with the caller, as for every scorer."""
+    if isinstance(fleet, ClusterState):
+        if cfg is None:
+            raise ValueError("cfg (EnvConfig) is required to score a "
+                             "ClusterState fleet")
+        return closeness(_cluster_criteria(fleet, pod, cfg), weights)
+    if isinstance(fleet, FleetState):
+        return closeness(_fleet_criteria(fleet, pod), weights)
+    raise TypeError(f"unsupported fleet type: {type(fleet).__name__}")
+
+
+def make_topsis_selector(cfg: EnvConfig,
+                         weights: Sequence[float] = DEFAULT_WEIGHTS
+                         ) -> Callable:
+    """Episode selector ``(key, state, pod) -> node`` — drop-in for
+    ``env.run_episode``/``eval_engine``, like ``make_kube_selector``."""
+
+    def select(key, state, pod):
+        ok = kenv.feasible(state, pod, cfg)
+        q = topsis_scores(state, pod, cfg=cfg, weights=weights)
+        return schedulers.masked_argmax(key, q, ok)
+
+    return select
